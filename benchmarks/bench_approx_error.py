@@ -1,0 +1,65 @@
+"""Approximation-error table for every integer nonlinear unit (supports
+the paper's §III claims; one row per unit, max & RMS error vs float)."""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import activations as act
+from repro.core import intmath, norms
+from repro.core import softmax as ism
+
+
+def _err(got, ref):
+    d = np.abs(got - ref)
+    return float(d.max()), float(np.sqrt((d ** 2).mean()))
+
+
+def run():
+    rows = []
+    s = 2.0 ** -14
+    plan = intmath.make_iexp(s)
+    x = np.linspace(-20, 0, 20000)
+    q = np.round(x / s).astype(np.int32)
+    mx, rms = _err(np.asarray(intmath.i_exp(jnp.asarray(q), plan))
+                   * plan.s_out, np.exp(q * s))
+    rows.append(("approx_iexp_maxerr", round(mx, 6), f"rms={rms:.2e}"))
+
+    s = 16 / 1024
+    gp = intmath.make_igelu(s, 1024)
+    x = np.linspace(-8, 8, 8001)
+    q = np.round(x / s).astype(np.int32)
+    erf = np.vectorize(math.erf)
+    mx, rms = _err(np.asarray(intmath.i_gelu(jnp.asarray(q), gp))
+                   * gp.s_out, 0.5 * (q * s) * (1 + erf(q * s / 2**0.5)))
+    rows.append(("approx_igelu_maxerr", round(mx, 5), f"rms={rms:.2e}"))
+
+    sp = ism.make_isoftmax(s_score=0.01, qmax_score=2**21)
+    rng = np.random.default_rng(0)
+    logits = rng.normal(0, 3, (64, 128)) / 0.01
+    qq = jnp.asarray(np.round(logits).astype(np.int32))
+    p = np.asarray(ism.i_softmax(qq, sp)) * ism.S_PROB
+    xs = logits * 0.01
+    ref = np.exp(xs - xs.max(-1, keepdims=True))
+    ref /= ref.sum(-1, keepdims=True)
+    mx, rms = _err(p, ref)
+    rows.append(("approx_isoftmax_maxerr", round(mx, 5), f"rms={rms:.2e}"))
+
+    slp = act.make_isilu(16 / 1024, 1024, s_out=8 / 127)
+    x = np.linspace(-8, 8, 4001)
+    q = np.round(x / (16 / 1024)).astype(np.int32)
+    mx, rms = _err(np.asarray(act.i_silu(jnp.asarray(q), slp)) * (8 / 127),
+                   x / (1 + np.exp(-x)))
+    rows.append(("approx_isilu_maxerr", round(mx, 5), f"rms={rms:.2e}"))
+
+    n = rng.integers(0, 2**31 - 1, 100000).astype(np.int32)
+    got = np.asarray(intmath.i_sqrt(jnp.asarray(n)))
+    want = np.array([math.isqrt(int(v)) for v in n])
+    rows.append(("approx_isqrt_exact",
+                 int(np.array_equal(got, want)), "1=bit-exact"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,66 @@
+"""Kernel microbenchmarks: ref (jnp) path timing + Pallas interpret-mode
+validation cost, per kernel.  On real TPU the same harness times the
+compiled kernels; on CPU it documents the oracle path and asserts
+ref/pallas agreement as a by-product."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import attention as iattn
+from repro.core import intmath, norms
+from repro.core import softmax as ism
+from repro.core.dyadic import fit_dyadic
+from repro.kernels import ops
+
+
+def _t(f, *args, iters=5):
+    f(*args)
+    jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+
+    m, k, n = 512, 2048, 512
+    x = jnp.asarray(rng.integers(-127, 128, (m, k)), jnp.int8)
+    w = jnp.asarray(rng.integers(-127, 128, (k, n)), jnp.int8)
+    dn = fit_dyadic(1 / 4000.0, k * 127 * 127)
+    f = jax.jit(lambda a, b: ops.int8_matmul(a, b, None, dn=dn))
+    us = _t(f, x, w)
+    flops = 2 * m * k * n
+    rows.append(("kernel_int8_matmul_us", round(us, 1),
+                 f"{flops / us / 1e3:.1f} GOP/s (ref path, CPU)"))
+
+    sp = ism.make_isoftmax(3.5e-4, 128 * 127 * 127)
+    sc = jnp.asarray(rng.integers(-60000, 60000, (256, 1024)), jnp.int32)
+    f = jax.jit(lambda s: ops.int_softmax(s, sp))
+    rows.append(("kernel_int_softmax_us", round(_t(f, sc), 1),
+                 "256x1024 rows"))
+
+    d = 4096
+    pl = norms.make_inorm(d, 2**-9, 1 << 13, 2 / 127, 8 / 127)
+    g = jnp.ones((d,), jnp.int32) * 64
+    q = jnp.asarray(rng.integers(-8192, 8192, (64, d)), jnp.int32)
+    f = jax.jit(lambda a: ops.int_layernorm(a, g, None, pl))
+    rows.append(("kernel_int_layernorm_us", round(_t(f, q), 1), "64x4096"))
+
+    b, s, h, hd = 1, 1024, 8, 128
+    ap = iattn.make_iattention(hd, 8/127, 8/127, 4/127, 4/127)
+    q8 = jnp.asarray(rng.integers(-127, 128, (b, s, h, hd)), jnp.int8)
+    k8 = jnp.asarray(rng.integers(-127, 128, (b, s, h, hd)), jnp.int8)
+    f = jax.jit(lambda a, kk: ops.int_attention(a, kk, kk, ap))
+    rows.append(("kernel_int_attention_us", round(_t(f, q8, k8), 1),
+                 "1x1024x8x128 causal (ref path)"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

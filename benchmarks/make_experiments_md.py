@@ -1,0 +1,90 @@
+"""Regenerate the data-driven sections of EXPERIMENTS.md from
+experiments/dryrun/*.json (run after every sweep / hillclimb iteration)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.report import cell_row, full_table, render_markdown
+from repro.configs.registry import ASSIGNED
+from repro.models.common import SHAPES
+
+DIR = "experiments/dryrun"
+
+
+def dryrun_section() -> str:
+    rows = ["| arch | shape | mesh | peak GiB/dev | flops/dev (HLO) | "
+            "coll GiB/dev | compile s |",
+            "|---|---|---|---|---|---|---|"]
+    for arch in ASSIGNED:
+        for shape in SHAPES:
+            for mesh in ("16x16", "2x16x16"):
+                p = os.path.join(DIR, f"{arch}_{shape}_{mesh}.json")
+                if not os.path.exists(p):
+                    rows.append(f"| {arch} | {shape} | {mesh} | MISSING | "
+                                "| | |")
+                    continue
+                r = json.load(open(p))
+                if "skipped" in r:
+                    rows.append(f"| {arch} | {shape} | {mesh} | — | — | — "
+                                f"| SKIP ({r['skipped'][:46]}) |")
+                    continue
+                if "error" in r:
+                    rows.append(f"| {arch} | {shape} | {mesh} | FAIL | | "
+                                f"| {r['error'][:60]} |")
+                    continue
+                rows.append(
+                    f"| {arch} | {shape} | {mesh} | "
+                    f"{r['memory']['peak_gib']:.2f} | "
+                    f"{r['cost']['flops']:.2e} | "
+                    f"{r['collective_bytes_dev'] / 2**30:.2f} | "
+                    f"{r.get('compile_s', 0)} |")
+    return "\n".join(rows)
+
+
+def summary_counts():
+    ok = fail = skip = 0
+    over = []
+    for f in glob.glob(os.path.join(DIR, "*.json")):
+        r = json.load(open(f))
+        if "skipped" in r:
+            skip += 1
+        elif "error" in r:
+            fail += 1
+        else:
+            ok += 1
+            if r["memory"]["peak_gib"] > 16.0:
+                over.append((r["arch"], r["shape"], r["mesh"],
+                             r["memory"]["peak_gib"]))
+    return ok, fail, skip, sorted(over, key=lambda t: -t[3])
+
+
+def write_tables():
+    os.makedirs("experiments", exist_ok=True)
+    ok, fail, skip, over = summary_counts()
+    with open("experiments/roofline_table.md", "w") as f:
+        f.write("# Roofline table (single-pod 16x16, per device)\n\n")
+        f.write(f"cells: {ok} ok / {fail} fail / {skip} skip "
+                f"(both meshes)\n\n")
+        f.write(render_markdown(full_table()))
+        f.write("\n\n# Dry-run records (both meshes)\n\n")
+        f.write(dryrun_section())
+        f.write("\n\nover 16 GiB/chip:\n")
+        for a, s, m, g in over:
+            f.write(f"* {a} {s} {m}: {g:.1f} GiB\n")
+    print("wrote experiments/roofline_table.md")
+
+
+if __name__ == "__main__":
+    if "--write" in sys.argv:
+        write_tables()
+        sys.exit(0)
+    ok, fail, skip, over = summary_counts()
+    print(f"cells: {ok} ok / {fail} fail / {skip} skip")
+    print("over 16 GiB:", *[f"\n  {a} {s} {m}: {g:.1f}" for a, s, m, g
+                            in over])

@@ -1,0 +1,184 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all per-chip seconds:
+  compute    = FLOPs / 197e12        (v5e bf16 peak; int8 MXU is 2x — we
+                                      report the conservative bf16 number)
+  memory     = HBM bytes / 819e9
+  collective = wire bytes / 50e9     (per-link ICI)
+
+``cost_analysis`` counts a ``lax.scan`` body once (verified empirically),
+so flops/bytes are corrected by compiling 1-group and 2-group variants of
+the same cell and extrapolating linearly; collective bytes are parsed from
+the optimized HLO with while-loop trip counts multiplied through.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+PEAK_FLOPS_INT8 = 394e12
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 0.5, "u4": 0.5, "pred": 1, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+# header: "%name (args) -> type {"  — args may contain nested tuple parens
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\)[^\n]*?condition=%?([\w\.\-]+)[^\n]*?body=%?([\w\.\-]+)")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|[a-z0-9]+\[[\d,]*\][^ ]*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_RE2 = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    bytes_result: float
+    group_size: int
+    computation: str
+    multiplier: float = 1.0
+
+    def wire_bytes(self) -> float:
+        g = max(self.group_size, 1)
+        frac = (g - 1) / g
+        if self.kind == "all-reduce":
+            return 2 * self.bytes_result * frac
+        if self.kind == "collective-permute":
+            return self.bytes_result
+        return self.bytes_result * frac
+
+
+def parse_hlo_collectives(text: str) -> Tuple[List[CollectiveOp],
+                                              Dict[str, float]]:
+    """Walk optimized HLO; return collectives with while-trip multipliers."""
+    comp = "ENTRY"
+    comp_lines: Dict[str, List[str]] = {}
+    order: List[str] = []
+    for line in text.splitlines():
+        m = _COMP_RE.match(line.strip())
+        if m and line.rstrip().endswith("{"):
+            comp = m.group(1)
+            order.append(comp)
+            comp_lines[comp] = []
+        else:
+            comp_lines.setdefault(comp, []).append(line)
+
+    # while graph: computation -> [(cond, body)]
+    whiles: Dict[str, List[Tuple[str, str]]] = {}
+    for c, lines in comp_lines.items():
+        for line in lines:
+            for cond, body in _WHILE_RE.findall(line):
+                whiles.setdefault(c, []).append((cond, body))
+
+    def trip_count(cond: str) -> float:
+        consts = [int(v) for v in
+                  _CONST_RE.findall("\n".join(comp_lines.get(cond, [])))]
+        return float(max(consts)) if consts else 1.0
+
+    # propagate multipliers from the entry
+    mult: Dict[str, float] = {}
+    entry = order[0] if order else "ENTRY"
+    for c in comp_lines:
+        mult.setdefault(c, 1.0)
+    roots = [c for c in comp_lines if c.startswith(("main", "ENTRY"))
+             or c == entry]
+    mult_final = {c: 1.0 for c in comp_lines}
+    changed = True
+    it = 0
+    while changed and it < 50:
+        changed = False
+        it += 1
+        for c, wl in whiles.items():
+            for cond, body in wl:
+                t = trip_count(cond)
+                want = mult_final.get(c, 1.0) * t
+                if body in mult_final and mult_final[body] != want:
+                    mult_final[body] = want
+                    changed = True
+
+    colls: List[CollectiveOp] = []
+    for c, lines in comp_lines.items():
+        for line in lines:
+            m = _COLL_RE.search(line)
+            if not m:
+                continue
+            type_str, kind = m.group(1), m.group(2)
+            if "-done" in line:
+                continue
+            g = 1
+            gm = _GROUPS_RE.search(line)
+            if gm:
+                g = int(gm.group(2))
+            else:
+                gm2 = _GROUPS_RE2.search(line)
+                if gm2:
+                    g = len([x for x in gm2.group(1).split(",") if x])
+            colls.append(CollectiveOp(kind, _shape_bytes(type_str), g, c,
+                                      mult_final.get(c, 1.0)))
+    return colls, mult_final
+
+
+def collective_wire_bytes(text: str) -> Tuple[float, Dict[str, float]]:
+    colls, _ = parse_hlo_collectives(text)
+    total = 0.0
+    by_kind: Dict[str, float] = {}
+    for op in colls:
+        b = op.wire_bytes() * op.multiplier
+        total += b
+        by_kind[op.kind] = by_kind.get(op.kind, 0.0) + b
+    return total, by_kind
+
+
+def roofline_terms(flops_dev: float, bytes_dev: float, coll_bytes_dev: float,
+                   int8_compute: bool = False) -> Dict[str, float]:
+    peak = PEAK_FLOPS_INT8 if int8_compute else PEAK_FLOPS
+    t_c = flops_dev / peak
+    t_m = bytes_dev / HBM_BW
+    t_x = coll_bytes_dev / ICI_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])
+    total = max(t_c, t_m, t_x)
+    return {
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+        "bottleneck": dom[0],
+        "roofline_fraction_compute": t_c / total if total else 0.0,
+    }
+
+
+def model_flops(cfg, shape, per_device: bool, n_chips: int) -> float:
+    """Analytic MODEL_FLOPS: 6*N*D train, 2*N_active*D prefill,
+    2*N_active per token decode."""
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6 if shape.kind == "train" else 2
+    total = mult * n_active * tokens
+    return total / n_chips if per_device else total

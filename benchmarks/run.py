@@ -1,0 +1,39 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,value,derived`` CSV rows.  Tables:
+  Fig 2    -> bench_operators   (INT8 vs FP32 operator cost)
+  Table I  -> bench_asic_model  (area/power/cycle model of the ASIC)
+  Fig 18   -> bench_asic_model  (block-level area/power breakdown)
+  Table II -> bench_table2      (accuracy: float vs integer path)
+             + bench_asic_model latency rows (cycle model)
+  §III     -> bench_approx_error (per-unit approximation error)
+  kernels  -> bench_kernels     (per-kernel microbench)
+"""
+import sys
+import traceback
+
+
+def main() -> None:
+    import os
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "src"))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks import (bench_approx_error, bench_asic_model,
+                            bench_kernels, bench_operators, bench_table2)
+    print("name,value,derived")
+    ok = True
+    for mod in (bench_operators, bench_asic_model, bench_approx_error,
+                bench_kernels, bench_table2):
+        try:
+            for row in mod.run():
+                print(",".join(str(x) for x in row))
+        except Exception as e:
+            ok = False
+            print(f"{mod.__name__},ERROR,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""End-to-end driver: QAT-train a ~100M-parameter llama-style model on the
+synthetic corpus for a few hundred steps with the full production substrate
+— sharded step (on whatever devices exist), fault-tolerant loop with async
+checkpointing, straggler detection, LR schedule — then convert and report
+integer-path accuracy.
+
+Run:  PYTHONPATH=src python examples/train_qat.py [--steps 200]
+"""
+import argparse
+import sys
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.registry import get_config
+from repro.data.pipeline import SyntheticLMDataset
+from repro.distributed.fault import FaultTolerantLoop, StragglerDetector
+from repro.models import inttransformer as it
+from repro.models import model as M
+from repro.models import transformer as tf
+from repro.optim import adamw_init
+from repro.optim.adamw import AdamWConfig
+from repro.optim.schedule import linear_warmup_cosine
+from repro.launch.steps import make_train_step
+from repro.quant import convert
+import dataclasses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_qat_ckpt")
+    args = ap.parse_args()
+
+    # ~100M params: 8 layers, d=768, vocab 8192
+    cfg = dataclasses.replace(
+        get_config("llama3-8b"), num_layers=8, d_model=768, n_heads=12,
+        n_kv_heads=4, head_dim=64, d_ff=2048, vocab=8192, dtype="float32")
+    print(f"params ~{cfg.param_count() / 1e6:.1f}M")
+    data = SyntheticLMDataset(cfg.vocab, 256, 8, seed=0)
+    params = tf.init_params(jax.random.key(0), cfg)
+
+    opt_cfg = AdamWConfig(lr=1e-3, weight_decay=0.01)
+    opt = adamw_init(params, opt_cfg)
+    lr_fn = linear_warmup_cosine(20, args.steps)
+    train_step = jax.jit(make_train_step(cfg, opt_cfg, lr_fn))
+
+    def step_fn(state, batch):
+        params, opt = state
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt, metrics = train_step(params, opt, batch)
+        return (params, opt), metrics
+
+    loop = FaultTolerantLoop(step_fn, CheckpointManager(args.ckpt_dir),
+                             data, ckpt_every=50,
+                             straggler=StragglerDetector())
+    (params, opt), log = loop.run((params, opt), args.steps)
+    print(f"loss: first={log[0]['loss']:.3f} last={log[-1]['loss']:.3f} "
+          f"(restarts={loop.restarts}, stragglers="
+          f"{loop.straggler.flagged})")
+
+    qp, plans = convert.quantize_params(params, cfg)
+    accs = []
+    for _ in range(4):
+        b = next(data)
+        li = it.int_prefill(qp, {"tokens": jnp.asarray(b["tokens"])},
+                            plans, cfg)
+        accs.append(float((np.argmax(np.asarray(li)[:, :cfg.vocab], -1)
+                           == b["labels"][:, -1]).mean()))
+    print(f"integer-path last-token accuracy: {np.mean(accs):.2%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,141 @@
+"""Checkpointing: pytree -> sharded .npz + msgpack manifest.
+
+Features needed for the fault-tolerance story (DESIGN.md §3):
+  * atomic writes (tmp dir + rename) — a killed save never corrupts the
+    latest checkpoint,
+  * async saves on a background thread (device_get on the main thread,
+    serialisation off-thread) so the train loop isn't blocked,
+  * step-based retention, ``latest_step`` discovery for restarts,
+  * arbitrary auxiliary state (optimizer, data-iterator cursor, RNG).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+Pytree = Any
+_SEP = "|"
+
+
+def _flatten(tree: Pytree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(getattr(e, "key", getattr(e, "idx", e))) for e in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _unflatten_into(template: Pytree, flat: Dict[str, np.ndarray]
+                    ) -> Pytree:
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for path, leaf in leaves:
+        key = _SEP.join(
+            str(getattr(e, "key", getattr(e, "idx", e))) for e in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = flat[key]
+        if hasattr(leaf, "shape") and tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), out)
+
+
+def save_checkpoint(directory: str, step: int, tree: Pytree,
+                    extra: Optional[Dict] = None, keep: int = 3):
+    """Atomic synchronous save."""
+    os.makedirs(directory, exist_ok=True)
+    tmp = os.path.join(directory, f".tmp_step_{step}_{os.getpid()}")
+    final = os.path.join(directory, f"step_{step:012d}")
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump({"step": step, "time": time.time(),
+                   "extra": extra or {}, "n_leaves": len(flat)}, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _retain(directory, keep)
+    return final
+
+
+def _retain(directory: str, keep: int):
+    steps = sorted(d for d in os.listdir(directory)
+                   if d.startswith("step_"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = sorted(d for d in os.listdir(directory)
+                   if d.startswith("step_"))
+    return int(steps[-1].split("_")[1]) if steps else None
+
+
+def load_checkpoint(directory: str, template: Pytree,
+                    step: Optional[int] = None) -> Tuple[Pytree, Dict]:
+    step = latest_step(directory) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    d = os.path.join(directory, f"step_{step:012d}")
+    with np.load(os.path.join(d, "arrays.npz")) as z:
+        flat = {k: z[k] for k in z.files}
+    with open(os.path.join(d, "meta.json")) as f:
+        meta = json.load(f)
+    return _unflatten_into(template, flat), meta
+
+
+class CheckpointManager:
+    """Async checkpointing: device_get on caller thread, file IO off-thread.
+
+    ``save`` returns immediately; ``wait`` blocks until the last save
+    landed (called before exit and before restore-after-failure)."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree: Pytree, extra: Optional[Dict] = None):
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_tree, extra,
+                                self.keep)
+            except BaseException as e:   # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def restore(self, template: Pytree, step: Optional[int] = None):
+        self.wait()
+        return load_checkpoint(self.directory, template, step)
+
+    def latest_step(self) -> Optional[int]:
+        return latest_step(self.directory)

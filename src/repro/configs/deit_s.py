@@ -1,0 +1,10 @@
+"""DeiT-S — the paper's vision model (Table II): 12-layer pre-LN ViT,
+196+1 patch tokens at 224x224 (patch embeddings stubbed)."""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deit-s", family="encoder", num_layers=12, d_model=384,
+    n_heads=6, n_kv_heads=6, d_ff=1536, vocab=1000, head_dim=64,
+    activation="gelu", norm="layernorm", post_norm=False, pos="learned",
+    n_img_tokens=197,
+)

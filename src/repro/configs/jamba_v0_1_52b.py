@@ -1,0 +1,14 @@
+"""jamba-v0.1-52b [hybrid]: Mamba+attention 1:7 interleave, MoE 16 experts
+top-2 every other layer [arXiv:2403.19887].  The Mamba-1 blocks are
+realised with the SSD form (state 16) — DESIGN.md §6 records the
+substitution.  long_500k RUNS: only 4/32 layers carry KV caches."""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="jamba-v0.1-52b", family="hybrid", num_layers=32, d_model=4096,
+    n_heads=32, n_kv_heads=8, d_ff=14336, vocab=65536, head_dim=128,
+    attn_every=8, attn_offset=4, n_experts=16, top_k=2, moe_every=2,
+    moe_offset=1, moe_d_ff=14336, ssm_state=16, ssm_expand=2,
+    ssm_head_dim=64, ssm_conv=4, ssm_groups=1, activation="swiglu",
+    norm="rmsnorm", pos="none",
+)

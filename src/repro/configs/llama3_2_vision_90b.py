@@ -1,0 +1,11 @@
+"""llama-3.2-vision-90b [vlm]: 100 layers = 80 self-attn + 20 cross-attn
+(every 5th) [hf:meta-llama/Llama-3.2-11B-Vision, scaled].  The vision
+tower is a STUB: input_specs() supplies precomputed patch embeddings."""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama-3.2-vision-90b", family="vlm", num_layers=100,
+    d_model=8192, n_heads=64, n_kv_heads=8, d_ff=28672, vocab=128256,
+    head_dim=128, cross_every=5, n_img_tokens=1600, activation="swiglu",
+    norm="rmsnorm", rope_theta=500000.0,
+)

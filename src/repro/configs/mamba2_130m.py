@@ -1,0 +1,12 @@
+"""mamba2-130m [ssm]: SSD (state-space duality) [arXiv:2405.21060].
+Attention-free: the paper's softmax/attention units are N/A (DESIGN.md
+§6); the quantization scheme applies to the projections and the SSD
+recurrence runs int32 fixed-point.  vocab 50280 padded to 50288."""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-130m", family="ssm", num_layers=24, d_model=768,
+    n_heads=0, n_kv_heads=0, d_ff=0, vocab=50280, ssm_state=128,
+    ssm_expand=2, ssm_head_dim=64, ssm_conv=4, ssm_groups=1,
+    tie_embeddings=True, norm="rmsnorm", pos="none",
+)

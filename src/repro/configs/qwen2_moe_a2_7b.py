@@ -1,0 +1,11 @@
+"""qwen2-moe-a2.7b [moe]: 60 routed experts top-4 + 4 shared experts
+[hf:Qwen/Qwen1.5-MoE-A2.7B].  60 experts padded to 64 for 16-way EP; the
+router masks padding experts to -inf (DESIGN.md §6)."""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-moe-a2.7b", family="moe", num_layers=24, d_model=2048,
+    n_heads=16, n_kv_heads=16, d_ff=1408, vocab=151936, head_dim=128,
+    attn_bias=True, n_experts=60, top_k=4, n_shared_experts=4,
+    moe_d_ff=1408, moe_every=1, activation="swiglu", norm="rmsnorm",
+)

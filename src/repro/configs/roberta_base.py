@@ -1,0 +1,9 @@
+"""RoBERTa-base — the paper's own evaluation model (Table II):
+12-layer post-LN encoder, GELU, learned positions, d=768/12H/3072."""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="roberta-base", family="encoder", num_layers=12, d_model=768,
+    n_heads=12, n_kv_heads=12, d_ff=3072, vocab=50265, head_dim=64,
+    activation="gelu", norm="layernorm", post_norm=True, pos="learned",
+)

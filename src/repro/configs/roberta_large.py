@@ -1,0 +1,8 @@
+"""RoBERTa-large — paper Table II row 2: 24-layer post-LN encoder."""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="roberta-large", family="encoder", num_layers=24, d_model=1024,
+    n_heads=16, n_kv_heads=16, d_ff=4096, vocab=50265, head_dim=64,
+    activation="gelu", norm="layernorm", post_norm=True, pos="learned",
+)

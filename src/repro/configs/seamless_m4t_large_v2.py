@@ -1,0 +1,13 @@
+"""seamless-m4t-large-v2 [audio]: enc-dec backbone [arXiv:2308.11596].
+
+The speech frontend is a STUB: input_specs() supplies precomputed frame
+embeddings (B, n_frames, d_model); 24 encoder + 24 decoder layers.
+vocab 256206 padded to 256208."""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="seamless-m4t-large-v2", family="encdec", num_layers=24,
+    d_model=1024, n_heads=16, n_kv_heads=16, d_ff=8192, vocab=256206,
+    head_dim=64, enc_layers=24, dec_layers=24, activation="gelu",
+    norm="layernorm", pos="sinusoidal",
+)

@@ -1,0 +1,19 @@
+"""SwiftTron core: integer-only quantized transformer numerics.
+
+The paper's primary contribution (§III) as a composable JAX library:
+dyadic requantization, i-exp/i-erf/i-sqrt primitives, integer softmax /
+GELU / LayerNorm / RMSNorm / SiLU / softplus, and integer attention.
+"""
+from repro.core import activations, attention, dyadic, intmath, norms, quant
+from repro.core import softmax
+from repro.core.dyadic import (Dyadic, apply_dyadic, clip_to_bits,
+                               fit_dyadic, requantize, rshift_round)
+from repro.core.quant import (dequantize, fake_quant, quantize,
+                              scale_from_absmax)
+
+__all__ = [
+    "activations", "attention", "dyadic", "intmath", "norms", "quant",
+    "softmax", "Dyadic", "apply_dyadic", "clip_to_bits", "fit_dyadic",
+    "requantize", "rshift_round", "dequantize", "fake_quant", "quantize",
+    "scale_from_absmax",
+]

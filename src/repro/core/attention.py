@@ -1,0 +1,163 @@
+"""Integer attention (SwiftTron §III-D/E, Figs. 8-10).
+
+The ASIC streams Q*K^T -> Scale -> Softmax -> Requant -> P*V through
+dedicated blocks.  Here the same integer flow is expressed over MXU-shaped
+einsums:
+
+  * scores  = int8 Q x int8 K -> int32 (MXU, accumulate int32)
+  * scale   = 1/sqrt(head_dim) folded into the softmax input dyadic
+              (the paper folds its /d scale into a shift when d = 2^k —
+              same idea, one constant, §III-E)
+  * softmax = integer-only (core.softmax), emits int8 probs at 2^-7
+  * out     = int8 P x int8 V -> int32, requantized to the output scale
+
+Variants:
+  * ``i_attention_full``     — materialises the score matrix (tests, decode)
+  * ``i_attention_chunked``  — two-pass streaming over KV chunks with
+    integer-exact running max/sum corrections; O(chunk) memory, used for
+    32k prefill.  Probabilities are normalised by the *global* sum before
+    the P*V matmul, so the int32 accumulator is bounded by 127*2^7
+    regardless of sequence length (no overflow even at 512k rows).
+  * ``i_attention_decode``   — one query row against an int8 KV cache.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import softmax as ism
+from repro.core.dyadic import Dyadic, clip_to_bits, fit_dyadic
+from repro.core.softmax import (ISoftmaxPlan, combine_correction,
+                                finalize_probs, i_softmax, i_softmax_stats,
+                                make_isoftmax, rescale_sum)
+
+
+class IAttnPlan(NamedTuple):
+    head_dim: int
+    sm: ISoftmaxPlan
+    dn_out: Dyadic          # (2^-7 * s_v) -> s_out
+    s_q: float
+    s_k: float
+    s_v: float
+    s_out: float
+
+
+def make_iattention(head_dim: int, s_q: float, s_k: float, s_v: float,
+                    s_out: float) -> IAttnPlan:
+    s_score = s_q * s_k / math.sqrt(head_dim)
+    qmax_score = head_dim * 127 * 127
+    sm = make_isoftmax(s_score, qmax_score)
+    # P*V accumulator: sum_t p8 * v8, p8 normalised -> |acc| <= 127 * 2^7
+    dn_out = fit_dyadic(ism.S_PROB * s_v / s_out, 127 * (1 << 7) * 2)
+    return IAttnPlan(head_dim, sm, dn_out, s_q, s_k, s_v, s_out)
+
+
+def _scores(q8, k8):
+    """int8 (B,Sq,H,D) x int8 (B,Sk,H,D) -> int32 (B,H,Sq,Sk)."""
+    return jnp.einsum("bqhd,bkhd->bhqk", q8, k8,
+                      preferred_element_type=jnp.int32)
+
+
+def i_attention_full(q8, k8, v8, plan: IAttnPlan, mask=None,
+                     out_bits: int = 8):
+    """mask: bool (B,H,Sq,Sk) or broadcastable; True = attend."""
+    scores = _scores(q8, k8)
+    p8 = i_softmax(scores, plan.sm, axis=-1, where=mask)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p8, v8,
+                     preferred_element_type=jnp.int32)
+    return clip_to_bits(plan.dn_out(out), out_bits)
+
+
+def causal_mask(sq: int, sk: int, q_offset: int = 0, window: int = 0):
+    """(Sq, Sk) bool; ``window`` > 0 adds sliding-window banding."""
+    qi = jnp.arange(sq)[:, None] + q_offset
+    ki = jnp.arange(sk)[None, :]
+    m = ki <= qi
+    if window > 0:
+        m = m & (ki > qi - window)
+    return m
+
+
+def i_attention_chunked(q8, k8, v8, plan: IAttnPlan, chunk: int,
+                        causal: bool = True, window: int = 0,
+                        out_bits: int = 8):
+    """Two-pass streaming attention over KV chunks (int8 in/out).
+
+    Pass 1 scans KV chunks keeping a running (max, rescaled sum) per row —
+    the rescale is an i-exp multiply on the row *scalars* only.  Pass 2
+    recomputes each chunk's e16 against the global max, normalises by the
+    global sum, and accumulates int8 probs x int8 V on the MXU.
+    """
+    b, sq, h, d = q8.shape
+    sk = k8.shape[1]
+    assert sk % chunk == 0, (sk, chunk)
+    n_chunks = sk // chunk
+    k8c = k8.reshape(b, n_chunks, chunk, h, d).transpose(1, 0, 2, 3, 4)
+    v8c = v8.reshape(b, n_chunks, chunk, h, d).transpose(1, 0, 2, 3, 4)
+    neg_inf = jnp.int32(-(2 ** 30))
+
+    def pass1(carry, xs):
+        m_run, s_run = carry
+        ci, kc = xs
+        scores = _scores(q8, kc)
+        mask = chunk_mask_dyn(ci)
+        e16, m_c, s_c = i_softmax_stats(scores, plan.sm, where=mask)
+        m_new = jnp.maximum(m_run, m_c)
+        s_run = rescale_sum(s_run, combine_correction(m_run, m_new, plan.sm))
+        s_c = rescale_sum(s_c, combine_correction(m_c, m_new, plan.sm))
+        return (m_new, s_run + s_c), None
+
+    def chunk_mask_dyn(ci):
+        if not causal and window <= 0:
+            return None
+        qi = jnp.arange(sq)[:, None]
+        ki = jnp.arange(chunk)[None, :] + ci * chunk
+        m = ki <= qi
+        if window > 0:
+            m = m & (ki > qi - window)
+        return m[None, None]
+
+    m0 = jnp.full((b, h, sq, 1), neg_inf, jnp.int32)
+    s0 = jnp.zeros((b, h, sq, 1), jnp.int32)
+    (g_max, g_sum), _ = jax.lax.scan(
+        pass1, (m0, s0), (jnp.arange(n_chunks), k8c))
+    r = jnp.int32(1 << ism.RECIP_BITS) // jnp.maximum(g_sum, 1)
+
+    def pass2(acc, xs):
+        ci, kc, vc = xs
+        scores = _scores(q8, kc)
+        mask = chunk_mask_dyn(ci)
+        q = scores if mask is None else jnp.where(mask, scores, neg_inf)
+        e16 = ism._exp16(q - g_max, plan.sm)
+        if mask is not None:
+            e16 = jnp.where(mask, e16, 0)
+        p8 = jnp.clip(
+            ism.rshift_round(e16 * r, ism.RECIP_BITS - ism.PROB_SHIFT),
+            0, 127).astype(jnp.int8)
+        acc = acc + jnp.einsum("bhqk,bkhd->bqhd", p8, vc,
+                               preferred_element_type=jnp.int32)
+        return acc, None
+
+    acc0 = jnp.zeros((b, sq, h, d), jnp.int32)
+    acc, _ = jax.lax.scan(pass2, acc0,
+                          (jnp.arange(n_chunks), k8c, v8c))
+    return clip_to_bits(plan.dn_out(acc), out_bits)
+
+
+def i_attention_decode(q8, k8_cache, v8_cache, plan: IAttnPlan,
+                       valid_len, out_bits: int = 8):
+    """One new token per sequence against an int8 KV cache.
+
+    q8: (B, 1, H, D); caches: (B, L, Hkv, D) already head-repeated or
+    grouped by the caller; valid_len: (B,) int32 number of live positions.
+    """
+    scores = _scores(q8, k8_cache)                       # (B,H,1,L)
+    pos = jnp.arange(k8_cache.shape[1])[None, None, None, :]
+    mask = pos < valid_len[:, None, None, None]
+    p8 = i_softmax(scores, plan.sm, axis=-1, where=mask)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p8, v8_cache,
+                     preferred_element_type=jnp.int32)
+    return clip_to_bits(plan.dn_out(out), out_bits)

@@ -1,0 +1,154 @@
+"""Dyadic-number requantization (SwiftTron §III-C, Eq. 2; HAWQ-V3 [28]).
+
+A scale ratio ``r = S_in / S_out`` is frozen at design time into a dyadic
+number ``b / 2**c`` so the integer datapath never sees a float:
+
+    q_out = (q_in * b) >> c
+
+The ASIC multiplies INT32 by INT32 into a wide product register. TPUs (and
+XLA without x64) give us int32*int32 with wrap-around, so we use the
+**two-stage** formulation that is exactly representable in int32:
+
+    q_out = rshift_round(rshift_round(q_in, pre) * b, c - pre)
+
+with ``b`` constrained to ``mult_bits`` (default 15) bits and ``pre`` chosen
+statically from the worst-case input magnitude so the product always fits in
+int32.  ``pre`` discards input LSBs *below* the rounding point of the output;
+with 15-bit multipliers the relative requant error is < 2**-14, far below
+int8 output resolution.  All three constants are design-time Python ints —
+they appear in the lowered graph as scalar constants, mirroring the paper's
+"provided as constant values to the SwiftTron architecture".
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+INT32_MAX = 2**31 - 1
+
+
+def bits_for(v: int) -> int:
+    """Number of bits needed for magnitude ``v`` (ceil(log2(v+1)))."""
+    v = int(v)
+    if v <= 0:
+        return 0
+    return v.bit_length()
+
+
+def rshift_round(x, s: int):
+    """Arithmetic right shift by static ``s`` with round-half-up.
+
+    s == 0 is the identity.  Works on int32 jnp arrays; the rounding addend
+    is a design-time constant.
+    """
+    if s == 0:
+        return x
+    if s < 0:  # static left shift (exact)
+        return x << (-s)
+    half = 1 << (s - 1)
+    return (x + half) >> s
+
+
+def rshift_floor(x, s: int):
+    if s <= 0:
+        return x if s == 0 else x << (-s)
+    return x >> s
+
+
+@dataclasses.dataclass(frozen=True)
+class Dyadic:
+    """Frozen requant constants: value ≈ b / 2**(c) applied after ``pre``."""
+
+    b: int          # multiplier, fits in ``mult_bits`` bits
+    c: int          # total right shift (including ``pre``)
+    pre: int        # input pre-shift so (q >> pre) * b fits int32
+    qmax_in: int    # design-time bound on |q_in| this dyadic was sized for
+
+    @property
+    def value(self) -> float:
+        return self.b / (1 << self.c) if self.c >= 0 else self.b * (1 << -self.c)
+
+    def __call__(self, q):
+        return apply_dyadic(q, self)
+
+
+def fit_dyadic(ratio: float, qmax_in: int, mult_bits: int = 15) -> Dyadic:
+    """Design-time fit of ``ratio`` (> 0) to a dyadic pair.
+
+    ``qmax_in`` is the worst-case |q_in|; we size the pre-shift so the
+    int32 product never overflows and statically verify it.
+    """
+    if not ratio > 0.0 or not math.isfinite(ratio):
+        raise ValueError(f"dyadic ratio must be positive finite, got {ratio}")
+    mb = mult_bits
+    m, e = math.frexp(ratio)          # ratio = m * 2**e, m in [0.5, 1)
+    b = int(round(m * (1 << mb)))
+    c = mb - e
+    if b == (1 << mb):                # rounding spilled over
+        b >>= 1
+        c -= 1
+    while b and b % 2 == 0 and c > 0:  # exact power-of-two folding
+        b >>= 1
+        c -= 1
+
+    def prod_max(pre_):
+        half = 1 << max(0, c - pre_ - 1)
+        return ((qmax_in >> pre_) + 1) * b + half   # +1: pre-shift rounding
+
+    pre = 0
+    while pre < c and prod_max(pre) > INT32_MAX:
+        pre += 1
+    if prod_max(pre) > INT32_MAX:
+        raise ValueError(
+            f"dyadic overflow: ratio={ratio} qmax_in={qmax_in} "
+            f"(b={b}, c={c}, pre={pre})")
+    return Dyadic(b=b, c=c, pre=pre, qmax_in=int(qmax_in))
+
+
+def apply_dyadic(q, dn: Dyadic):
+    """q_out = round(q * b / 2**c), staged in int32.  q: int32 array."""
+    y = rshift_round(q, dn.pre)
+    y = y * jnp.int32(dn.b)
+    return rshift_round(y, dn.c - dn.pre)
+
+
+def apply_dyadic_exact_np(q: np.ndarray, dn: Dyadic) -> np.ndarray:
+    """int64 numpy oracle of the ideal (single-stage) dyadic requant."""
+    q = q.astype(np.int64)
+    half = 1 << (dn.c - 1) if dn.c > 0 else 0
+    return (q * dn.b + half) >> dn.c
+
+
+def requantize(q, ratio: float, qmax_in: int, out_bits: int = 8,
+               mult_bits: int = 15):
+    """One-shot: fit + apply + clip to the signed ``out_bits`` range.
+
+    Returns int32 values clipped to the int``out_bits`` range (cast at the
+    consumer: matmul inputs cast to int8).
+    """
+    dn = fit_dyadic(ratio, qmax_in, mult_bits)
+    lo, hi = -(1 << (out_bits - 1)), (1 << (out_bits - 1)) - 1
+    return jnp.clip(apply_dyadic(q, dn), lo, hi)
+
+
+def clip_to_bits(q, out_bits: int):
+    lo, hi = -(1 << (out_bits - 1)), (1 << (out_bits - 1)) - 1
+    return jnp.clip(q, lo, hi)
+
+
+def apply_dyadic_perchannel(q, b_vec, c: int, pre: int, axis: int = -1):
+    """Per-channel dyadic requant: ``b_vec`` int32 array broadcast on ``axis``.
+
+    The shift ``c``/``pre`` are shared statics (per-tensor), only the
+    multiplier varies per channel — this matches per-channel weight scales
+    folded into the output requant of a matmul.
+    """
+    shape = [1] * q.ndim
+    shape[axis] = -1
+    b = jnp.reshape(b_vec.astype(jnp.int32), shape)
+    y = rshift_round(q, pre)
+    y = y * b
+    return rshift_round(y, c - pre)

@@ -1,0 +1,218 @@
+"""Integer-only math primitives (SwiftTron §III-F/H/I, after I-BERT [7]).
+
+Everything here operates on int32 jnp arrays with *design-time* scaling
+factors (Python floats that never enter the traced graph — only the derived
+integer constants do, mirroring "q_{1..8} computed at design time and
+provided as constant values to the SwiftTron architecture").
+
+Bit budgets are enforced by static asserts: callers declare the worst-case
+|q| of each input and we verify no intermediate can exceed int32.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dyadic import (Dyadic, bits_for, fit_dyadic, rshift_floor,
+                               rshift_round)
+
+INT32_MAX = 2**31 - 1
+
+# I-BERT second-order polynomial coefficients.
+EXP_A, EXP_B, EXP_C = 0.35815147, 1.353, 0.344   # exp(p) ~ a(p+b)^2+c on (-ln2, 0]
+ERF_A, ERF_B, ERF_C = -0.2888, -1.769, 1.0       # erf(p) ~ a(p+b)^2+c on [0, -b]
+LN2 = math.log(2.0)
+
+# ln(1+e) on e in [0, 1]: design-time least-squares fit (i-softplus extension).
+_e = np.linspace(0.0, 1.0, 4097)
+LN1P_COEFS = tuple(np.polyfit(_e, np.log1p(_e), 2).tolist())  # (a2, a1, a0)
+del _e
+
+
+def _static_check(val: int, what: str):
+    if val > INT32_MAX:
+        raise ValueError(f"int32 overflow in {what}: worst case {val} > 2^31-1")
+
+
+def int_bit_length(n):
+    """Vectorised bit length of non-negative int32 ``n`` (integer-only)."""
+    b = jnp.zeros_like(n)
+    v = n
+    for s in (16, 8, 4, 2, 1):
+        t = v >> s
+        go = t > 0
+        b = jnp.where(go, b + s, b)
+        v = jnp.where(go, t, v)
+    return b + (v > 0).astype(n.dtype)
+
+
+def i_sqrt(n, iters: int = 16):
+    """Integer sqrt via the paper's §III-I Babylonian recursion.
+
+    The ASIC early-exits when x_{i+1} >= x_i (Valid/z flags); on TPU a
+    data-dependent trip count is hostile to SIMD, so we run a fixed
+    ``iters`` (= the paper's own worst-case accounting, §IV-B fn.3) and
+    clamp.  Exact floor(sqrt(n)) for all 0 <= n <= 2^31-1.
+    """
+    n = n.astype(jnp.int32)
+    bl = int_bit_length(n)
+    x0 = jnp.left_shift(jnp.int32(1), (bl + 1) >> 1)  # 2^ceil(bits/2) >= sqrt(n)
+    x0 = jnp.maximum(x0, 1)
+
+    def body(_, x):
+        nx = (x + n // x) >> 1
+        # monotone envelope: once below true sqrt it oscillates by <=1
+        return jnp.minimum(x, jnp.maximum(nx, 1))
+
+    x = jax.lax.fori_loop(0, iters, body, x0)
+    x = jnp.minimum(x, 46340)  # floor(sqrt(2^31-1)); keeps x*x in int32
+    for _ in range(2):         # final correction (floor-div oscillation)
+        x = jnp.where(x * x > n, x - 1, x)
+    # increment guard: (x+1)^2 would overflow int32 at x == 46340
+    x = jnp.where((x < 46340) & ((x + 1) * (x + 1) <= n), x + 1, x)
+    return jnp.where(n <= 0, 0, x)
+
+
+class IExpPlan(NamedTuple):
+    """Design-time constants for i-exp at a fixed input scale."""
+    s_in: float
+    s_out: float
+    q_ln2: int
+    q_b: int
+    q_c: int
+    z_max: int
+
+    @property
+    def q_one(self) -> int:
+        """Integer representing 1.0 at the output scale (= exp(0))."""
+        return int(round(1.0 / self.s_out))
+
+
+def make_iexp(s_in: float, z_max: int = 30) -> IExpPlan:
+    q_ln2 = int(math.floor(LN2 / s_in))
+    if q_ln2 < 16:
+        raise ValueError(f"i-exp input scale too coarse: {s_in}")
+    q_b = int(math.floor(EXP_B / s_in))
+    s_out = EXP_A * s_in * s_in
+    q_c = int(math.floor(EXP_C / s_out))
+    _static_check(q_b * q_b + q_c, "i-exp polynomial")
+    _static_check(z_max * q_ln2, "i-exp range clip")
+    return IExpPlan(s_in, s_out, q_ln2, q_b, q_c, z_max)
+
+
+def i_exp(q, plan: IExpPlan):
+    """exp(x) for x = q * s_in <= 0.  Returns int32 at scale ``plan.s_out``.
+
+    Decomposition (paper Fig. 12): x = p - z*ln2, p in (-ln2, 0];
+    exp(x) = exp(p) >> z with exp(p) ~ a(p+b)^2 + c.
+    """
+    q = jnp.minimum(q, 0)
+    qn = jnp.maximum(q, jnp.int32(-plan.z_max * plan.q_ln2))
+    z = (-qn) // jnp.int32(plan.q_ln2)
+    q_p = qn + z * jnp.int32(plan.q_ln2)            # in (-q_ln2, 0]
+    t = q_p + jnp.int32(plan.q_b)
+    q_l = t * t + jnp.int32(plan.q_c)
+    return jax.lax.shift_right_arithmetic(q_l, z)   # exp(p) * 2^-z
+
+
+class IErfPlan(NamedTuple):
+    s_in: float
+    s_out: float
+    q_clip: int
+    q_bneg: int
+    q_c: int
+
+
+def make_ierf(s_in: float) -> IErfPlan:
+    q_clip = int(math.floor(-ERF_B / s_in))
+    q_bneg = int(math.floor(ERF_B / s_in))
+    s_poly = ERF_A * s_in * s_in                    # negative
+    q_c = int(math.floor(ERF_C / s_poly))           # negative
+    _static_check(q_clip * q_clip + abs(q_c), "i-erf polynomial")
+    return IErfPlan(s_in, -s_poly, q_clip, q_bneg, q_c)
+
+
+def i_erf(q, plan: IErfPlan):
+    """erf(x) for x = q * s_in.  Returns int32 at scale ``plan.s_out`` (>0)."""
+    sgn = jnp.sign(q).astype(jnp.int32)
+    q_abs = jnp.minimum(jnp.abs(q), jnp.int32(plan.q_clip))
+    t = q_abs + jnp.int32(plan.q_bneg)              # in [q_bneg, 0]
+    bracket = t * t + jnp.int32(plan.q_c)           # <= 0
+    return sgn * (-bracket)
+
+
+class IGeluPlan(NamedTuple):
+    s_in: float
+    s_out: float
+    erf: IErfPlan
+    q_one: int
+    qmax_in: int
+
+
+def make_igelu(s_in: float, qmax_in: int) -> IGeluPlan:
+    erf = make_ierf(s_in / math.sqrt(2.0))
+    q_one = int(math.floor(1.0 / erf.s_out))
+    _static_check(qmax_in * (2 * q_one), "i-gelu product")
+    s_out = s_in * erf.s_out / 2.0
+    return IGeluPlan(s_in, s_out, erf, q_one, qmax_in)
+
+
+def i_gelu(q, plan: IGeluPlan):
+    """GELU(x) = x * 0.5 * (1 + erf(x/sqrt(2))) — paper §III-H / Fig. 14."""
+    q_erf = i_erf(q, plan.erf)
+    return q * (q_erf + jnp.int32(plan.q_one))
+
+
+class IPoly2Plan(NamedTuple):
+    d2: Dyadic
+    d1: Dyadic
+    sign1: int
+    c0: int
+    s0: int
+
+
+def make_ipoly2(coeffs: Tuple[float, float, float], s_in: float,
+                s_out: float, qmax_in: int) -> IPoly2Plan:
+    """Generic integer 2nd-order polynomial a2 x^2 + a1 x + a0 evaluated at
+    x = q*s_in, emitted at scale s_out (used for i-ln1p)."""
+    a2, a1, a0 = coeffs
+    s0 = max(0, bits_for(qmax_in) - 15)
+    q_sq_max = (qmax_in >> s0) ** 2
+    d2 = fit_dyadic(abs(a2) * (s_in * (1 << s0)) ** 2 / s_out, q_sq_max) \
+        if a2 != 0 else None
+    d1 = fit_dyadic(abs(a1) * s_in / s_out, qmax_in) if a1 != 0 else None
+    c0 = int(round(a0 / s_out))
+    return IPoly2Plan(d2, d1, 1 if a1 >= 0 else -1, c0, s0)
+
+
+def i_poly2(q, plan: IPoly2Plan, a2_sign: int = 1):
+    qs = rshift_round(q, plan.s0)
+    out = jnp.full_like(q, plan.c0)
+    if plan.d2 is not None:
+        out = out + a2_sign * plan.d2(qs * qs)
+    if plan.d1 is not None:
+        out = out + plan.sign1 * plan.d1(q)
+    return out
+
+
+class ILn1pPlan(NamedTuple):
+    poly: IPoly2Plan
+    a2_sign: int
+    s_in: float
+    s_out: float
+
+
+def make_iln1p(s_in: float, s_out: float, qmax_in: int) -> ILn1pPlan:
+    a2, a1, a0 = LN1P_COEFS
+    poly = make_ipoly2((a2, a1, a0), s_in, s_out, qmax_in)
+    return ILn1pPlan(poly, 1 if a2 >= 0 else -1, s_in, s_out)
+
+
+def i_ln1p(q, plan: ILn1pPlan):
+    """ln(1+e) for e = q*s_in in [0, 1]."""
+    q = jnp.clip(q, 0, int(round(1.0 / plan.s_in)))
+    return i_poly2(q, plan.poly, plan.a2_sign)

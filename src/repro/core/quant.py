@@ -1,0 +1,76 @@
+"""Float<->integer boundary: symmetric quantization, calibration statistics,
+and straight-through fake-quant for QAT (SwiftTron §III-A).
+
+The integer datapath itself never touches a float — this module is the
+*design-time* side: it turns calibrated float ranges into frozen scales, and
+provides the fake-quant operator the QAT training step uses so the trained
+weights land on the same grid the accelerator executes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def qrange(bits: int):
+    return -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+
+
+def scale_from_absmax(absmax: float, bits: int = 8) -> float:
+    """Symmetric scale so that +-absmax maps onto the int range."""
+    _, hi = qrange(bits)
+    absmax = max(float(absmax), 1e-8)
+    return absmax / hi
+
+
+def quantize(x, scale: float, bits: int = 8):
+    """Float -> int32 values on the int``bits`` grid (design-time helper)."""
+    lo, hi = qrange(bits)
+    return jnp.clip(jnp.round(x / scale), lo, hi).astype(jnp.int32)
+
+
+def dequantize(q, scale: float):
+    return q.astype(jnp.float32) * scale
+
+
+def fake_quant(x, scale, bits: int = 8):
+    """Straight-through-estimator fake quantization for QAT.
+
+    Forward: dequantize(quantize(x)); backward: identity inside the clip
+    range (gradients flow through unchanged).  ``scale`` may be a traced
+    array (per-channel QAT) or a Python float.
+    """
+    lo, hi = qrange(bits)
+    xc = jnp.clip(x / scale, lo, hi)
+    q = jnp.round(xc)
+    return (x + jax.lax.stop_gradient((q - xc) * scale
+                                      + (xc * scale - x))).astype(x.dtype)
+
+
+def per_channel_absmax(x, axis: int):
+    """Max-abs along all axes except ``axis`` (weight out-channel scales)."""
+    axes = tuple(i for i in range(x.ndim) if i != (axis % x.ndim))
+    return jnp.max(jnp.abs(x), axis=axes)
+
+
+@dataclasses.dataclass
+class CalibStats:
+    """Running activation-range statistics collected by calibration."""
+    absmax: float = 0.0
+    n: int = 0
+
+    def update(self, x) -> "CalibStats":
+        m = float(jnp.max(jnp.abs(x)))
+        return CalibStats(absmax=max(self.absmax, m), n=self.n + 1)
+
+    def scale(self, bits: int = 8, headroom: float = 1.0) -> float:
+        return scale_from_absmax(self.absmax * headroom, bits)
+
+
+def ema_absmax(prev: float, x, decay: float = 0.95) -> float:
+    """EMA max-abs update (per-tensor activation calibration)."""
+    m = float(jnp.max(jnp.abs(x)))
+    return decay * prev + (1.0 - decay) * m if prev > 0 else m

@@ -1,0 +1,4 @@
+from repro.data.pipeline import (SyntheticLMDataset, TokenFileDataset,
+                                 make_train_iterator)
+
+__all__ = ["SyntheticLMDataset", "TokenFileDataset", "make_train_iterator"]

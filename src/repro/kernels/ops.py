@@ -1,0 +1,71 @@
+"""jit'd dispatch wrappers over the Pallas kernels and their jnp oracles.
+
+``backend`` selects the implementation:
+  * ``"ref"``       — pure-jnp (repro.core); what the multi-pod dry-run
+                      compiles (XLA-visible FLOPs/bytes for the roofline);
+  * ``"pallas"``    — pl.pallas_call with interpret=True on CPU (tests) and
+                      interpret=False on real TPU.
+
+Models call these entry points; the flag lives in the arch config
+(``ArchConfig.kernel_backend``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.int8_matmul import int8_matmul_pallas
+from repro.kernels.int_attention import int_attention_pallas
+from repro.kernels.int_gelu import int_gelu_pallas
+from repro.kernels.int_layernorm import int_layernorm_pallas
+from repro.kernels.int_softmax import int_softmax_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def int8_matmul(x8, w8, bias32=None, dn=None, b_vec=None, c=0, pre=0,
+                out_bits=8, backend="ref", **blocks):
+    if backend == "pallas":
+        out_dtype = jnp.int8 if out_bits <= 8 else jnp.int32
+        return int8_matmul_pallas(x8, w8, bias32, dn=dn, b_vec=b_vec, c=c,
+                                  pre=pre, out_bits=out_bits,
+                                  out_dtype=out_dtype,
+                                  interpret=_interpret(), **blocks)
+    if dn is not None:
+        return _ref.ref_int8_matmul(x8, w8, bias32, dn, out_bits)
+    return _ref.ref_int8_matmul_perchannel(x8, w8, bias32, b_vec, c, pre,
+                                           out_bits)
+
+
+def int_softmax(scores, plan, backend="ref", **kw):
+    if backend == "pallas":
+        return int_softmax_pallas(scores, plan, interpret=_interpret(), **kw)
+    return _ref.ref_int_softmax(scores, plan)
+
+
+def int_gelu(q, plan, dn_out, out_bits=8, backend="ref", **kw):
+    if backend == "pallas":
+        return int_gelu_pallas(q, plan, dn_out, out_bits,
+                               interpret=_interpret(), **kw)
+    return _ref.ref_int_gelu(q, plan, dn_out, out_bits)
+
+
+def int_layernorm(q, q_gamma, q_beta, plan, out_bits=8, backend="ref", **kw):
+    if backend == "pallas":
+        return int_layernorm_pallas(q, q_gamma, q_beta, plan, out_bits,
+                                    interpret=_interpret(), **kw)
+    return _ref.ref_int_layernorm(q, q_gamma, q_beta, plan, out_bits)
+
+
+def int_attention(q8, k8, v8, plan, causal=True, window=0, out_bits=8,
+                  backend="ref", **kw):
+    if backend == "pallas":
+        return int_attention_pallas(q8, k8, v8, plan, causal=causal,
+                                    window=window, out_bits=out_bits,
+                                    interpret=_interpret(), **kw)
+    return _ref.ref_int_attention(q8, k8, v8, plan, causal, window, out_bits)

@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``ref_*`` mirrors the exact integer semantics of its kernel (same
+rounding, same staging) by delegating to ``repro.core`` — the kernels are
+*implementations* of the core numerics with explicit VMEM tiling, so kernel
+vs. ref mismatches beyond +-1 LSB are bugs.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import activations as iact
+from repro.core import attention as iattn
+from repro.core import norms as inorms
+from repro.core import softmax as ism
+from repro.core.dyadic import Dyadic, apply_dyadic, clip_to_bits
+from repro.core.intmath import IGeluPlan, i_gelu
+
+
+def ref_int8_matmul(x8, w8, bias32, dn: Dyadic, out_bits: int = 8):
+    """int8 (M,K) x int8 (K,N) -> int32, +bias, dyadic requant, clip.
+
+    bias32: int32 (N,) at the accumulator scale (s_x * s_w), or None.
+    """
+    acc = jnp.dot(x8, w8, preferred_element_type=jnp.int32)
+    if bias32 is not None:
+        acc = acc + bias32[None, :]
+    return clip_to_bits(apply_dyadic(acc, dn), out_bits)
+
+
+def ref_int8_matmul_perchannel(x8, w8, bias32, b_vec, c: int, pre: int,
+                               out_bits: int = 8):
+    from repro.core.dyadic import apply_dyadic_perchannel
+    acc = jnp.dot(x8, w8, preferred_element_type=jnp.int32)
+    if bias32 is not None:
+        acc = acc + bias32[None, :]
+    out = apply_dyadic_perchannel(acc, b_vec, c, pre, axis=-1)
+    return clip_to_bits(out, out_bits)
+
+
+def ref_int_softmax(q_scores, plan: ism.ISoftmaxPlan, where=None):
+    return ism.i_softmax(q_scores, plan, axis=-1, where=where)
+
+
+def ref_int_gelu(q, plan: IGeluPlan, dn_out: Dyadic, out_bits: int = 8):
+    return clip_to_bits(apply_dyadic(i_gelu(q.astype(jnp.int32), plan),
+                                     dn_out), out_bits)
+
+
+def ref_int_layernorm(q, q_gamma, q_beta, plan: inorms.INormPlan,
+                      out_bits: int = 8):
+    return inorms.i_norm(q, q_gamma, q_beta, plan, out_bits)
+
+
+def ref_int_attention(q8, k8, v8, plan: iattn.IAttnPlan, causal: bool = True,
+                      window: int = 0, out_bits: int = 8):
+    """Oracle for the fused attention kernel: full-matrix integer attention."""
+    sq, sk = q8.shape[1], k8.shape[1]
+    mask = iattn.causal_mask(sq, sk, window=window)[None, None] \
+        if (causal or window > 0) else None
+    # GQA: repeat kv heads if needed
+    h, hkv = q8.shape[2], k8.shape[2]
+    if hkv != h:
+        rep = h // hkv
+        k8 = jnp.repeat(k8, rep, axis=2)
+        v8 = jnp.repeat(v8, rep, axis=2)
+    return iattn.i_attention_full(q8, k8, v8, plan, mask=mask,
+                                  out_bits=out_bits)

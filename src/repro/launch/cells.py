@@ -1,0 +1,14 @@
+"""Cell matrix accounting (side-effect-free: importable without touching
+jax device state, unlike launch.dryrun which pins 512 host devices)."""
+from repro.configs.registry import LONG_OK, get_config
+from repro.models.common import SHAPES
+
+
+def cell_supported(arch: str, shape: str) -> str:
+    """'' if runnable, else the reason it is skipped (DESIGN.md §6)."""
+    cfg = get_config(arch)
+    if shape == "long_500k" and arch not in LONG_OK:
+        return "full quadratic attention at 524288 tokens (skip per brief)"
+    if cfg.family == "encoder" and SHAPES[shape].kind == "decode":
+        return "encoder-only arch has no decode step"
+    return ""

@@ -1,0 +1,43 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Re-run the (unrolled, reduced-batch) layer probes for existing
+single-pod dry-run records and patch the JSONs in place."""
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs.registry import ASSIGNED, get_config
+from repro.launch.cells import cell_supported
+from repro.launch.dryrun import _probe_layers
+from repro.launch.mesh import make_production_mesh
+from repro.models.common import SHAPES
+
+OUT = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+mesh = make_production_mesh()
+for arch in ASSIGNED:
+    for shape_name in SHAPES:
+        if cell_supported(arch, shape_name):
+            continue
+        p = os.path.join(OUT, f"{arch}_{shape_name}_16x16.json")
+        if not os.path.exists(p):
+            continue
+        rec = json.load(open(p))
+        if "error" in rec:
+            continue
+        t0 = time.time()
+        try:
+            rec["probe"] = _probe_layers(get_config(arch),
+                                         SHAPES[shape_name], mesh)
+            print(f"[probe] {arch} {shape_name}: "
+                  f"ng1={rec['probe']['ng1']['flops']:.3e} "
+                  f"ng2={rec['probe']['ng2']['flops']:.3e} "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+        except Exception as e:
+            print(f"[probe-fail] {arch} {shape_name}: {e}", flush=True)
+            rec["probe_error"] = str(e)[:500]
+            traceback.print_exc()
+        json.dump(rec, open(p, "w"), indent=1)

@@ -1,0 +1,108 @@
+"""Step functions the launcher / dry-run lower: QAT train step and the
+integer serving steps (prefill / decode)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import inttransformer as it
+from repro.models import intlayers as il
+from repro.models.common import ArchConfig
+from repro.optim import adamw_init, adamw_update
+from repro.optim.adamw import AdamWConfig
+from repro.quant import plans as qplans
+from repro.quant import qat
+
+Pytree = Any
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig,
+                    lr_fn: Optional[Callable] = None,
+                    qat_enabled: bool = True, param_specs=None,
+                    accum_steps: int = 1):
+    """QAT train step; ``accum_steps`` > 1 runs microbatched gradient
+    accumulation (activation memory / accum_steps) via lax.scan."""
+    lr_fn = lr_fn or (lambda step: 1.0)
+
+    def grad_fn(params, batch):
+        return jax.value_and_grad(qat.loss_fn, has_aux=True)(
+            params, batch, cfg, qat=qat_enabled)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            (loss, (ce, aux)), grads = grad_fn(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:]), batch)
+
+            def _pin(g):
+                if param_specs is None:
+                    return g
+                return jax.tree.map(jax.lax.with_sharding_constraint, g,
+                                    param_specs)
+
+            def acc(carry, mb):
+                g_acc, l_acc, a_acc = carry
+                (l, (ce_i, a)), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda ga, gi: ga + gi.astype(jnp.float32), g_acc,
+                    _pin(g))
+                return (_pin(g_acc), l_acc + ce_i, a_acc + a), None
+
+            g0 = _pin(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (grads, ce, aux), _ = jax.lax.scan(
+                acc, (g0, jnp.zeros(()), jnp.zeros(())), micro)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            ce, aux = ce / accum_steps, aux / accum_steps
+            loss = ce
+        if param_specs is not None:
+            # pin gradient shardings to the param layout: the optimizer
+            # update then stays fully sharded elementwise (otherwise XLA
+            # may all-gather f32 moments to meet the output sharding)
+            grads = jax.tree.map(jax.lax.with_sharding_constraint, grads,
+                                 param_specs)
+        params, opt_state, metrics = adamw_update(
+            grads, opt_state, params, opt_cfg,
+            lr_scale=lr_fn(opt_state.step))
+        metrics.update({"loss": loss, "ce": ce, "aux": aux})
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, plans: qplans.LayerPlans,
+                      backend: str = "ref"):
+    """RoPE tables are explicit inputs (multi-MB design constants must not
+    be baked into the HLO)."""
+    if cfg.pos == "rope":
+        def prefill(qparams, batch, rope_tab):
+            return it.int_prefill(qparams, batch, plans, cfg,
+                                  backend=backend, rope_tab=rope_tab)
+    else:
+        def prefill(qparams, batch):
+            return it.int_prefill(qparams, batch, plans, cfg,
+                                  backend=backend)
+    return prefill
+
+
+def make_decode_step(cfg: ArchConfig, plans: qplans.LayerPlans,
+                     cache_len: int, backend: str = "ref"):
+    if cfg.pos == "rope":
+        def decode(qparams, caches, tokens, pos, rope_tab):
+            return it.int_decode_step(qparams, caches, tokens, pos, plans,
+                                      cfg, rope_tab, backend=backend)
+    else:
+        def decode(qparams, caches, tokens, pos):
+            return it.int_decode_step(qparams, caches, tokens, pos, plans,
+                                      cfg, None, backend=backend)
+    return decode
+
+
+def rope_table_spec(cfg: ArchConfig, max_len: int):
+    sds = jax.ShapeDtypeStruct((max_len + 1, cfg.hd // 2), jnp.int32)
+    return (sds, sds)

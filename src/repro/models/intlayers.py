@@ -1,0 +1,467 @@
+"""Integer-path transformer layers — the SwiftTron datapath in JAX.
+
+Every function here consumes int8/int32 tensors and the design-time plans
+from ``repro.quant.plans``; no float enters the computation (RoPE tables,
+polynomial constants and dyadic multipliers are integer design constants).
+
+Residual stream: int32 at ``cfg.s_res`` clipped to ``cfg.qmax_res``
+(14-bit) — the ASIC's inter-block INT32 bus.  Matmul operands: int8.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import activations as iact
+from repro.core import attention as iattn
+from repro.core import intmath, norms
+from repro.core import softmax as ism
+from repro.core.dyadic import clip_to_bits, rshift_round
+from repro.distributed.sharding import shard
+from repro.kernels import ops
+from repro.models.common import ArchConfig
+from repro.quant import plans as qplans
+
+
+# ------------------------------------------------------------- linear -----
+
+def int_linear(x8, qw, plan: qplans.LinearPlan, backend="ref",
+               out_dtype=None):
+    """x8: (..., K) int8; qw: {"w8": (K,N), "b_mult": (N,), "bias32"?}.
+
+    Returns (..., N): int8 when plan.s_out > 0 (requantized) else int32
+    accumulator.
+    """
+    lead = x8.shape[:-1]
+    k = x8.shape[-1]
+    n = qw["w8"].shape[-1]
+    x2 = x8.reshape(-1, k)
+    if plan.s_out == 0.0:
+        acc = jnp.dot(x2, qw["w8"], preferred_element_type=jnp.int32)
+        if "bias32" in qw:
+            acc = acc + qw["bias32"][None, :]
+        return acc.reshape(*lead, n)
+    out = ops.int8_matmul(x2, qw["w8"], qw.get("bias32"),
+                          b_vec=qw["b_mult"], c=plan.c, pre=plan.pre,
+                          out_bits=plan.out_bits, backend=backend)
+    out = out.reshape(*lead, n)
+    if plan.out_bits <= 8:
+        out = out.astype(jnp.int8)
+    return out
+
+
+# ------------------------------------------------------------- norms ------
+
+def int_expert_linear(x8, qw, plan: qplans.LinearPlan):
+    """Batched-per-expert linear: x8 (G,E,C,K) x w8 (E,K,N) -> (G,E,C,N).
+
+    Per-channel requant with b_mult (E,N); shared static (c, pre)."""
+    acc = jnp.einsum("geck,ekn->gecn", x8, qw["w8"],
+                     preferred_element_type=jnp.int32)
+    if "bias32" in qw:
+        acc = acc + qw["bias32"][None, :, None, :]
+    b = qw["b_mult"][None, :, None, :].astype(jnp.int32)
+    out = rshift_round(rshift_round(acc, plan.pre) * b, plan.c - plan.pre)
+    out = clip_to_bits(out, plan.out_bits)
+    return out.astype(jnp.int8) if plan.out_bits <= 8 else out
+
+
+def int_norm(qnorm, q32, plan: norms.INormPlan, backend="ref"):
+    """q32 (..., D) int32 at s_res -> int8 at s_act8."""
+    out = ops.int_layernorm(q32, qnorm["gamma_q"], qnorm.get("beta_q"),
+                            plan, out_bits=8, backend=backend)
+    return out.astype(jnp.int8)
+
+
+# ------------------------------------------------------------- rope -------
+
+ROPE_FRAC = 14
+
+
+def build_rope_table(max_seq: int, hd: int, theta: float):
+    """Design-time int16 cos/sin tables at 2^-14 (integer RoPE)."""
+    pos = np.arange(max_seq, dtype=np.float64)[:, None]
+    freqs = 1.0 / (theta ** (np.arange(0, hd, 2, dtype=np.float64) / hd))
+    ang = pos * freqs[None, :]
+    cos = np.round(np.cos(ang) * (1 << ROPE_FRAC)).astype(np.int32)
+    sin = np.round(np.sin(ang) * (1 << ROPE_FRAC)).astype(np.int32)
+    return jnp.asarray(cos), jnp.asarray(sin)
+
+
+def apply_int_rope(q8, positions, rope_tab):
+    """q8: (B,S,H,hd) int8; positions: (B,S) or (S,) int32."""
+    cos_t, sin_t = rope_tab
+    cos = jnp.take(cos_t, positions, axis=0)     # (B,S,hd/2) or (S,hd/2)
+    sin = jnp.take(sin_t, positions, axis=0)
+    if cos.ndim == 2:
+        cos, sin = cos[None], sin[None]
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    q = q8.astype(jnp.int32)
+    q1, q2 = jnp.split(q, 2, axis=-1)
+    r1 = rshift_round(q1 * cos - q2 * sin, ROPE_FRAC)
+    r2 = rshift_round(q1 * sin + q2 * cos, ROPE_FRAC)
+    out = jnp.concatenate([r1, r2], axis=-1)
+    return jnp.clip(out, -127, 127).astype(jnp.int8)
+
+
+# --------------------------------------------------------- attention ------
+
+def int_attn_fwd(qp, x8, plans: qplans.AttnPlan, cfg: ArchConfig,
+                 rope_tab=None, positions=None, causal=True, window: int = 0,
+                 memory8=None, backend="ref", fuse_attention=True):
+    """Self/cross attention.  x8: (B,S,D) int8 -> (B,S,D) int32 at s_res."""
+    b, s, d = x8.shape
+    kv_src = memory8 if memory8 is not None else x8
+    sk = kv_src.shape[1]
+    q8 = int_linear(x8, qp["wq"], plans.qkv, backend) \
+        .reshape(b, s, cfg.n_heads, cfg.hd)
+    k8 = int_linear(kv_src, qp["wk"], plans.qkv, backend) \
+        .reshape(b, sk, cfg.n_kv_heads, cfg.hd)
+    v8 = int_linear(kv_src, qp["wv"], plans.qkv, backend) \
+        .reshape(b, sk, cfg.n_kv_heads, cfg.hd)
+    if rope_tab is not None and memory8 is None:
+        pos = positions if positions is not None else jnp.arange(s)
+        q8 = apply_int_rope(q8, pos, rope_tab)
+        k8 = apply_int_rope(k8, pos, rope_tab)
+    q8 = shard(q8, "batch", "seq", "heads", None)
+    k8 = shard(k8, "batch", "seq", "kv_heads", None)
+    v8 = shard(v8, "batch", "seq", "kv_heads", None)
+
+    if backend == "pallas" and fuse_attention:
+        o8 = ops.int_attention(q8, k8, v8, plans.attn,
+                               causal=causal and memory8 is None,
+                               window=window, backend="pallas")
+    elif s * sk > (4096 * 4096) // 4 and memory8 is None:
+        # memory-bounded two-pass streaming path
+        rep = cfg.q_group
+        k8r = jnp.repeat(k8, rep, 2) if rep > 1 else k8
+        v8r = jnp.repeat(v8, rep, 2) if rep > 1 else v8
+        o8 = iattn.i_attention_chunked(q8, k8r, v8r, plans.attn,
+                                       chunk=min(1024, sk), causal=causal,
+                                       window=window)
+        o8 = o8.astype(jnp.int8)
+    else:
+        o8 = ops.int_attention(q8, k8, v8, plans.attn,
+                               causal=causal and memory8 is None,
+                               window=window, backend="ref")
+    o8 = shard(o8, "batch", "seq", "heads", None)
+    out32 = int_linear(o8.reshape(b, s, cfg.n_heads * cfg.hd), qp["wo"],
+                       plans.out, backend)
+    return shard(out32, "batch", "seq", "embed")
+
+
+def int_attn_decode(qp, x8, cache, pos, plans: qplans.AttnPlan,
+                    cfg: ArchConfig, rope_tab=None, window: int = 0,
+                    backend="ref"):
+    """One-token decode.  x8: (B,1,D); cache: {"k8","v8"} (B,L,Hkv,hd).
+
+    ``pos``: (B,) current position (tokens written at cache[:, pos]).
+    Returns (out32, new_cache)."""
+    b, _, d = x8.shape
+    L = cache["k8"].shape[1]
+    q8 = int_linear(x8, qp["wq"], plans.qkv, backend) \
+        .reshape(b, 1, cfg.n_heads, cfg.hd)
+    k8 = int_linear(x8, qp["wk"], plans.qkv, backend) \
+        .reshape(b, 1, cfg.n_kv_heads, cfg.hd)
+    v8 = int_linear(x8, qp["wv"], plans.qkv, backend) \
+        .reshape(b, 1, cfg.n_kv_heads, cfg.hd)
+    if rope_tab is not None:
+        q8 = apply_int_rope(q8, pos[:, None], rope_tab)
+        k8 = apply_int_rope(k8, pos[:, None], rope_tab)
+    if window > 0:
+        slot = pos % window
+    else:
+        slot = pos
+    bidx = jnp.arange(b)
+    k_cache = cache["k8"].at[bidx, slot].set(k8[:, 0])
+    v_cache = cache["v8"].at[bidx, slot].set(v8[:, 0])
+    rep = cfg.q_group
+    k_full = jnp.repeat(k_cache, rep, 2) if rep > 1 else k_cache
+    v_full = jnp.repeat(v_cache, rep, 2) if rep > 1 else v_cache
+    valid = jnp.minimum(pos + 1, L) if window > 0 else pos + 1
+    o8 = iattn.i_attention_decode(q8, k_full, v_full, plans.attn, valid)
+    o8 = o8.astype(jnp.int8)
+    out32 = int_linear(o8.reshape(b, 1, cfg.n_heads * cfg.hd), qp["wo"],
+                       plans.out, backend)
+    return out32, {"k8": k_cache, "v8": v_cache}
+
+
+# --------------------------------------------------------------- ffn ------
+
+def int_ffn_fwd(qp, x8, plans: qplans.FfnPlan, cfg: ArchConfig,
+                backend="ref"):
+    """x8 (B,S,D) int8 -> int32 at s_res."""
+    h1 = int_linear(x8, qp["w1"], plans.up, backend)        # 10-bit int32
+    if cfg.activation == "swiglu":
+        h3 = int_linear(x8, qp["w3"], plans.up, backend)
+        a8 = iact.i_silu(h1, plans.act_silu, out_bits=8)
+        prod = a8 * h3                                      # s8 * s10
+        h = clip_to_bits(plans.dn_gate(prod), 8).astype(jnp.int8)
+    else:
+        a = ops.int_gelu(h1, plans.act_gelu.gelu, plans.act_gelu.dn_out,
+                         out_bits=8, backend=backend)
+        h = a.astype(jnp.int8)
+    h = shard(h, "batch", "seq", "ffn")
+    return shard(int_linear(h, qp["w2"], plans.down, backend),
+                 "batch", "seq", "embed")
+
+
+# --------------------------------------------------------------- moe ------
+
+def int_moe_fwd(qp, x8, plans: qplans.MoePlan, cfg: ArchConfig,
+                backend="ref", group_size: int = 512):
+    """Integer MoE: int32 router logits, integer top-k gates (i-softmax
+    over the selected k logits), int8 expert FFNs, integer combine."""
+    b, s, d = x8.shape
+    e = cfg.padded_experts()
+    k = cfg.top_k
+    g = max(1, s // group_size)
+    tg = s // g
+    cap = max(4, int(cfg.capacity_factor * tg * k / e))
+    xg = x8.reshape(b * g, tg, d)
+
+    logits = int_linear(xg, qp["router"], plans.router, backend)  # int32
+    if e != cfg.n_experts:
+        padmask = jnp.arange(e) >= cfg.n_experts
+        logits = jnp.where(padmask[None, None], jnp.int32(-(2 ** 30)),
+                           logits)
+    top_logits, expert_ids = jax.lax.top_k(logits, k)       # (g,t,k)
+    gates8 = ism.i_softmax(top_logits, plans.gate_sm, axis=-1)  # 2^-7 int8
+
+    dispatch = jnp.zeros((b * g, tg, e, cap), jnp.int8)
+    counts = jnp.zeros((b * g, e), jnp.int32)
+    slot_oh = []
+    for slot in range(k):
+        a = jax.nn.one_hot(expert_ids[..., slot], e, dtype=jnp.int32)
+        pos = counts[:, None, :] + jnp.cumsum(a, axis=1) - a
+        keep = (pos < cap) & (a > 0)
+        oh = (jax.nn.one_hot(pos, cap, dtype=jnp.int32)
+              * keep[..., None]).astype(jnp.int8)           # (g,t,e,cap)
+        slot_oh.append(oh)
+        dispatch = dispatch + oh
+        counts = counts + jnp.sum(a, axis=1)
+
+    buf = jnp.einsum("gtd,gtec->gecd", xg, dispatch,
+                     preferred_element_type=jnp.int32).astype(jnp.int8)
+    buf = shard(buf, "batch", "experts", None, "embed")
+    h1 = int_expert_linear(buf, qp["w1"], plans.expert.up)
+    if cfg.activation == "swiglu":
+        h3 = int_expert_linear(buf, qp["w3"], plans.expert.up)
+        a8 = iact.i_silu(h1, plans.expert.act_silu, out_bits=8)
+        h = clip_to_bits(plans.expert.dn_gate(a8 * h3), 8).astype(jnp.int8)
+    else:
+        h = ops.int_gelu(h1, plans.expert.act_gelu.gelu,
+                         plans.expert.act_gelu.dn_out, out_bits=8,
+                         backend=backend).astype(jnp.int8)
+    y8 = int_expert_linear(h, qp["w2"], plans.expert.down)   # s_res int32
+    y8 = shard(y8, "batch", "experts", None, "embed")
+
+    out32 = jnp.zeros((b * g, tg, d), jnp.int32)
+    for slot in range(k):
+        y_slot = jnp.einsum("gecd,gtec->gtd", y8, slot_oh[slot],
+                            preferred_element_type=jnp.int32)
+        gate = gates8[..., slot].astype(jnp.int32)[..., None]
+        out32 = out32 + rshift_round(y_slot * gate, ism.PROB_SHIFT)
+    out32 = out32.reshape(b, s, d)
+    if plans.shared is not None:
+        out32 = out32 + int_ffn_fwd(qp["shared"], x8, plans.shared, cfg,
+                                    backend)
+    return shard(out32, "batch", "seq", "embed")
+
+
+# -------------------------------------------------------------- mamba -----
+
+class IntMambaState(NamedTuple):
+    h: jnp.ndarray        # (B, H, N, P) int32 at s_h
+    conv: jnp.ndarray     # (B, K-1, C) int8
+
+
+def init_int_mamba_state(cfg: ArchConfig, batch: int) -> IntMambaState:
+    h = jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+                  jnp.int32)
+    conv_ch = cfg.ssm_d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    conv = jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), jnp.int8)
+    return IntMambaState(h, conv)
+
+
+def _int_conv_step(xbc8_t, conv_state, qconv_w8, mp: qplans.MambaPlan):
+    """Depthwise causal conv, one step.  xbc8_t: (B,C) int8."""
+    km1 = conv_state.shape[1]
+    window = jnp.concatenate([conv_state, xbc8_t[:, None, :]], axis=1)
+    acc = jnp.sum(window.astype(jnp.int32)
+                  * qconv_w8.astype(jnp.int32)[None], axis=1)
+    new_state = window[:, 1:]
+    h10 = clip_to_bits(mp.dn_conv(acc), 11)
+    out8 = iact.i_silu(h10, mp.silu_conv, out_bits=8).astype(jnp.int8)
+    return out8, new_state
+
+
+def int_mamba_step(qp, u8_t, state: IntMambaState, mp: qplans.MambaPlan,
+                   cfg: ArchConfig, backend="ref"):
+    """One token.  u8_t: (B, D) int8 -> (out32 (B,D) at s_res, new state)."""
+    b = u8_t.shape[0]
+    di, gq, n, hh, p = (cfg.ssm_d_inner, cfg.ssm_groups, cfg.ssm_state,
+                        cfg.ssm_heads, cfg.ssm_head_dim)
+    zxbc8 = int_linear(u8_t, qp["in_proj"], mp.in_proj, backend)
+    dt_acc = int_linear(u8_t, qp["dt_proj"], _INT32_PLAN(mp), backend)
+    z8, xbc8 = zxbc8[:, :di], zxbc8[:, di:]
+    xbc8, conv_new = _int_conv_step(xbc8, state.conv, qp["conv_w8"], mp)
+    x8 = xbc8[:, :di].reshape(b, hh, p)
+    B8 = xbc8[:, di:di + gq * n].reshape(b, gq, n)
+    C8 = xbc8[:, di + gq * n:].reshape(b, gq, n)
+
+    dt_in = clip_to_bits(mp.dn_dt_in(dt_acc + qp["dt_bias_q"][None]), 11)
+    dt = iact.i_softplus(dt_in, mp.softplus, out_bits=13)    # s_dt, (B,H)
+    dtA = mp.dn_dtA(dt * qp["A_q"][None])                    # -> 2^-14
+    decay16 = mp.dn_decay16(intmath.i_exp(-dtA, mp.iexp_decay))
+    decay16 = jnp.clip(decay16, 0, 1 << 15)                  # (B,H)
+
+    rep = hh // gq
+    B8h = jnp.repeat(B8, rep, axis=1)                        # (B,H,N)
+    # contribution: dt * B * x  (s_dt*s8*s8) -> s_h
+    contrib = (dt[:, :, None, None] *
+               (B8h[:, :, :, None].astype(jnp.int32)
+                * x8[:, :, None, :].astype(jnp.int32)))
+    contrib = mp.dn_h(contrib)
+    h = state.h
+    h = ism.rescale_sum(h, decay16[:, :, None, None]) + contrib
+    h = jnp.clip(h, -mp.qmax_h, mp.qmax_h)
+
+    # dynamic block-floating-point h -> int8 (one exponent per batch row,
+    # shared across heads so the downstream RMSNorm shift cancels exactly)
+    h_max = jnp.max(jnp.abs(h), axis=(1, 2, 3), keepdims=True)
+    sd = jnp.maximum(intmath.int_bit_length(h_max) - 7, 0)    # (B,1,1,1)
+    half_h = jnp.where(sd > 0, jnp.left_shift(
+        jnp.int32(1), jnp.maximum(sd - 1, 0)), 0)
+    h8 = jnp.clip(jax.lax.shift_right_arithmetic(h + half_h, sd),
+                  -127, 127)                                   # (B,H,N,P)
+    C8h = jnp.repeat(C8, rep, axis=1)                          # (B,H,N)
+    y_acc = jnp.einsum("bhn,bhnp->bhp", C8h.astype(jnp.int32),
+                       h8.astype(jnp.int32))
+    # D*x on the same (shifted) h grid: D_q at 2^-16, >> sd
+    d_term = jax.lax.shift_right_arithmetic(
+        qp["D_q"][None, :, None] * x8.astype(jnp.int32), sd[:, :, 0])
+    y_acc = y_acc + d_term
+    y32 = y_acc.reshape(b, di)                # unnormalised, wide range
+
+    z10 = mp.dn_z10(z8.astype(jnp.int32))
+    sig16 = _silu16(z10, mp.silu_z)
+    gated = ism.rescale_sum(y32, sig16)       # y * sigmoid(z), int32
+    # per-row dynamic block-floating-point shift into the RMSNorm: the
+    # norm is scale-invariant so the shift cancels exactly, and the
+    # 12-bit mantissa satisfies the i-norm bit budget.
+    row_max = jnp.max(jnp.abs(gated), axis=-1, keepdims=True)
+    s_dyn = jnp.maximum(intmath.int_bit_length(row_max) - 11, 0)
+    half = jnp.where(s_dyn > 0,
+                     jnp.left_shift(jnp.int32(1),
+                                    jnp.maximum(s_dyn - 1, 0)), 0)
+    y12 = jax.lax.shift_right_arithmetic(gated + half, s_dyn)
+    y8 = int_norm({"gamma_q": qp["norm_gamma_q"]}, y12, mp.norm,
+                  backend).astype(jnp.int8)
+    out32 = int_linear(y8, qp["out_proj"], mp.out_proj, backend)
+    return out32, IntMambaState(h, conv_new)
+
+
+def _silu16(zq, plan: iact.ISiluPlan):
+    """sigmoid(z) as a 2^-15 fraction (int32), z int32 at plan.s_in."""
+    q = zq.astype(jnp.int32)
+    e = intmath.i_exp(-jnp.abs(q), plan.iexp)
+    e16 = jnp.clip(plan.dn_e16(e), 0, 1 << 15)
+    one16 = jnp.int32(1 << 15)
+    den = one16 + e16
+    r = jnp.int32(1 << 30) // den
+    num = jnp.where(q >= 0, one16, e16)
+    return (num * r) >> 15
+
+
+def int_mamba_prefill(qp, u8, mp: qplans.MambaPlan, cfg: ArchConfig,
+                      state: Optional[IntMambaState] = None, backend="ref"):
+    """Integer prefill with the token-parallel stages hoisted out of the
+    recurrence: projections / conv / Δt / decays / contributions batch over
+    the whole sequence (MXU-shaped, HLO-countable); only the O(L) h-state
+    update and the per-token read-out stay in the scan (cheap elementwise).
+    """
+    b, l, d = u8.shape
+    di, gq, n, hh, p = (cfg.ssm_d_inner, cfg.ssm_groups, cfg.ssm_state,
+                        cfg.ssm_heads, cfg.ssm_head_dim)
+    if state is None:
+        state = init_int_mamba_state(cfg, b)
+
+    # --- token-parallel stages -------------------------------------------
+    zxbc8 = int_linear(u8, qp["in_proj"], mp.in_proj, backend)   # (B,L,*)
+    dt_acc = int_linear(u8, qp["dt_proj"], _INT32_PLAN(mp), backend)
+    z8, xbc8 = zxbc8[..., :di], zxbc8[..., di:]
+    # causal depthwise conv over the sequence, seeded by the carried tail
+    km1 = state.conv.shape[1]
+    full = jnp.concatenate([state.conv, xbc8], axis=1)
+    w = qp["conv_w8"].astype(jnp.int32)
+    acc = sum(full[:, i:i + l].astype(jnp.int32) * w[i]
+              for i in range(km1 + 1))
+    conv_tail = full[:, -km1:]
+    h10 = clip_to_bits(mp.dn_conv(acc), 11)
+    xbc8a = iact.i_silu(h10, mp.silu_conv, out_bits=8).astype(jnp.int8)
+    x8 = xbc8a[..., :di].reshape(b, l, hh, p)
+    B8 = xbc8a[..., di:di + gq * n].reshape(b, l, gq, n)
+    C8 = xbc8a[..., di + gq * n:].reshape(b, l, gq, n)
+
+    dt_in = clip_to_bits(mp.dn_dt_in(dt_acc + qp["dt_bias_q"][None, None]),
+                         11)
+    dt = iact.i_softplus(dt_in, mp.softplus, out_bits=13)        # (B,L,H)
+    dtA = mp.dn_dtA(dt * qp["A_q"][None, None])
+    decay16 = jnp.clip(mp.dn_decay16(intmath.i_exp(-dtA, mp.iexp_decay)),
+                       0, 1 << 15)                               # (B,L,H)
+    rep = hh // gq
+    B8h = jnp.repeat(B8, rep, axis=2)                            # (B,L,H,N)
+    contrib = mp.dn_h(dt[..., None, None] *
+                      (B8h[..., :, None].astype(jnp.int32)
+                       * x8[..., None, :].astype(jnp.int32)))    # (B,L,H,N,P)
+    C8h = jnp.repeat(C8, rep, axis=2)
+
+    # --- sequential state recurrence + read-out --------------------------
+    def step(h, xs):
+        dec_t, con_t, c_t, x_t = xs
+        h = ism.rescale_sum(h, dec_t[:, :, None, None]) + con_t
+        h = jnp.clip(h, -mp.qmax_h, mp.qmax_h)
+        h_max = jnp.max(jnp.abs(h), axis=(1, 2, 3), keepdims=True)
+        sd = jnp.maximum(intmath.int_bit_length(h_max) - 7, 0)
+        half = jnp.where(sd > 0, jnp.left_shift(
+            jnp.int32(1), jnp.maximum(sd - 1, 0)), 0)
+        h8 = jnp.clip(jax.lax.shift_right_arithmetic(h + half, sd),
+                      -127, 127)
+        y = jnp.einsum("bhn,bhnp->bhp", c_t.astype(jnp.int32),
+                       h8.astype(jnp.int32))
+        y = y + jax.lax.shift_right_arithmetic(
+            qp["D_q"][None, :, None] * x_t.astype(jnp.int32), sd[:, :, 0])
+        return h, y
+
+    xs = (decay16.transpose(1, 0, 2), contrib.transpose(1, 0, 2, 3, 4),
+          C8h.transpose(1, 0, 2, 3), x8.transpose(1, 0, 2, 3))
+    h, ys = jax.lax.scan(step, state.h, xs)
+    y32 = ys.transpose(1, 0, 2, 3).reshape(b, l, di)
+
+    # --- gate + BFP norm + out-projection (token-parallel) ---------------
+    z10 = mp.dn_z10(z8.astype(jnp.int32))
+    sig16 = _silu16(z10, mp.silu_z)
+    gated = ism.rescale_sum(y32, sig16)
+    row_max = jnp.max(jnp.abs(gated), axis=-1, keepdims=True)
+    s_dyn = jnp.maximum(intmath.int_bit_length(row_max) - 11, 0)
+    half = jnp.where(s_dyn > 0, jnp.left_shift(
+        jnp.int32(1), jnp.maximum(s_dyn - 1, 0)), 0)
+    y12 = jax.lax.shift_right_arithmetic(gated + half, s_dyn)
+    y8 = int_norm({"gamma_q": qp["norm_gamma_q"]}, y12, mp.norm,
+                  backend).astype(jnp.int8)
+    out32 = int_linear(y8, qp["out_proj"], mp.out_proj, backend)
+    return out32, IntMambaState(h, conv_tail)
+
+
+class _INT32_PLAN:
+    """dt projection keeps the raw int32 accumulator (requant happens after
+    the dt_bias add)."""
+    def __new__(cls, mp):
+        return qplans.LinearPlan(mp.in_proj.s_in, 0.0, 32, 0, 0,
+                                 mp.in_proj.k_dim)

@@ -1,0 +1,294 @@
+"""Integer-path model assembly (prefill + decode) for every family.
+
+The serving datapath of the framework: everything from embedding lookup to
+the last requant is SwiftTron integer arithmetic; only the final logits are
+dequantized (host-side sampling boundary).
+
+Caches:
+  attention  — int8 KV at s_act8; sliding-window archs keep a rolling
+               ``window``-sized buffer (slot = pos % window)
+  mamba      — int32 SSD state + int8 conv tail
+  cross      — int8 K/V of the encoder/image memory, computed at prefill
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dyadic import clip_to_bits
+from repro.distributed.sharding import shard
+from repro.models import intlayers as il
+from repro.models.common import ArchConfig
+from repro.models.transformer import layer_group_spec
+from repro.quant import plans as qplans
+
+Pytree = Any
+
+
+def _residual_add(x32, delta32, cfg: ArchConfig):
+    return jnp.clip(x32 + delta32, -cfg.qmax_res, cfg.qmax_res)
+
+
+def _sub_plans(plans: qplans.LayerPlans, kind):
+    mix, ff, has_cross = kind
+    return plans
+
+
+def _int_sublayer_fwd(qp, x32, plans: qplans.LayerPlans, cfg: ArchConfig,
+                      kind, rope_tab, positions, causal, memory8, backend):
+    """Pre-norm integer sublayer.  x32: (B,S,D) int32 at s_res."""
+    mix, ff, has_cross = kind
+    h8 = il.int_norm(qp["norm1"], x32, plans.norm, backend)
+    if mix == "attn":
+        a32 = il.int_attn_fwd(qp["attn"], h8, plans.attn, cfg, rope_tab,
+                              positions, causal=causal, window=cfg.window,
+                              backend=backend)
+    elif mix == "cross":
+        a32 = il.int_attn_fwd(qp["attn"], h8, plans.cross, cfg, None,
+                              positions, causal=False, memory8=memory8,
+                              backend=backend)
+    else:
+        out, _ = il.int_mamba_prefill(qp["ssm"], h8, plans.mamba, cfg,
+                                      backend=backend)
+        a32 = out
+    x32 = _residual_add(x32, a32, cfg)
+    if has_cross:
+        h8 = il.int_norm(qp["norm_cross"], x32, plans.norm, backend)
+        c32 = il.int_attn_fwd(qp["cross"], h8, plans.cross, cfg, None,
+                              positions, causal=False, memory8=memory8,
+                              backend=backend)
+        x32 = _residual_add(x32, c32, cfg)
+    if ff is not None:
+        h8 = il.int_norm(qp["norm2"], x32, plans.norm, backend)
+        if ff == "moe":
+            f32 = il.int_moe_fwd(qp["moe"], h8, plans.moe, cfg, backend)
+        else:
+            f32 = il.int_ffn_fwd(qp["ffn"], h8, plans.ffn, cfg, backend)
+        x32 = _residual_add(x32, f32, cfg)
+    return x32
+
+
+def embed_int(qparams, tokens, plans: qplans.LayerPlans, cfg: ArchConfig):
+    e8 = jnp.take(qparams["embed_w8"], tokens, axis=0).astype(jnp.int32)
+    x32 = plans.embed.dn_res(e8)
+    return shard(x32, "batch", "seq", "embed")
+
+
+def quantize_memory(mem_f, cfg: ArchConfig):
+    """Float boundary for stubbed frontends: img/audio embeddings -> int8."""
+    q = jnp.round(mem_f.astype(jnp.float32) / cfg.s_act8)
+    return jnp.clip(q, -127, 127).astype(jnp.int8)
+
+
+def logits_int(qparams, x32, plans: qplans.LayerPlans, cfg: ArchConfig,
+               backend):
+    h8 = il.int_norm(qparams["final_norm"], x32, plans.final_norm, backend)
+    head_plan = qplans.LinearPlan(cfg.s_act8, 0.0, 32, 0, 0, cfg.d_model)
+    acc = il.int_linear(h8, qparams["head"], head_plan, backend)
+    # host-side dequant boundary: float per-channel scales
+    return acc.astype(jnp.float32) * qparams["head_scale"][None] \
+        * cfg.s_act8
+
+
+def int_prefill(qparams, batch, plans: qplans.LayerPlans, cfg: ArchConfig,
+                backend="ref", return_cache=False, cache_len: int = 0,
+                rope_tab=None):
+    """Full-sequence integer forward; returns last-position float logits
+    (+ decode caches when ``return_cache``).
+
+    ``rope_tab``: int32 (cos, sin) design tables passed as *arguments* so
+    they are inputs, not multi-MB HLO constants."""
+    gl, ng, kinds = layer_group_spec(cfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    memory8 = None
+    if cfg.family == "encdec":
+        memory8 = _int_encoder(qparams, batch["src_embeds"], plans, cfg,
+                               backend)
+    elif cfg.family == "vlm":
+        memory8 = quantize_memory(batch["img_embeds"], cfg)
+    if rope_tab is None and cfg.pos == "rope":
+        rope_tab = il.build_rope_table(max(s, cache_len) + 1, cfg.hd,
+                                       cfg.rope_theta)
+    positions = jnp.arange(s)
+    x32 = embed_int(qparams, tokens, plans, cfg)
+
+    def body(x32, qp_group):
+        for j, kind in enumerate(kinds):
+            x32 = _int_sublayer_fwd(qp_group[j], x32, plans, cfg, kind,
+                                    rope_tab, positions, cfg.is_causal,
+                                    memory8, backend)
+        return x32, None
+
+    x32, _ = jax.lax.scan(body, x32, tuple(qparams["layers"]))
+    last = x32[:, -1:, :]
+    logits = logits_int(qparams, last, plans, cfg, backend)[:, 0]
+    if not return_cache:
+        return logits
+    cache = build_cache_from_prefill(qparams, batch, plans, cfg, backend,
+                                     cache_len or s)
+    return logits, cache
+
+
+def _int_encoder(qparams, src_embeds, plans, cfg: ArchConfig, backend):
+    mem8 = quantize_memory(src_embeds, cfg)
+    # boundary embeddings are on the s_act8 grid -> bring to the residual bus
+    dn = qplans.fit_dyadic(cfg.s_act8 / cfg.s_res, 127)
+    x32 = dn(mem8.astype(jnp.int32))
+    positions = jnp.arange(mem8.shape[1])
+
+    def body(x32, qp):
+        x32 = _int_sublayer_fwd(qp, x32, plans, cfg,
+                                ("attn", "ffn", False), None, positions,
+                                False, None, backend)
+        return x32, None
+
+    enc = qparams["enc_layers"]
+    x32, _ = jax.lax.scan(body, x32, enc[0] if isinstance(enc, list)
+                          else enc)
+    return il.int_norm(qparams["enc_final_norm"], x32, plans.norm, backend)
+
+
+# ============================================================ decode =======
+
+def init_decode_cache(cfg: ArchConfig, batch: int, cache_len: int,
+                      memory8=None, qparams=None, plans=None,
+                      backend="ref"):
+    """Per-sublayer-position stacked caches (scan-compatible)."""
+    gl, ng, kinds = layer_group_spec(cfg)
+    L = min(cache_len, cfg.window) if cfg.window > 0 else cache_len
+    caches = []
+    for j, (mix, ff, has_cross) in enumerate(kinds):
+        c: Dict[str, Any] = {}
+        if mix == "attn":
+            c["k8"] = jnp.zeros((ng, batch, L, cfg.n_kv_heads, cfg.hd),
+                                jnp.int8)
+            c["v8"] = jnp.zeros_like(c["k8"])
+        elif mix == "ssm":
+            st = il.init_int_mamba_state(cfg, batch)
+            c["h"] = jnp.broadcast_to(st.h, (ng,) + st.h.shape)
+            c["conv"] = jnp.broadcast_to(st.conv, (ng,) + st.conv.shape)
+        if (mix == "cross" or has_cross) and memory8 is not None:
+            # precompute cross K/V once per sublayer position
+            kv = []
+            for g in range(ng):
+                qp = jax.tree.map(lambda t: t[g], qparams["layers"][j])
+                src = qp["cross"] if has_cross else qp["attn"]
+                sk = memory8.shape[1]
+                k8 = il.int_linear(memory8, src["wk"],
+                                   plans.cross.qkv, backend)
+                v8 = il.int_linear(memory8, src["wv"],
+                                   plans.cross.qkv, backend)
+                kv.append((k8.reshape(batch, sk, cfg.n_kv_heads, cfg.hd),
+                           v8.reshape(batch, sk, cfg.n_kv_heads, cfg.hd)))
+            c["ck8"] = jnp.stack([a for a, _ in kv])
+            c["cv8"] = jnp.stack([b for _, b in kv])
+        caches.append(c)
+    return caches
+
+
+def _int_sublayer_decode(qp, cache, x32, plans, cfg: ArchConfig, kind,
+                         rope_tab, pos, backend):
+    mix, ff, has_cross = kind
+    new_cache = dict(cache)
+    h8 = il.int_norm(qp["norm1"], x32, plans.norm, backend)
+    if mix == "attn":
+        a32, kv = il.int_attn_decode(qp["attn"], h8, cache, pos,
+                                     plans.attn, cfg, rope_tab,
+                                     window=cfg.window, backend=backend)
+        new_cache.update(kv)
+    elif mix == "cross":
+        a32 = _cross_decode(qp["attn"], h8, cache, plans, cfg, pos, backend)
+    else:
+        st = il.IntMambaState(cache["h"], cache["conv"])
+        a32_t, st = il.int_mamba_step(qp["ssm"], h8[:, 0], st, plans.mamba,
+                                      cfg, backend)
+        a32 = a32_t[:, None]
+        new_cache.update({"h": st.h, "conv": st.conv})
+    x32 = _residual_add(x32, a32, cfg)
+    if has_cross:
+        h8 = il.int_norm(qp["norm_cross"], x32, plans.norm, backend)
+        c32 = _cross_decode(qp["cross"], h8, cache, plans, cfg, pos,
+                            backend)
+        x32 = _residual_add(x32, c32, cfg)
+    if ff is not None:
+        h8 = il.int_norm(qp["norm2"], x32, plans.norm, backend)
+        if ff == "moe":
+            f32 = il.int_moe_fwd(qp["moe"], h8, plans.moe, cfg, backend,
+                                 group_size=1)
+        else:
+            f32 = il.int_ffn_fwd(qp["ffn"], h8, plans.ffn, cfg, backend)
+        x32 = _residual_add(x32, f32, cfg)
+    return x32, new_cache
+
+
+def _cross_decode(qp, h8, cache, plans, cfg, pos, backend):
+    from repro.core import attention as iattn
+    b = h8.shape[0]
+    q8 = il.int_linear(h8, qp["wq"], plans.cross.qkv, backend) \
+        .reshape(b, 1, cfg.n_heads, cfg.hd)
+    rep = cfg.q_group
+    k8 = jnp.repeat(cache["ck8"], rep, 2) if rep > 1 else cache["ck8"]
+    v8 = jnp.repeat(cache["cv8"], rep, 2) if rep > 1 else cache["cv8"]
+    valid = jnp.full((b,), k8.shape[1], jnp.int32)
+    o8 = iattn.i_attention_decode(q8, k8, v8, plans.cross.attn, valid)
+    return il.int_linear(o8.astype(jnp.int8).reshape(b, 1, -1), qp["wo"],
+                         plans.cross.out, backend)
+
+
+def int_decode_step(qparams, caches, tokens, pos, plans, cfg: ArchConfig,
+                    rope_tab=None, backend="ref"):
+    """tokens: (B,) int32; pos: (B,) int32.  Returns (logits, caches).
+
+    One scan over layer groups; inside the body the ``gl`` sublayers run in
+    architectural order (same traversal as prefill)."""
+    gl, ng, kinds = layer_group_spec(cfg)
+    x32 = embed_int(qparams, tokens[:, None], plans, cfg)
+
+    def body(x32, xs):
+        qp_group, cache_group = xs
+        new_group = []
+        for j, kind in enumerate(kinds):
+            x32, nc = _int_sublayer_decode(qp_group[j], cache_group[j],
+                                           x32, plans, cfg, kind, rope_tab,
+                                           pos, backend)
+            new_group.append(nc)
+        return x32, tuple(new_group)
+
+    x32, new_caches = jax.lax.scan(
+        body, x32, (tuple(qparams["layers"]), tuple(caches)))
+    logits = logits_int(qparams, x32, plans, cfg, backend)[:, 0]
+    return logits, list(new_caches)
+
+
+def build_cache_from_prefill(qparams, batch, plans, cfg, backend,
+                             cache_len):
+    """Serving-engine helper: run prefill token-by-token into the decode
+    cache (kept simple; the engine uses it for short prompts)."""
+    gl, ng, kinds = layer_group_spec(cfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    memory8 = None
+    if cfg.family == "vlm":
+        memory8 = quantize_memory(batch["img_embeds"], cfg)
+    elif cfg.family == "encdec":
+        memory8 = _int_encoder(qparams, batch["src_embeds"], plans, cfg,
+                               backend)
+    caches = init_decode_cache(cfg, b, cache_len, memory8, qparams, plans,
+                               backend)
+    rope_tab = il.build_rope_table(cache_len + 1, cfg.hd, cfg.rope_theta) \
+        if cfg.pos == "rope" else None
+
+    def step(carry, t):
+        caches = carry
+        tok = jax.lax.dynamic_index_in_dim(tokens, t, 1, keepdims=False)
+        pos = jnp.full((b,), t, jnp.int32)
+        logits, caches = int_decode_step(qparams, caches, tok, pos, plans,
+                                         cfg, rope_tab, backend)
+        return caches, logits
+
+    caches, _ = jax.lax.scan(step, caches, jnp.arange(s))
+    return caches

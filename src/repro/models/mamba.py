@@ -1,0 +1,193 @@
+"""Mamba-2 (SSD, state-space duality) blocks — float (train/QAT) and
+integer (serve) paths.
+
+Float path: the chunk-parallel SSD algorithm (intra-chunk quadratic form +
+inter-chunk state recurrence) — O(L * Lc) work, scan over chunks.
+
+Integer path (DESIGN.md §6, mamba row): the in/out projections and the
+depthwise conv are INT8 matmuls with dyadic requant (that is ~85 % of the
+FLOPs); the recurrence itself runs in int32 fixed point with
+  * Δt = i_softplus(dt_raw + bias)        (paper-style primitive reuse)
+  * decay = i_exp(-Δt * A) as a 2^-15 fraction (multiply + shift update)
+  * state h clipped at a design-time qmax (saturating accumulator).
+The paper's softmax/GELU/LayerNorm units have no work here — documented as
+the partial-inapplicability case in DESIGN.md §6.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import activations as iact
+from repro.core import intmath
+from repro.core.dyadic import Dyadic, clip_to_bits, fit_dyadic
+from repro.distributed.sharding import shard, shard_residual
+from repro.models.common import ArchConfig
+from repro.models.layers import _init, maybe_fq, fq_weight
+
+
+def proj_width(cfg: ArchConfig) -> int:
+    di = cfg.ssm_d_inner
+    return 2 * di + 2 * cfg.ssm_groups * cfg.ssm_state + cfg.ssm_heads
+
+
+def init_mamba(key, cfg: ArchConfig, dtype):
+    ks = jax.random.split(key, 6)
+    d, di = cfg.d_model, cfg.ssm_d_inner
+    h = cfg.ssm_heads
+    conv_ch = di + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "in_proj": _init(ks[0], (d, proj_width(cfg)), dtype),
+        "conv_w": _init(ks[1], (cfg.ssm_conv, conv_ch), dtype, scale=3.0),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (h,), jnp.float32)
+                    * (math.log(0.1) - math.log(0.001))
+                    + math.log(0.001)))),
+        "norm_gamma": jnp.ones((di,), dtype),
+        "out_proj": _init(ks[3], (di, d), dtype),
+    }
+
+
+def _split_proj(zxbcdt, cfg: ArchConfig):
+    di, g, n, h = (cfg.ssm_d_inner, cfg.ssm_groups, cfg.ssm_state,
+                   cfg.ssm_heads)
+    z, x, B, C, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + g * n, 2 * di + 2 * g * n], axis=-1)
+    return z, x, B, C, dt
+
+
+def _conv1d(xbc, w, state=None):
+    """Causal depthwise conv, width K. xbc: (B,L,C); w: (K,C).
+
+    With ``state`` (B,K-1,C): decode mode, returns (out, new_state)."""
+    k = w.shape[0]
+    if state is not None:
+        full = jnp.concatenate([state, xbc], axis=1)
+        out = sum(full[:, i:i + xbc.shape[1]] * w[i] for i in range(k))
+        return out, full[:, -(k - 1):]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    return sum(pad[:, i:i + xbc.shape[1]] * w[i] for i in range(k)), None
+
+
+def _segsum(x):
+    """Stable segment-sum: out[..., i, j] = sum_{j < m <= i} x[..., m]."""
+    t = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, h0=None):
+    """Chunk-parallel SSD.  x:(b,l,h,p) dt:(b,l,h) A:(h,) B,C:(b,l,g,n).
+
+    Returns (y, h_last).  h: (b,h,p,n)."""
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert l % chunk == 0
+    nc = l // chunk
+    rep = h // g
+    xs = x.reshape(b, nc, chunk, h, p)
+    dts = dt.reshape(b, nc, chunk, h)
+    Bs = jnp.repeat(B.reshape(b, nc, chunk, g, n), rep, axis=3)
+    Cs = jnp.repeat(C.reshape(b, nc, chunk, g, n), rep, axis=3)
+    dtA = dts * A[None, None, None, :]                  # (b,nc,c,h) <= 0
+    ca = jnp.cumsum(dtA, axis=2)
+
+    # intra-chunk (diag) term
+    L = jnp.exp(_segsum(dtA.transpose(0, 1, 3, 2)))     # (b,nc,h,c,c)
+    scores = jnp.einsum("bzchn,bzdhn->bzhcd", Cs, Bs) * L
+    y_diag = jnp.einsum("bzhcd,bzdh,bzdhp->bzchp", scores, dts, xs)
+
+    # chunk states
+    decay_to_end = jnp.exp(ca[:, :, -1:, :] - ca)       # (b,nc,c,h)
+    S = jnp.einsum("bzchn,bzch,bzch,bzchp->bzhnp",
+                   Bs, decay_to_end, dts, xs)           # (b,nc,h,n,p)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(jnp.sum(dtA, axis=2))         # (b,nc,h)
+
+    def step(hprev, inp):
+        S_c, dec = inp
+        return hprev * dec[..., None, None] + S_c, hprev
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, n, p), x.dtype)
+    h_last, h_prevs = jax.lax.scan(
+        step, h0, (S.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)          # (b,nc,h,n,p)
+
+    y_off = jnp.einsum("bzchn,bzch,bzhnp->bzchp",
+                       Cs, jnp.exp(ca), h_prevs)
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, h_last
+
+
+def mamba_fwd(p, u, cfg: ArchConfig, qat=False, chunk: int = 128,
+              h0=None, conv_state=None, return_state=False):
+    """Float/QAT forward. u: (B,L,D) -> (B,L,D)."""
+    b, l, d = u.shape
+    di = cfg.ssm_d_inner
+    uq = maybe_fq(u, cfg.s_act8, enabled=qat)
+    zxbcdt = jnp.einsum("bld,dw->blw", uq, fq_weight(p["in_proj"], 1, qat))
+    z, x, B, C, dt = _split_proj(zxbcdt, cfg)
+    xbc = jnp.concatenate([x, B, C], axis=-1)
+    xbc, new_conv = _conv1d(xbc, p["conv_w"].astype(u.dtype), conv_state)
+    xbc = jax.nn.silu(xbc)
+    # QAT: align the float path with the integer grids (x/B/C on the
+    # +-16 int8 grid, Δt saturating at 2.0 on the 2^-12 grid)
+    xbc = maybe_fq(xbc, 16.0 / 127.0, enabled=qat)
+    x, B, C = jnp.split(xbc, [di, di + cfg.ssm_groups * cfg.ssm_state],
+                        axis=-1)
+    h = cfg.ssm_heads
+    x = x.reshape(b, l, h, cfg.ssm_head_dim)
+    B = B.reshape(b, l, cfg.ssm_groups, cfg.ssm_state)
+    C = C.reshape(b, l, cfg.ssm_groups, cfg.ssm_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+    if qat:
+        dt = jnp.minimum(dt, 2.0)
+    A = -jnp.exp(p["A_log"])
+    x = shard(x, "batch", "seq", "heads", None)
+    ck = min(chunk, l)
+    while l % ck:
+        ck -= 1
+    y, h_last = ssd_chunked(x.astype(jnp.float32), dt, A,
+                            B.astype(jnp.float32), C.astype(jnp.float32),
+                            ck, h0=h0)
+    y = y + x.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b, l, di).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    # RMSNorm before out-projection (mamba2)
+    yf = y.astype(jnp.float32)
+    y = (yf / jnp.sqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+         * p["norm_gamma"]).astype(u.dtype)
+    y = maybe_fq(y, cfg.s_act8, enabled=qat)
+    out = jnp.einsum("bld,dw->blw", y, fq_weight(p["out_proj"], 1, qat))
+    out = shard_residual(out)
+    if return_state:
+        return out, (h_last, new_conv)
+    return out
+
+
+def mamba_step(p, u_t, state, cfg: ArchConfig):
+    """Float single-token decode step.  u_t: (B,D); state: (h, conv)."""
+    h_prev, conv_state = state
+    out, (h_new, conv_new) = mamba_fwd(
+        p, u_t[:, None, :], cfg, qat=False, chunk=1, h0=h_prev,
+        conv_state=conv_state, return_state=True)
+    return out[:, 0], (h_new, conv_new)
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    h = jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+                  dtype)
+    conv_ch = cfg.ssm_d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    conv = jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype)
+    return h, conv

@@ -1,0 +1,6 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedule import (constant_schedule, cosine_schedule,
+                                  linear_warmup_cosine)
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "constant_schedule",
+           "cosine_schedule", "linear_warmup_cosine"]

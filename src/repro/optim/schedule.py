@@ -1,0 +1,26 @@
+"""Learning-rate schedules (scalar jnp functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(value: float = 1.0):
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def cosine_schedule(total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.minimum(step.astype(jnp.float32), total_steps) / total_steps
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return final_frac + (1 - final_frac) * cos
+    return fn
+
+
+def linear_warmup_cosine(warmup: int, total_steps: int,
+                         final_frac: float = 0.1):
+    cos = cosine_schedule(max(total_steps - warmup, 1), final_frac)
+
+    def fn(step):
+        w = jnp.minimum(step.astype(jnp.float32) / max(warmup, 1), 1.0)
+        return w * cos(jnp.maximum(step - warmup, 0))
+    return fn

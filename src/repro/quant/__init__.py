@@ -1,0 +1,1 @@
+from repro.quant import calibrate, convert, plans, qat  # noqa: F401

@@ -1,0 +1,46 @@
+"""Activation-range calibration (design-time, paper §III-A).
+
+Runs the float model over calibration batches and collects per-tensor-kind
+activation absmax statistics.  The framework's integer plans use fixed
+design grids (s_act8/s_act10/s_res, DESIGN.md §4); calibration verifies the
+activations fit those grids and returns the measured headroom so configs
+can be tightened per deployment.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ArchConfig
+
+
+def calibrate_ranges(forward: Callable, params, batches: Iterable,
+                     cfg: ArchConfig, percentile: float = 99.9
+                     ) -> Dict[str, float]:
+    """Collects |activation| statistics at the float model's boundaries.
+
+    ``forward(params, batch) -> (logits, aux)``.  Returns measured absmax
+    per tensor kind plus the implied clipping fractions for the design
+    grids.
+    """
+    stats = {"logits_absmax": 0.0, "resid_absmax": 0.0}
+    n = 0
+    for batch in batches:
+        logits, _ = forward(params, batch)
+        lmax = float(jnp.percentile(jnp.abs(logits), percentile))
+        stats["logits_absmax"] = max(stats["logits_absmax"], lmax)
+        n += 1
+    stats["n_batches"] = n
+    # design-grid coverage summary
+    stats["s_act8_cover"] = 8.0          # grid covers +-8.0
+    stats["s_res_cover"] = cfg.s_res * cfg.qmax_res
+    return stats
+
+
+def check_residual_fit(x_resid, cfg: ArchConfig) -> float:
+    """Fraction of residual-stream values clipped by the s_res grid."""
+    lim = cfg.s_res * cfg.qmax_res
+    return float(jnp.mean((jnp.abs(x_resid) > lim).astype(jnp.float32)))

@@ -1,0 +1,213 @@
+"""Float checkpoint -> SwiftTron integer parameters (design-time flow,
+paper Fig. 17: HuggingFace/PyTorch models + I-BERT quantization -> the
+accelerator's constants).
+
+Every weight becomes int8 with per-out-channel scales folded into int32
+dyadic multiplier vectors; biases become int32 at the accumulator scale;
+norm gammas/betas become the integer constants of the i-LayerNorm unit.
+The result is (qparams, plans): the pytree of integer arrays and the
+frozen static plan set.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import norms
+from repro.models.common import ArchConfig
+from repro.models.transformer import layer_group_spec
+from repro.quant import plans as qplans
+
+Pytree = Any
+
+
+def _pc_scales(w: np.ndarray, out_axis: int) -> np.ndarray:
+    axes = tuple(i for i in range(w.ndim) if i != out_axis % w.ndim)
+    return np.maximum(np.abs(w).max(axis=axes), 1e-8) / 127.0
+
+
+def _q_linear(w, plan: qplans.LinearPlan, bias=None, stacked: bool = False):
+    """w: (K, N) or stacked (..., K, N) -> {"w8", "b_mult"[, "bias32"]}.
+
+    Per-channel scales along the last axis; leading axes (layer-stack /
+    expert) keep their own scale vectors.
+    """
+    w = np.asarray(jax.device_get(w), np.float64)
+    s = np.maximum(np.abs(w).max(axis=-2), 1e-8) / 127.0       # (..., N)
+    w8 = np.clip(np.round(w / s[..., None, :]), -127, 127).astype(np.int8)
+    out = {"w8": jnp.asarray(w8)}
+    if plan.s_out != 0.0:
+        ratios = plan.s_in * s / plan.s_out
+        b = np.round(ratios * (1 << plan.c))
+        assert (np.abs(b) < 2 ** 31).all(), "per-channel multiplier overflow"
+        out["b_mult"] = jnp.asarray(b.astype(np.int32))
+    if bias is not None:
+        bias = np.asarray(jax.device_get(bias), np.float64)
+        out["bias32"] = jnp.asarray(
+            np.round(bias / (plan.s_in * s)).astype(np.int32))
+    return out, s
+
+
+def _q_attn_w(w, plan):
+    """(D,H,hd) or stacked (G,D,H,hd) -> flatten head dims."""
+    w = np.asarray(jax.device_get(w), np.float64)
+    flat = w.reshape(*w.shape[:-2], -1)
+    q, _ = _q_linear(flat, plan)
+    return q
+
+
+def _q_norm(p, plan: norms.INormPlan):
+    g, b = norms.quantize_norm_weights(
+        jnp.asarray(np.asarray(jax.device_get(p["gamma"]), np.float32)),
+        jnp.asarray(np.asarray(jax.device_get(p["beta"]), np.float32))
+        if "beta" in p else None, plan)
+    out = {"gamma_q": g}
+    if b is not None:
+        out["beta_q"] = b
+    return out
+
+
+def _q_attn(p, plans: qplans.AttnPlan):
+    d = p["wq"].shape[-3]
+    out = {
+        "wq": _q_attn_w(p["wq"], plans.qkv),
+        "wk": _q_attn_w(p["wk"], plans.qkv),
+        "wv": _q_attn_w(p["wv"], plans.qkv),
+    }
+    wo = np.asarray(jax.device_get(p["wo"]), np.float64)
+    wo = wo.reshape(*wo.shape[:-3], -1, wo.shape[-1])
+    out["wo"], _ = _q_linear(wo, plans.out)
+    for name in ("bq", "bk", "bv"):
+        if name in p:
+            w_key = "w" + name[1]
+            bias = np.asarray(jax.device_get(p[name]), np.float64)
+            bias = bias.reshape(*bias.shape[:-2], -1)
+            w = np.asarray(jax.device_get(p[w_key]), np.float64)
+            w = w.reshape(*w.shape[:-2], -1)
+            s = np.maximum(np.abs(w).max(axis=-2), 1e-8) / 127.0
+            out[w_key]["bias32"] = jnp.asarray(
+                np.round(bias / (plans.qkv.s_in * s)).astype(np.int32))
+    return out
+
+
+def _q_ffn(p, plans: qplans.FfnPlan):
+    out = {}
+    out["w1"], s1 = _q_linear(p["w1"], plans.up,
+                              bias=p.get("b1"))
+    if "w3" in p:
+        out["w3"], _ = _q_linear(p["w3"], plans.up)
+    out["w2"], _ = _q_linear(p["w2"], plans.down, bias=p.get("b2"))
+    return out
+
+
+def _q_moe(p, plans: qplans.MoePlan):
+    out = {}
+    w = np.asarray(jax.device_get(p["router"]), np.float64)
+    s_router = np.abs(w).max() / 127.0
+    out["router"] = {"w8": jnp.asarray(
+        np.clip(np.round(w / s_router), -127, 127).astype(np.int8))}
+    out["w1"], _ = _q_linear(p["w1"], plans.expert.up)
+    if "w3" in p:
+        out["w3"], _ = _q_linear(p["w3"], plans.expert.up)
+    out["w2"], _ = _q_linear(p["w2"], plans.expert.down)
+    if "shared" in p:
+        out["shared"] = _q_ffn(p["shared"], plans.shared)
+    return out, s_router
+
+
+def _q_mamba(p, mp: qplans.MambaPlan, cfg: ArchConfig):
+    di = cfg.ssm_d_inner
+    w = np.asarray(jax.device_get(p["in_proj"]), np.float64)
+    n_zxbc = w.shape[-1] - cfg.ssm_heads
+    out = {}
+    out["in_proj"], _ = _q_linear(w[..., :n_zxbc], mp.in_proj)
+    wdt = w[..., n_zxbc:]
+    s_dtw = float(np.abs(wdt).max()) / 127.0
+    out["dt_proj"] = {"w8": jnp.asarray(
+        np.clip(np.round(wdt / s_dtw), -127, 127).astype(np.int8))}
+    cw = np.asarray(jax.device_get(p["conv_w"]), np.float64)
+    s_conv = float(np.abs(cw).max()) / 127.0
+    out["conv_w8"] = jnp.asarray(
+        np.clip(np.round(cw / s_conv), -127, 127).astype(np.int8))
+    a = np.exp(np.asarray(jax.device_get(p["A_log"]), np.float64))
+    out["A_q"] = jnp.asarray(np.round(a / mp.s_A).astype(np.int32))
+    # D on the 2^-16 state grid (D*x enters y in h units)
+    out["D_q"] = jnp.asarray(np.round(
+        np.asarray(jax.device_get(p["D"]), np.float64) / mp.s_h)
+        .astype(np.int32))
+    out["dt_bias_q"] = jnp.asarray(np.round(
+        np.asarray(jax.device_get(p["dt_bias"]), np.float64)
+        / (mp.in_proj.s_in * s_dtw)).astype(np.int32))
+    g, _ = norms.quantize_norm_weights(
+        jnp.asarray(np.asarray(jax.device_get(p["norm_gamma"]),
+                               np.float32)), None, mp.norm)
+    out["norm_gamma_q"] = g
+    out["out_proj"], _ = _q_linear(p["out_proj"], mp.out_proj)
+    return out, s_dtw, s_conv
+
+
+def _q_sublayer(p, plans: qplans.LayerPlans, cfg: ArchConfig, kind,
+                calib_sink: dict):
+    mix, ff, has_cross = kind
+    out = {"norm1": _q_norm(p["norm1"], plans.norm)}
+    if mix in ("attn", "cross"):
+        out["attn"] = _q_attn(p["attn"],
+                              plans.attn if mix == "attn" else plans.cross)
+    else:
+        out["ssm"], s_dtw, s_conv = _q_mamba(p["ssm"], plans.mamba, cfg)
+        calib_sink["s_dtw"] = s_dtw
+        calib_sink["s_conv"] = s_conv
+    if has_cross:
+        out["cross"] = _q_attn(p["cross"], plans.cross)
+        out["norm_cross"] = _q_norm(p["norm_cross"], plans.norm)
+    if ff == "moe":
+        out["moe"], s_router = _q_moe(p["moe"], plans.moe)
+        calib_sink["s_router"] = s_router
+    elif ff == "ffn":
+        out["norm2"] = _q_norm(p["norm2"], plans.norm)
+        out["ffn"] = _q_ffn(p["ffn"], plans.ffn)
+    if ff == "moe":
+        out["norm2"] = _q_norm(p["norm2"], plans.norm)
+    return out
+
+
+def quantize_params(params: Pytree, cfg: ArchConfig
+                    ) -> Tuple[Pytree, qplans.LayerPlans]:
+    """Float params -> (qparams, plans).  Two passes: measure the per-tensor
+    calibration scales, freeze the plans, then quantize everything."""
+    emb = np.asarray(jax.device_get(params["embed"]), np.float64)
+    calib = {"s_emb": float(np.abs(emb).max()) / 127.0}
+    # first pass purely to collect s_router / s_dtw / s_conv
+    probe_plans = qplans.build_layer_plans(cfg, calib)
+    gl, ng, kinds = layer_group_spec(cfg)
+    sink: Dict[str, float] = {}
+    for j, kind in enumerate(kinds):
+        _q_sublayer(jax.tree.map(lambda t: t[:1], params["layers"][j]),
+                    probe_plans, cfg, kind, sink)
+    calib.update(sink)
+    plans = qplans.build_layer_plans(cfg, calib)
+
+    qparams: Dict[str, Pytree] = {}
+    qparams["embed_w8"] = jnp.asarray(np.clip(
+        np.round(emb / plans.embed.s_emb), -127, 127).astype(np.int8))
+    qparams["final_norm"] = _q_norm(params["final_norm"], plans.final_norm)
+    head_w = emb.T if cfg.tie_embeddings else np.asarray(
+        jax.device_get(params["lm_head"]), np.float64)
+    s_head = _pc_scales(head_w, 1)
+    qparams["head"] = {"w8": jnp.asarray(np.clip(
+        np.round(head_w / s_head[None, :]), -127, 127).astype(np.int8))}
+    qparams["head_scale"] = jnp.asarray(s_head.astype(np.float32))
+    qparams["layers"] = [
+        _q_sublayer(params["layers"][j], plans, cfg, kinds[j], {})
+        for j in range(gl)
+    ]
+    if cfg.family == "encdec":
+        qparams["enc_layers"] = [
+            _q_sublayer(params["enc_layers"][0], plans, cfg,
+                        ("attn", "ffn", False), {})]
+        qparams["enc_final_norm"] = _q_norm(params["enc_final_norm"],
+                                            plans.norm)
+    return qparams, plans

@@ -1,0 +1,91 @@
+"""Quantization-aware training: the producer of SwiftTron checkpoints.
+
+``loss_fn`` runs the float model with straight-through fake quantization on
+every tensor the accelerator sees in INT8/INT10 (weights per-channel,
+activations per-tensor on the design grids), so the trained weights land on
+the integer grid that ``quant.convert`` freezes.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig
+from repro.models.transformer import forward_float
+
+
+def cross_entropy(logits, labels, vocab: int, z_loss: float = 1e-4):
+    """Token CE with padding mask (label < 0 ignored) and z-loss.
+
+    Sharding-aware: the gold logit is a one-hot contraction (not
+    take_along_axis) so a vocab-sharded logits tensor reduces with a psum
+    instead of an all-gather of the full (B,S,V) array."""
+    lf = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+    onehot = jax.nn.one_hot(jnp.maximum(labels, 0), logits.shape[-1],
+                            dtype=lf.dtype)
+    gold = jnp.sum(lf * onehot, axis=-1)
+    nll = lse - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = nll * mask
+    zl = z_loss * jnp.square(lse) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return (jnp.sum(nll) + jnp.sum(zl)) / denom
+
+
+def chunked_ce(x, w, labels, cfg: ArchConfig, chunk: int = 512,
+               z_loss: float = 1e-4):
+    """Sequence-chunked CE: logits are (re)computed per chunk under remat,
+    so the full (B,S,V) tensor never materialises — per-chunk peak is
+    B * chunk * V / vocab-shards."""
+    from repro.distributed.sharding import shard
+    b, s, d = x.shape
+    ck = min(chunk, s)
+    while s % ck:
+        ck -= 1
+    n = s // ck
+
+    def piece(args):
+        xc, lc = args
+        logits = jnp.einsum("bsd,dv->bsv", xc, w)
+        logits = shard(logits, "batch", "seq", "vocab")
+        lf = logits.astype(jnp.float32)
+        m = jax.lax.stop_gradient(jnp.max(lf, -1, keepdims=True))
+        lse = jnp.log(jnp.sum(jnp.exp(lf - m), -1)) + m[..., 0]
+        onehot = jax.nn.one_hot(jnp.maximum(lc, 0), logits.shape[-1],
+                                dtype=lf.dtype)
+        gold = jnp.sum(lf * onehot, -1)
+        mask = (lc >= 0).astype(jnp.float32)
+        nll = (lse - gold) * mask
+        zl = z_loss * jnp.square(lse) * mask
+        return jnp.sum(nll) + jnp.sum(zl), jnp.sum(mask)
+
+    piece = jax.remat(piece)
+    if n == 1:
+        tot, cnt = piece((x, labels))
+    else:
+        xs = x.reshape(b, n, ck, d).transpose(1, 0, 2, 3)
+        ls = labels.reshape(b, n, ck).transpose(1, 0, 2)
+        def step(c, a):
+            t, k = piece(a)
+            return (c[0] + t, c[1] + k), None
+
+        (tot, cnt), _ = jax.lax.scan(
+            step, (jnp.zeros(()), jnp.zeros(())), (xs, ls))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(params, batch, cfg: ArchConfig, qat: bool = True,
+            aux_weight: float = 0.01):
+    from repro.models import layers as fl
+    x, aux = forward_float(params, batch, cfg, qat=qat,
+                           return_hidden=True)
+    x = fl.norm_fwd(params["final_norm"], x, cfg)
+    x = fl.maybe_fq(x, cfg.s_act8, enabled=qat)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    w = fl.fq_weight(w, 1, qat)
+    loss = chunked_ce(x, w, batch["labels"], cfg)
+    return loss + aux_weight * aux, (loss, aux)

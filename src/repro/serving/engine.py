@@ -1,0 +1,140 @@
+"""Batched integer serving engine.
+
+The serving counterpart of the ASIC's control unit (§III-J): admits
+requests into fixed batch slots, runs the INT8 prefill/decode datapath
+(int8 KV caches = the paper's quantization applied to the cache), and
+retires finished sequences — a continuous-batching-lite scheduler suitable
+for the fixed-shape XLA world.
+
+Slots are recycled between requests without recompiling: every shape
+(batch, cache length) is fixed at engine construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import intlayers as il
+from repro.models import inttransformer as it
+from repro.models.common import ArchConfig
+from repro.quant import plans as qplans
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, qparams, plans: qplans.LayerPlans, cfg: ArchConfig,
+                 batch_size: int = 8, cache_len: int = 512,
+                 backend: str = "ref", seed: int = 0):
+        self.cfg = cfg
+        self.plans = plans
+        self.qparams = qparams
+        self.batch = batch_size
+        self.cache_len = cache_len
+        self.backend = backend
+        self.rng = np.random.default_rng(seed)
+        self.rope_tab = il.build_rope_table(cache_len + 1, cfg.hd,
+                                            cfg.rope_theta) \
+            if cfg.pos == "rope" else None
+        self.caches = it.init_decode_cache(cfg, batch_size, cache_len)
+        self.pos = np.zeros(batch_size, np.int32)
+        self.slots: List[Optional[Request]] = [None] * batch_size
+        self.queue: List[Request] = []
+        self._decode = jax.jit(self._decode_impl)
+
+    def _decode_impl(self, qparams, caches, tokens, pos):
+        return it.int_decode_step(qparams, caches, tokens, pos,
+                                  self.plans, self.cfg, self.rope_tab,
+                                  backend=self.backend)
+
+    # ------------------------------------------------------ scheduling ---
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.batch):
+            if self.slots[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[slot] = req
+                self._prefill_slot(slot, req)
+
+    def _prefill_slot(self, slot: int, req: Request):
+        """Prefill by streaming prompt tokens through decode (slot-local);
+        keeps every shape static."""
+        self.pos[slot] = 0
+        self._reset_slot_cache(slot)
+        for t in req.prompt[:-1]:
+            self._step_one(slot, t)
+        req._last_token = req.prompt[-1]
+
+    def _reset_slot_cache(self, slot: int):
+        def zero_slot(leaf):
+            if leaf.ndim >= 2 and leaf.shape[1] == self.batch:
+                return leaf.at[:, slot].set(0)
+            return leaf
+        self.caches = jax.tree.map(zero_slot, self.caches)
+
+    def _step_one(self, slot: int, token: int):
+        toks = np.zeros(self.batch, np.int32)
+        toks[slot] = token
+        pos = jnp.asarray(self.pos)
+        logits, self.caches = self._decode(self.qparams, self.caches,
+                                           jnp.asarray(toks), pos)
+        self.pos[slot] += 1
+        return np.asarray(logits[slot])
+
+    # ---------------------------------------------------------- decode ---
+
+    def step(self) -> int:
+        """One engine step: admit + one batched decode for live slots.
+        Returns the number of live requests."""
+        self._admit()
+        live = [i for i, r in enumerate(self.slots) if r is not None]
+        if not live:
+            return 0
+        toks = np.zeros(self.batch, np.int32)
+        for i in live:
+            toks[i] = self.slots[i]._last_token
+        logits, self.caches = self._decode(self.qparams, self.caches,
+                                           jnp.asarray(toks),
+                                           jnp.asarray(self.pos))
+        logits = np.asarray(logits)
+        for i in live:
+            req = self.slots[i]
+            self.pos[i] += 1
+            row = logits[i][:self.cfg.vocab]
+            if req.temperature <= 0:
+                nxt = int(np.argmax(row))
+            else:
+                p = np.exp((row - row.max()) / req.temperature)
+                p /= p.sum()
+                nxt = int(self.rng.choice(len(p), p=p))
+            req.out_tokens.append(nxt)
+            req._last_token = nxt
+            if len(req.out_tokens) >= req.max_new_tokens \
+                    or self.pos[i] >= self.cache_len - 1:
+                req.done = True
+                self.slots[i] = None
+                self.pos[i] = 0
+        return len(live)
+
+    def run_until_done(self, max_steps: int = 10000) -> List[Request]:
+        finished: List[Request] = []
+        for _ in range(max_steps):
+            if not self.queue and all(s is None for s in self.slots):
+                break
+            self.step()
+        return finished

@@ -1,0 +1,29 @@
+"""int8 comm-quant boundary (EXPERIMENTS.md §Perf C2): forward quantizes
+onto the int8 grid, gradients pass straight through."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import comm_quant_gather, _cq_gather
+
+
+def test_forward_quantizes():
+    x = jnp.asarray([0.03, -0.51, 7.99, -8.2], jnp.float32)
+    s = 8.0 / 127.0
+    out = np.asarray(_cq_gather(x, s))
+    want = np.clip(np.round(np.asarray(x) / s), -127, 127) * s
+    assert np.allclose(out, want, atol=1e-6)
+
+
+def test_straight_through_gradient():
+    x = jnp.linspace(-4.0, 4.0, 16)
+    s = 8.0 / 127.0
+    g = jax.grad(lambda v: jnp.sum(jnp.sin(_cq_gather(v, s))))(x)
+    g_ref = jnp.cos(_cq_gather(x, s))    # d/dx passes through the quant
+    assert np.allclose(np.asarray(g), np.asarray(g_ref), atol=1e-6)
+
+
+def test_disabled_without_mesh():
+    x = jnp.ones((4, 8))
+    out = comm_quant_gather(x, 0.1, enabled=True)   # no mesh -> identity
+    assert np.allclose(np.asarray(out), 1.0)

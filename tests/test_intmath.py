@@ -1,0 +1,70 @@
+"""Integer nonlinear primitives vs float oracles (paper §III-F/H/I)."""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import intmath
+
+
+def test_isqrt_exact_small():
+    n = np.arange(0, 100000, dtype=np.int32)
+    got = np.asarray(intmath.i_sqrt(jnp.asarray(n)))
+    want = np.array([math.isqrt(int(v)) for v in n])
+    assert np.array_equal(got, want)
+
+
+@settings(max_examples=300, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_isqrt_exact_property(n):
+    got = int(intmath.i_sqrt(jnp.asarray([n], jnp.int32))[0])
+    assert got == math.isqrt(n)
+
+
+def test_iexp_error_bound():
+    s = 2.0 ** -14
+    plan = intmath.make_iexp(s)
+    x = np.linspace(-25, 0, 20000)
+    q = np.round(x / s).astype(np.int32)
+    got = np.asarray(intmath.i_exp(jnp.asarray(q), plan)) * plan.s_out
+    ref = np.exp(q * s)
+    assert np.abs(got - ref).max() < 4e-3          # I-BERT-grade
+    rel = np.abs((got - ref) / np.maximum(ref, 1e-9))[x > -5]
+    assert rel.max() < 1e-2
+
+
+def test_iexp_monotone():
+    s = 2.0 ** -14
+    plan = intmath.make_iexp(s)
+    q = jnp.arange(-300000, 1, 37, dtype=jnp.int32)
+    out = np.asarray(intmath.i_exp(q, plan))
+    assert (np.diff(out) >= 0).all()
+
+
+def test_igelu_error_bound():
+    s = 8 / 1024
+    plan = intmath.make_igelu(s, 1024)
+    x = np.linspace(-8, 8, 4001)
+    q = np.round(x / s).astype(np.int32)
+    got = np.asarray(intmath.i_gelu(jnp.asarray(q), plan)) * plan.s_out
+    erf = np.vectorize(math.erf)
+    ref = 0.5 * x * (1 + erf(x / np.sqrt(2)))
+    assert np.abs(got - ref).max() < 3e-2          # paper/I-BERT-grade
+
+
+def test_int_bit_length():
+    n = jnp.asarray([0, 1, 2, 3, 4, 255, 256, 2**30, 2**31 - 1], jnp.int32)
+    got = np.asarray(intmath.int_bit_length(n))
+    want = [v.bit_length() for v in [0, 1, 2, 3, 4, 255, 256, 2**30,
+                                     2**31 - 1]]
+    assert np.array_equal(got, want)
+
+
+def test_iln1p():
+    s_in, s_out = 2.0 ** -15, 2.0 ** -12
+    plan = intmath.make_iln1p(s_in, s_out, 1 << 15)
+    e = np.linspace(0, 1, 2001)
+    q = np.round(e / s_in).astype(np.int32)
+    got = np.asarray(intmath.i_ln1p(jnp.asarray(q), plan)) * s_out
+    assert np.abs(got - np.log1p(e)).max() < 8e-3

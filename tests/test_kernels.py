@@ -1,0 +1,125 @@
+"""Per-kernel shape/dtype sweeps: pallas (interpret) vs ref.py oracles."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import attention as iattn
+from repro.core import intmath, norms
+from repro.core import softmax as ism
+from repro.core.dyadic import fit_dyadic
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("m,k,n,bm,bn,bk", [
+    (128, 256, 128, 128, 128, 256),
+    (256, 1024, 384, 128, 128, 256),
+    (64, 128, 512, 64, 128, 128),
+    (128, 896, 128, 128, 128, 128),
+])
+def test_int8_matmul_shapes(rng, m, k, n, bm, bn, bk):
+    x = rng.integers(-127, 128, (m, k)).astype(np.int8)
+    w = rng.integers(-127, 128, (k, n)).astype(np.int8)
+    bias = rng.integers(-2**18, 2**18, (n,)).astype(np.int32)
+    dn = fit_dyadic(1 / 4000.0, k * 127 * 127 + 2**18)
+    got = np.asarray(ops.int8_matmul(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(bias), dn=dn,
+        backend="pallas", bm=bm, bn=bn, bk=bk))
+    want = np.asarray(ref.ref_int8_matmul(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(bias), dn))
+    assert np.array_equal(got, want)
+
+
+def test_int8_matmul_perchannel(rng):
+    m, k, n = 128, 512, 256
+    x = rng.integers(-127, 128, (m, k)).astype(np.int8)
+    w = rng.integers(-127, 128, (k, n)).astype(np.int8)
+    bvec = rng.integers(1000, 30000, (n,)).astype(np.int32)
+    got = np.asarray(ops.int8_matmul(
+        jnp.asarray(x), jnp.asarray(w), None, b_vec=jnp.asarray(bvec),
+        c=28, pre=7, backend="pallas"))
+    want = np.asarray(ref.ref_int8_matmul_perchannel(
+        jnp.asarray(x), jnp.asarray(w), None, jnp.asarray(bvec), 28, 7))
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("rows,rowlen", [(8, 128), (32, 256), (5, 96)])
+def test_int_softmax_kernel(rng, rows, rowlen):
+    sp = ism.make_isoftmax(s_score=3.5e-4, qmax_score=128 * 127 * 127)
+    sc = rng.integers(-60000, 60000, (rows, rowlen)).astype(np.int32)
+    got = np.asarray(ops.int_softmax(jnp.asarray(sc), sp,
+                                     backend="pallas"))
+    want = np.asarray(ops.int_softmax(jnp.asarray(sc), sp, backend="ref"))
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("shape", [(512,), (3, 7, 512), (16, 1024)])
+def test_int_gelu_kernel(rng, shape):
+    s = 16 / 1024
+    plan = intmath.make_igelu(s, 1024)
+    dn = fit_dyadic(plan.s_out / (8 / 127), 1024 * 2 * plan.q_one)
+    q = rng.integers(-1024, 1025, shape).astype(np.int32)
+    got = np.asarray(ops.int_gelu(jnp.asarray(q), plan, dn,
+                                  backend="pallas"))
+    want = np.asarray(ops.int_gelu(jnp.asarray(q), plan, dn,
+                                   backend="ref"))
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("d,subtract_mean", [(768, True), (512, False),
+                                             (384, True)])
+def test_int_layernorm_kernel(rng, d, subtract_mean):
+    s = 8 / 1024
+    plan = norms.make_inorm(d, s, 1024, 2 / 127, 8 / 127,
+                            subtract_mean=subtract_mean)
+    gamma = rng.normal(1, 0.2, d).astype(np.float32)
+    beta = rng.normal(0, 0.2, d).astype(np.float32) if subtract_mean \
+        else None
+    qg, qb = norms.quantize_norm_weights(
+        jnp.asarray(gamma), jnp.asarray(beta) if beta is not None else
+        None, plan)
+    q = rng.integers(-1024, 1025, (16, d)).astype(np.int32)
+    got = np.asarray(ops.int_layernorm(jnp.asarray(q), qg, qb, plan,
+                                       backend="pallas"))
+    want = np.asarray(ops.int_layernorm(jnp.asarray(q), qg, qb, plan,
+                                        backend="ref"))
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("h,hkv,window", [(4, 2, 0), (4, 4, 0), (2, 1, 96),
+                                          (8, 2, 0)])
+def test_fused_attention_kernel(rng, h, hkv, window):
+    b, s, d = 2, 256, 64
+    plan = iattn.make_iattention(d, 8/127, 8/127, 4/127, 4/127)
+    q8 = np.clip(rng.normal(0, 40, (b, s, h, d)), -127, 127).astype(np.int8)
+    k8 = np.clip(rng.normal(0, 40, (b, s, hkv, d)), -127, 127) \
+        .astype(np.int8)
+    v8 = np.clip(rng.normal(0, 40, (b, s, hkv, d)), -127, 127) \
+        .astype(np.int8)
+    got = np.asarray(ops.int_attention(
+        jnp.asarray(q8), jnp.asarray(k8), jnp.asarray(v8), plan,
+        causal=True, window=window, backend="pallas", bq=64, bkv=64))
+    want = np.asarray(ops.int_attention(
+        jnp.asarray(q8), jnp.asarray(k8), jnp.asarray(v8), plan,
+        causal=True, window=window, backend="ref"))
+    diff = np.abs(got.astype(int) - want.astype(int))
+    # online rescaling vs exact normalisation: <=1% of elements off by >1
+    assert diff.max() <= 4
+    assert (diff > 1).mean() < 0.02
+
+
+def test_int8_matmul_wide_output_bits(rng):
+    """Regression: out_bits=11 results must stay int32 (the FFN up-proj);
+    an int8 out_dtype silently truncated them (see ops.int8_matmul)."""
+    from repro.quant.plans import make_linear_plan
+    import repro.models.intlayers as il
+    import jax
+    plan = make_linear_plan(8 / 127, 2 / 127, 16 / 1024, 128, out_bits=11)
+    x8 = jnp.asarray(rng.integers(-127, 128, (16, 128)), jnp.int8)
+    w = rng.normal(0, 0.1, (128, 256))
+    from repro.quant.convert import _q_linear
+    qw, _ = _q_linear(jnp.asarray(w), plan)
+    a = np.asarray(il.int_linear(x8, qw, plan, backend="ref"))
+    b = np.asarray(il.int_linear(x8, qw, plan, backend="pallas"))
+    assert a.dtype == b.dtype == np.int32
+    assert np.array_equal(a, b)
+    assert np.abs(a).max() > 127          # exercises the >int8 range

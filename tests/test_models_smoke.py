@@ -1,0 +1,72 @@
+"""Per-architecture REDUCED-config smoke tests (deliverable f).
+
+Each assigned arch instantiates a small config of the same family and runs
+one forward + one QAT train step on CPU, asserting output shapes and no
+NaNs.  Full configs are exercised only via the dry-run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS, ASSIGNED, get_config
+from repro.models import model as M
+from repro.models import transformer as tf
+from repro.optim import adamw_init, adamw_update
+from repro.optim.adamw import AdamWConfig
+from repro.quant import qat
+
+
+def _batch(cfg, b=2, s=32, seed=0):
+    k = jax.random.key(seed)
+    batch = {"tokens": jax.random.randint(k, (b, s), 0, cfg.vocab),
+             "labels": jax.random.randint(k, (b, s), 0, cfg.vocab)}
+    if cfg.family == "vlm":
+        batch["img_embeds"] = jax.random.normal(
+            k, (b, cfg.n_img_tokens, cfg.d_model), jnp.float32)
+    if cfg.family == "encdec":
+        batch["src_embeds"] = jax.random.normal(
+            k, (b, s, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_arch_forward_and_train_step(name):
+    cfg = M.reduce_config(get_config(name), dtype="float32")
+    params = tf.init_params(jax.random.key(0), cfg)
+    batch = _batch(cfg)
+    logits, aux = tf.forward_float(params, batch, cfg, qat=False)
+    assert logits.shape == (2, 32, cfg.padded_vocab())
+    assert not bool(jnp.isnan(logits).any())
+
+    opt_cfg = AdamWConfig(lr=1e-3)
+    opt = adamw_init(params, opt_cfg)
+    (loss, _), grads = jax.value_and_grad(qat.loss_fn, has_aux=True)(
+        params, batch, cfg, qat=True)
+    assert np.isfinite(float(loss))
+    new_params, opt, metrics = adamw_update(grads, opt, params, opt_cfg)
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually changed
+    delta = sum(float(jnp.abs(a - b).sum()) for a, b in
+                zip(jax.tree.leaves(new_params), jax.tree.leaves(params)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("name", ["roberta-base", "deit-s"])
+def test_paper_models_forward(name):
+    cfg = M.reduce_config(get_config(name), dtype="float32")
+    params = tf.init_params(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 16, cfg.d_model))
+    out = tf.encoder_fwd_float(params, x, cfg)
+    assert out.shape == (2, 16, cfg.d_model)
+    assert not bool(jnp.isnan(out).any())
+
+
+def test_param_count_sane():
+    # llama3-8b ~ 8e9 params (analytic counter drives MODEL_FLOPS)
+    n = get_config("llama3-8b").param_count()
+    assert 7.5e9 < n < 9e9
+    n_moe = get_config("qwen3-moe-235b-a22b").param_count()
+    assert 2.0e11 < n_moe < 2.6e11
+    n_act = get_config("qwen3-moe-235b-a22b").active_param_count()
+    assert 1.5e10 < n_act < 3.0e10

@@ -1,0 +1,60 @@
+"""Regression tests for the HLO collective parser (EXPERIMENTS.md §Perf C4:
+a header-regex bug silently dropped all while-loop trip multipliers)."""
+import numpy as np
+
+from benchmarks.roofline import (CollectiveOp, _shape_bytes,
+                                 collective_wire_bytes,
+                                 parse_hlo_collectives, roofline_terms)
+
+HLO = """\
+HloModule test
+
+%wide.cond_spmd.clone (arg_tuple.1: (s32[], bf16[16,256]{1,0})) -> pred[] {
+  %gte = s32[] get-tuple-element(%arg_tuple.1), index=0
+  %constant.9 = s32[] constant(32)
+  ROOT %cmp = pred[] compare(%gte, %constant.9), direction=LT
+}
+
+%wide.body_spmd.clone (arg_tuple.2: (s32[], bf16[16,256]{1,0})) -> (s32[], bf16[16,256]{1,0}) {
+  %gte2 = bf16[16,256]{1,0} get-tuple-element(%arg_tuple.2), index=1
+  %ag = bf16[16,4096]{1,0} all-gather(%gte2), channel_id=1, replica_groups=[16,16]<=[256], dimensions={1}, use_global_device_ids=true
+  ROOT %t = (s32[], bf16[16,256]{1,0}) tuple(%gte2, %gte2)
+}
+
+ENTRY %main.1 (p0: bf16[16,256]{1,0}) -> bf16[16,256]{1,0} {
+  %p0 = bf16[16,256]{1,0} parameter(0)
+  %ar = f32[64,64]{1,0} all-reduce(%p0), channel_id=2, replica_groups=[16,16]<=[256], to_apply=%add
+  %w = (s32[], bf16[16,256]{1,0}) while(%tuple.1), condition=%wide.cond_spmd.clone, body=%wide.body_spmd.clone
+  ROOT %out = bf16[16,256]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[16,4096]{1,0}") == 16 * 4096 * 2
+    assert _shape_bytes("(f32[2,3]{1,0}, s8[5]{0})") == 24 + 5
+    assert _shape_bytes("s32[]") == 4
+
+
+def test_while_trip_multiplier_applied():
+    colls, mult = parse_hlo_collectives(HLO)
+    kinds = {c.kind: c for c in colls}
+    assert kinds["all-gather"].multiplier == 32.0     # inside the while
+    assert kinds["all-reduce"].multiplier == 1.0      # in ENTRY
+    # header regex must survive tuple-typed computation params (C4 bug)
+    assert "wide.body_spmd.clone" in mult
+    assert mult["wide.body_spmd.clone"] == 32.0
+
+
+def test_wire_byte_model():
+    ag = CollectiveOp("all-gather", 1024.0, 16, "x")
+    ar = CollectiveOp("all-reduce", 1024.0, 16, "x")
+    assert np.isclose(ag.wire_bytes(), 1024 * 15 / 16)
+    assert np.isclose(ar.wire_bytes(), 2 * 1024 * 15 / 16)
+
+
+def test_roofline_terms_bottleneck():
+    t = roofline_terms(197e12, 0.0, 0.0)
+    assert t["bottleneck"] == "compute" and abs(t["t_compute_s"] - 1) < 1e-9
+    t = roofline_terms(0.0, 0.0, 50e9)
+    assert t["bottleneck"] == "collective"
