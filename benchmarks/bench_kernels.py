@@ -8,11 +8,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import ops
 from repro.core import attention as iattn
 from repro.core import intmath, norms
 from repro.core import softmax as ism
 from repro.core.dyadic import fit_dyadic
-from repro.kernels import ops
+from repro.ops import RequantSpec
 
 
 def _t(f, *args, iters=5):
@@ -28,11 +29,12 @@ def run():
     rng = np.random.default_rng(0)
     rows = []
 
+    be = ops.resolve_ops("ref")
     m, k, n = 512, 2048, 512
     x = jnp.asarray(rng.integers(-127, 128, (m, k)), jnp.int8)
     w = jnp.asarray(rng.integers(-127, 128, (k, n)), jnp.int8)
-    dn = fit_dyadic(1 / 4000.0, k * 127 * 127)
-    f = jax.jit(lambda a, b: ops.int8_matmul(a, b, None, dn=dn))
+    spec = RequantSpec.per_tensor(fit_dyadic(1 / 4000.0, k * 127 * 127))
+    f = jax.jit(lambda a, b: be.int8_matmul(a, b, spec))
     us = _t(f, x, w)
     flops = 2 * m * k * n
     rows.append(("kernel_int8_matmul_us", round(us, 1),
@@ -40,7 +42,7 @@ def run():
 
     sp = ism.make_isoftmax(3.5e-4, 128 * 127 * 127)
     sc = jnp.asarray(rng.integers(-60000, 60000, (256, 1024)), jnp.int32)
-    f = jax.jit(lambda s: ops.int_softmax(s, sp))
+    f = jax.jit(lambda s: be.int_softmax(s, sp))
     rows.append(("kernel_int_softmax_us", round(_t(f, sc), 1),
                  "256x1024 rows"))
 
@@ -48,14 +50,14 @@ def run():
     pl = norms.make_inorm(d, 2**-9, 1 << 13, 2 / 127, 8 / 127)
     g = jnp.ones((d,), jnp.int32) * 64
     q = jnp.asarray(rng.integers(-8192, 8192, (64, d)), jnp.int32)
-    f = jax.jit(lambda a: ops.int_layernorm(a, g, None, pl))
+    f = jax.jit(lambda a: be.int_layernorm(a, g, None, pl))
     rows.append(("kernel_int_layernorm_us", round(_t(f, q), 1), "64x4096"))
 
     b, s, h, hd = 1, 1024, 8, 128
     ap = iattn.make_iattention(hd, 8/127, 8/127, 4/127, 4/127)
     q8 = jnp.asarray(rng.integers(-127, 128, (b, s, h, hd)), jnp.int8)
     k8 = jnp.asarray(rng.integers(-127, 128, (b, s, h, hd)), jnp.int8)
-    f = jax.jit(lambda a, kk: ops.int_attention(a, kk, kk, ap))
+    f = jax.jit(lambda a, kk: be.int_attention(a, kk, kk, ap))
     rows.append(("kernel_int_attention_us", round(_t(f, q8, k8), 1),
                  "1x1024x8x128 causal (ref path)"))
     return rows

@@ -17,6 +17,7 @@ from repro.data.pipeline import SyntheticLMDataset
 from repro.models import inttransformer as it
 from repro.models import model as M
 from repro.models import transformer as tf
+from repro import ops as rops
 from repro.optim import adamw_init, adamw_update
 from repro.optim.adamw import AdamWConfig
 from repro.quant import convert, qat
@@ -53,7 +54,10 @@ def main():
 
     batch = next(data)
     toks = jnp.asarray(batch["tokens"])
-    logits_int = it.int_prefill(qp, {"tokens": toks}, plans, cfg)
+    # integer ops dispatch through the repro.ops backend registry; the
+    # use_backend context (or REPRO_BACKEND=...) swaps implementations
+    with rops.use_backend("ref"):
+        logits_int = it.int_prefill(qp, {"tokens": toks}, plans, cfg)
     logits_f, _ = tf.forward_float(params, {"tokens": toks,
                                             "labels": toks}, cfg)
     corr = np.corrcoef(np.asarray(logits_int).ravel(),

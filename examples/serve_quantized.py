@@ -15,6 +15,7 @@ from repro.models import model as M
 from repro.models import transformer as tf
 from repro.optim import adamw_init, adamw_update
 from repro.optim.adamw import AdamWConfig
+from repro import ops as rops
 from repro.quant import convert, qat
 from repro.serving import Request, ServingEngine
 
@@ -39,7 +40,11 @@ def main():
         params, opt, _ = step(params, opt, batch)
 
     qp, plans = convert.quantize_params(params, cfg)
-    engine = ServingEngine(qp, plans, cfg, batch_size=4, cache_len=64)
+    # the engine takes one OpSet handle at construction (repro.ops
+    # registry); swap "ref" for "pallas"/"pallas_tuned" — or set the
+    # REPRO_BACKEND env var — without touching the model code
+    engine = ServingEngine(qp, plans, cfg, batch_size=4, cache_len=64,
+                           ops=rops.resolve_ops("ref"))
     reqs = [Request(uid=i, prompt=[1 + 3 * i, 7, 42, 5],
                     max_new_tokens=12,
                     temperature=0.0 if i % 2 == 0 else 0.8)

@@ -67,7 +67,7 @@ def main():
     for _ in range(4):
         b = next(data)
         li = it.int_prefill(qp, {"tokens": jnp.asarray(b["tokens"])},
-                            plans, cfg)
+                            plans, cfg, ops="ref")
         accs.append(float((np.argmax(np.asarray(li)[:, :cfg.vocab], -1)
                            == b["labels"][:, -1]).mean()))
     print(f"integer-path last-token accuracy: {np.mean(accs):.2%}")

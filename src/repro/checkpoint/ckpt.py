@@ -20,16 +20,20 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.core.treepath import path_parts
+
 Pytree = Any
 _SEP = "|"
+
+
+def _key_of(path) -> str:
+    return _SEP.join(path_parts(path))
 
 
 def _flatten(tree: Pytree) -> Dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = _SEP.join(
-            str(getattr(e, "key", getattr(e, "idx", e))) for e in path)
-        flat[key] = np.asarray(jax.device_get(leaf))
+        flat[_key_of(path)] = np.asarray(jax.device_get(leaf))
     return flat
 
 
@@ -38,8 +42,7 @@ def _unflatten_into(template: Pytree, flat: Dict[str, np.ndarray]
     leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
     out = []
     for path, leaf in leaves:
-        key = _SEP.join(
-            str(getattr(e, "key", getattr(e, "idx", e))) for e in path)
+        key = _key_of(path)
         if key not in flat:
             raise KeyError(f"checkpoint missing leaf {key}")
         arr = flat[key]

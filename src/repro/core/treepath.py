@@ -1,0 +1,23 @@
+"""Pytree key-path formatting shared by checkpointing and sharding rules.
+
+jax's ``tree_flatten_with_path`` yields heterogeneous key types —
+``DictKey(.key)``, ``SequenceKey(.idx)``, ``GetAttrKey(.name)`` (NamedTuple
+fields such as ``QuantLinearParams``) — and both the checkpoint format and
+the param-sharding pattern matcher need the same stable string per entry.
+"""
+from __future__ import annotations
+
+
+def path_parts(path) -> list:
+    """One plain string per key-path entry."""
+    out = []
+    for e in path:
+        if hasattr(e, "key"):
+            out.append(str(e.key))
+        elif hasattr(e, "idx"):
+            out.append(str(e.idx))
+        elif hasattr(e, "name"):
+            out.append(str(e.name))
+        else:
+            out.append(str(e))
+    return out

@@ -1,71 +1,62 @@
-"""jit'd dispatch wrappers over the Pallas kernels and their jnp oracles.
+"""DEPRECATED string-dispatch wrappers — use :mod:`repro.ops` instead.
 
-``backend`` selects the implementation:
-  * ``"ref"``       — pure-jnp (repro.core); what the multi-pod dry-run
-                      compiles (XLA-visible FLOPs/bytes for the roofline);
-  * ``"pallas"``    — pl.pallas_call with interpret=True on CPU (tests) and
-                      interpret=False on real TPU.
-
-Models call these entry points; the flag lives in the arch config
-(``ArchConfig.kernel_backend``).
+This module kept a ``backend="ref"|"pallas"`` string and a loose bag of
+requant keywords (``dn`` vs ``b_vec``/``c``/``pre``, ``out_bits``,
+``**blocks``) threaded through every call site.  The typed replacement
+lives in :mod:`repro.ops`: a frozen :class:`repro.ops.RequantSpec` plus a
+pluggable backend registry.  These wrappers translate the old calling
+convention and emit ``DeprecationWarning``; they will be removed one
+release after the migration (see docs/OPS_API.md).
 """
 from __future__ import annotations
 
-import functools
+import warnings
 
-import jax
-import jax.numpy as jnp
-
-from repro.kernels import ref as _ref
-from repro.kernels.int8_matmul import int8_matmul_pallas
-from repro.kernels.int_attention import int_attention_pallas
-from repro.kernels.int_gelu import int_gelu_pallas
-from repro.kernels.int_layernorm import int_layernorm_pallas
-from repro.kernels.int_softmax import int_softmax_pallas
+from repro import ops as _ops
+from repro.ops import RequantSpec
 
 
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+def _warn(name: str):
+    warnings.warn(
+        f"repro.kernels.ops.{name} is deprecated; use repro.ops "
+        "(RequantSpec + backend registry) instead — see docs/OPS_API.md",
+        DeprecationWarning, stacklevel=3)
 
 
 def int8_matmul(x8, w8, bias32=None, dn=None, b_vec=None, c=0, pre=0,
                 out_bits=8, backend="ref", **blocks):
-    if backend == "pallas":
-        out_dtype = jnp.int8 if out_bits <= 8 else jnp.int32
-        return int8_matmul_pallas(x8, w8, bias32, dn=dn, b_vec=b_vec, c=c,
-                                  pre=pre, out_bits=out_bits,
-                                  out_dtype=out_dtype,
-                                  interpret=_interpret(), **blocks)
+    _warn("int8_matmul")
     if dn is not None:
-        return _ref.ref_int8_matmul(x8, w8, bias32, dn, out_bits)
-    return _ref.ref_int8_matmul_perchannel(x8, w8, bias32, b_vec, c, pre,
-                                           out_bits)
+        spec = RequantSpec.per_tensor(dn, out_bits)
+    elif b_vec is not None:
+        spec = RequantSpec.per_channel(c, pre, out_bits)
+    else:
+        spec = RequantSpec.raw()
+    return _ops.resolve_ops(backend).int8_matmul(
+        x8, w8, spec, bias32=bias32, b_vec=b_vec, **blocks)
 
 
 def int_softmax(scores, plan, backend="ref", **kw):
-    if backend == "pallas":
-        return int_softmax_pallas(scores, plan, interpret=_interpret(), **kw)
-    return _ref.ref_int_softmax(scores, plan)
+    _warn("int_softmax")
+    return _ops.resolve_ops(backend).int_softmax(scores, plan, **kw)
 
 
 def int_gelu(q, plan, dn_out, out_bits=8, backend="ref", **kw):
-    if backend == "pallas":
-        return int_gelu_pallas(q, plan, dn_out, out_bits,
-                               interpret=_interpret(), **kw)
-    return _ref.ref_int_gelu(q, plan, dn_out, out_bits)
+    _warn("int_gelu")
+    return _ops.resolve_ops(backend).int_gelu(q, plan, dn_out,
+                                              out_bits=out_bits, **kw)
 
 
-def int_layernorm(q, q_gamma, q_beta, plan, out_bits=8, backend="ref", **kw):
-    if backend == "pallas":
-        return int_layernorm_pallas(q, q_gamma, q_beta, plan, out_bits,
-                                    interpret=_interpret(), **kw)
-    return _ref.ref_int_layernorm(q, q_gamma, q_beta, plan, out_bits)
+def int_layernorm(q, q_gamma, q_beta, plan, out_bits=8, backend="ref",
+                  **kw):
+    _warn("int_layernorm")
+    return _ops.resolve_ops(backend).int_layernorm(
+        q, q_gamma, q_beta, plan, out_bits=out_bits, **kw)
 
 
 def int_attention(q8, k8, v8, plan, causal=True, window=0, out_bits=8,
                   backend="ref", **kw):
-    if backend == "pallas":
-        return int_attention_pallas(q8, k8, v8, plan, causal=causal,
-                                    window=window, out_bits=out_bits,
-                                    interpret=_interpret(), **kw)
-    return _ref.ref_int_attention(q8, k8, v8, plan, causal, window, out_bits)
+    _warn("int_attention")
+    return _ops.resolve_ops(backend).int_attention(
+        q8, k8, v8, plan, causal=causal, window=window,
+        out_bits=out_bits, **kw)

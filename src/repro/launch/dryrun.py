@@ -27,7 +27,8 @@ import jax.numpy as jnp
 from repro.configs.registry import ARCHS, ASSIGNED, LONG_OK, get_config
 from repro.launch import shardings as shd
 from repro.launch import steps as steps_mod
-from repro.launch.mesh import make_production_mesh
+from repro import ops as rops
+from repro.launch.mesh import make_production_mesh, set_mesh
 from repro.models import model as M
 from repro.models.common import SHAPES, ShapeConfig
 from repro.optim.adamw import AdamWConfig
@@ -56,7 +57,7 @@ def lower_cell(cfg, shape: ShapeConfig, mesh, zero1=None):
     """Returns (lowered, jit_fn, arg_specs) for one cell."""
     zero1 = True if zero1 is None else zero1
     fsdp = cfg.param_count() > 2e10
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         if shape.kind == "train":
             opt_cfg = AdamWConfig(zero1=zero1)
             pspec = M.params_spec(cfg)
@@ -73,16 +74,20 @@ def lower_cell(cfg, shape: ShapeConfig, mesh, zero1=None):
             from jax.sharding import PartitionSpec as P
             metrics_sh = {"grad_norm": P(), "loss": P(), "ce": P(),
                           "aux": P()}
-            fn = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
-                         out_shardings=(p_sh, o_sh, metrics_sh),
-                         donate_argnums=(0, 1))
+            fn = jax.jit(
+                step,
+                in_shardings=shd.as_shardings((p_sh, o_sh, b_sh), mesh),
+                out_shardings=shd.as_shardings((p_sh, o_sh, metrics_sh),
+                                               mesh),
+                donate_argnums=(0, 1))
             lowered = fn.lower(pspec, ospec, batch)
             return lowered
         plans = qplans.build_layer_plans(cfg)
         qspec = M.qparams_spec(cfg, plans)
         q_sh = shd.param_pspecs(qspec, mesh)
+        ops = rops.resolve_ops(None, cfg)
         if shape.kind == "prefill":
-            step = steps_mod.make_prefill_step(cfg, plans)
+            step = steps_mod.make_prefill_step(cfg, plans, ops)
             batch = M.input_specs(cfg, shape)
             b_sh = shd.batch_pspecs(batch, mesh)
             args = [qspec, batch]
@@ -92,10 +97,11 @@ def lower_cell(cfg, shape: ShapeConfig, mesh, zero1=None):
                 args.append(rspec)
                 shards.append(jax.tree.map(
                     lambda _: jax.sharding.PartitionSpec(), rspec))
-            fn = jax.jit(step, in_shardings=tuple(shards))
+            fn = jax.jit(step, in_shardings=shd.as_shardings(
+                tuple(shards), mesh))
             return fn.lower(*args)
         # decode
-        step = steps_mod.make_decode_step(cfg, plans, shape.seq_len)
+        step = steps_mod.make_decode_step(cfg, plans, shape.seq_len, ops)
         b = shape.global_batch
         with_mem = cfg.family in ("vlm", "encdec")
         cache = _decode_cache_spec(cfg, b, shape.seq_len, with_mem)
@@ -110,7 +116,8 @@ def lower_cell(cfg, shape: ShapeConfig, mesh, zero1=None):
             args.append(rspec)
             shards.append(jax.tree.map(
                 lambda _: jax.sharding.PartitionSpec(), rspec))
-        fn = jax.jit(step, in_shardings=tuple(shards),
+        fn = jax.jit(step, in_shardings=shd.as_shardings(tuple(shards),
+                                                         mesh),
                      donate_argnums=(1,))
         return fn.lower(*args)
 

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import ops as rops
 from repro.checkpoint import load_checkpoint
 from repro.configs.registry import get_config
 from repro.models import model as M
@@ -36,9 +37,16 @@ def main():
     ap.add_argument("--cache-len", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--backend", default=None,
+                    help="registered op backend (default: REPRO_BACKEND "
+                         "env or the arch's kernel_backend); one of "
+                         f"{rops.available_backends()}")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
+    # resolve up front: a typo'd --backend should fail before the
+    # (slow) quantization pass, not after
+    ops = rops.resolve_ops(args.backend, cfg)
     if args.reduced:
         cfg = M.reduce_config(cfg, dtype="float32", vocab=1024)
     params = tf.init_params(jax.random.key(0), cfg)
@@ -53,8 +61,9 @@ def main():
     print(f"  {n_int8/1e6:.1f}M int8 weights "
           f"({n_int8/2**20:.0f} MiB vs {n_int8*2/2**20:.0f} MiB bf16)")
 
+    print(f"op backend: {ops.name}")
     eng = ServingEngine(qp, plans, cfg, batch_size=args.batch,
-                        cache_len=args.cache_len)
+                        cache_len=args.cache_len, ops=ops)
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,
                     prompt=list(rng.integers(1, cfg.vocab, 4)),

@@ -15,19 +15,25 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.treepath import path_parts
+
 Pytree = Any
 
 
+def as_shardings(tree, mesh):
+    """PartitionSpec trees -> jit-compatible shardings.
+
+    jax >= 0.5 accepts raw PartitionSpecs in in_shardings/out_shardings;
+    older releases need them wrapped in NamedSharding."""
+    if hasattr(jax, "set_mesh"):
+        return tree
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+        tree, is_leaf=lambda x: isinstance(x, P))
+
+
 def _path_str(path) -> str:
-    parts = []
-    for e in path:
-        if hasattr(e, "key"):
-            parts.append(str(e.key))
-        elif hasattr(e, "idx"):
-            parts.append(str(e.idx))
-        else:
-            parts.append(str(e))
-    return "/".join(parts)
+    return "/".join(path_parts(path))
 
 
 # (pattern, spec-template) — template entries: "model" | None | "div:<dim>"

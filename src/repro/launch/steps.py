@@ -11,6 +11,7 @@ import jax.numpy as jnp
 from repro.models import inttransformer as it
 from repro.models import intlayers as il
 from repro.models.common import ArchConfig
+from repro.ops import resolve_ops
 from repro.optim import adamw_init, adamw_update
 from repro.optim.adamw import AdamWConfig
 from repro.quant import plans as qplans
@@ -76,30 +77,32 @@ def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig,
 
 
 def make_prefill_step(cfg: ArchConfig, plans: qplans.LayerPlans,
-                      backend: str = "ref"):
+                      ops=None):
     """RoPE tables are explicit inputs (multi-MB design constants must not
     be baked into the HLO)."""
+    ops = resolve_ops(ops, cfg)
     if cfg.pos == "rope":
         def prefill(qparams, batch, rope_tab):
             return it.int_prefill(qparams, batch, plans, cfg,
-                                  backend=backend, rope_tab=rope_tab)
+                                  ops=ops, rope_tab=rope_tab)
     else:
         def prefill(qparams, batch):
             return it.int_prefill(qparams, batch, plans, cfg,
-                                  backend=backend)
+                                  ops=ops)
     return prefill
 
 
 def make_decode_step(cfg: ArchConfig, plans: qplans.LayerPlans,
-                     cache_len: int, backend: str = "ref"):
+                     cache_len: int, ops=None):
+    ops = resolve_ops(ops, cfg)
     if cfg.pos == "rope":
         def decode(qparams, caches, tokens, pos, rope_tab):
             return it.int_decode_step(qparams, caches, tokens, pos, plans,
-                                      cfg, rope_tab, backend=backend)
+                                      cfg, rope_tab, ops=ops)
     else:
         def decode(qparams, caches, tokens, pos):
             return it.int_decode_step(qparams, caches, tokens, pos, plans,
-                                      cfg, None, backend=backend)
+                                      cfg, None, ops=ops)
     return decode
 
 

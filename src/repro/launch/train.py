@@ -25,7 +25,7 @@ from repro.data.pipeline import make_train_iterator
 from repro.distributed.fault import FaultTolerantLoop, StragglerDetector
 from repro.launch import shardings as shd
 from repro.launch import steps as steps_mod
-from repro.launch.mesh import make_mesh
+from repro.launch.mesh import make_mesh, set_mesh
 from repro.models import model as M
 from repro.models import transformer as tf
 from repro.optim import adamw_init
@@ -56,6 +56,9 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--data", default=None,
                     help="token file (memory-mapped); default synthetic")
+    ap.add_argument("--int-eval", action="store_true",
+                    help="after training, quantize and run one integer "
+                         "prefill through the configured op backend")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -71,7 +74,7 @@ def main():
     opt_cfg = AdamWConfig(lr=args.lr, zero1=True)
     lr_fn = linear_warmup_cosine(max(args.steps // 10, 1), args.steps)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = tf.init_params(jax.random.key(0), cfg)
         p_sh = shd.param_pspecs(params, mesh,
                                 fsdp=cfg.param_count() > 2e10)
@@ -103,6 +106,19 @@ def main():
     print(f"loss {log[0]['loss']:.3f} -> {log[-1]['loss']:.3f}  "
           f"({tok_s:,.0f} tok/s, restarts={loop.restarts}, "
           f"stragglers={loop.straggler.flagged})")
+    if args.int_eval:
+        from repro import ops as rops
+        from repro.models import inttransformer as it
+        from repro.quant import convert
+        params = state[0]
+        qp, plans = convert.quantize_params(params, cfg)
+        ops = rops.resolve_ops(None, cfg)
+        batch = next(data)
+        logits = it.int_prefill(
+            qp, {"tokens": jnp.asarray(batch["tokens"])}, plans, cfg,
+            ops=ops)
+        print(f"int-eval ({ops.name}): logits {logits.shape} "
+              f"max|.|={float(jnp.abs(logits).max()):.2f}")
 
 
 if __name__ == "__main__":

@@ -22,34 +22,31 @@ from repro.core import intmath, norms
 from repro.core import softmax as ism
 from repro.core.dyadic import clip_to_bits, rshift_round
 from repro.distributed.sharding import shard
-from repro.kernels import ops
 from repro.models.common import ArchConfig
+from repro.ops import QuantLinearParams, RequantSpec
+from repro.ops import get_backend, resolve_ops
 from repro.quant import plans as qplans
 
 
 # ------------------------------------------------------------- linear -----
 
-def int_linear(x8, qw, plan: qplans.LinearPlan, backend="ref",
-               out_dtype=None):
-    """x8: (..., K) int8; qw: {"w8": (K,N), "b_mult": (N,), "bias32"?}.
+def int_linear(x8, qw, plan: qplans.LinearPlan, ops=None):
+    """x8: (..., K) int8; qw: QuantLinearParams (or legacy dict).
 
     Returns (..., N): int8 when plan.s_out > 0 (requantized) else int32
     accumulator.
     """
+    ops = resolve_ops(ops)
+    qw = QuantLinearParams.of(qw)
     lead = x8.shape[:-1]
     k = x8.shape[-1]
-    n = qw["w8"].shape[-1]
+    n = qw.w8.shape[-1]
     x2 = x8.reshape(-1, k)
-    if plan.s_out == 0.0:
-        acc = jnp.dot(x2, qw["w8"], preferred_element_type=jnp.int32)
-        if "bias32" in qw:
-            acc = acc + qw["bias32"][None, :]
-        return acc.reshape(*lead, n)
-    out = ops.int8_matmul(x2, qw["w8"], qw.get("bias32"),
-                          b_vec=qw["b_mult"], c=plan.c, pre=plan.pre,
-                          out_bits=plan.out_bits, backend=backend)
+    spec = RequantSpec.for_linear(plan)
+    out = ops.int8_matmul(x2, qw.w8, spec, bias32=qw.bias32,
+                          b_vec=qw.b_mult)
     out = out.reshape(*lead, n)
-    if plan.out_bits <= 8:
+    if not spec.is_raw and plan.out_bits <= 8:
         out = out.astype(jnp.int8)
     return out
 
@@ -60,20 +57,22 @@ def int_expert_linear(x8, qw, plan: qplans.LinearPlan):
     """Batched-per-expert linear: x8 (G,E,C,K) x w8 (E,K,N) -> (G,E,C,N).
 
     Per-channel requant with b_mult (E,N); shared static (c, pre)."""
-    acc = jnp.einsum("geck,ekn->gecn", x8, qw["w8"],
+    qw = QuantLinearParams.of(qw)
+    acc = jnp.einsum("geck,ekn->gecn", x8, qw.w8,
                      preferred_element_type=jnp.int32)
-    if "bias32" in qw:
-        acc = acc + qw["bias32"][None, :, None, :]
-    b = qw["b_mult"][None, :, None, :].astype(jnp.int32)
+    if qw.bias32 is not None:
+        acc = acc + qw.bias32[None, :, None, :]
+    b = qw.b_mult[None, :, None, :].astype(jnp.int32)
     out = rshift_round(rshift_round(acc, plan.pre) * b, plan.c - plan.pre)
     out = clip_to_bits(out, plan.out_bits)
     return out.astype(jnp.int8) if plan.out_bits <= 8 else out
 
 
-def int_norm(qnorm, q32, plan: norms.INormPlan, backend="ref"):
+def int_norm(qnorm, q32, plan: norms.INormPlan, ops=None):
     """q32 (..., D) int32 at s_res -> int8 at s_act8."""
+    ops = resolve_ops(ops)
     out = ops.int_layernorm(q32, qnorm["gamma_q"], qnorm.get("beta_q"),
-                            plan, out_bits=8, backend=backend)
+                            plan, out_bits=8)
     return out.astype(jnp.int8)
 
 
@@ -113,16 +112,17 @@ def apply_int_rope(q8, positions, rope_tab):
 
 def int_attn_fwd(qp, x8, plans: qplans.AttnPlan, cfg: ArchConfig,
                  rope_tab=None, positions=None, causal=True, window: int = 0,
-                 memory8=None, backend="ref", fuse_attention=True):
+                 memory8=None, ops=None, fuse_attention=True):
     """Self/cross attention.  x8: (B,S,D) int8 -> (B,S,D) int32 at s_res."""
+    ops = resolve_ops(ops, cfg)
     b, s, d = x8.shape
     kv_src = memory8 if memory8 is not None else x8
     sk = kv_src.shape[1]
-    q8 = int_linear(x8, qp["wq"], plans.qkv, backend) \
+    q8 = int_linear(x8, qp["wq"], plans.qkv, ops) \
         .reshape(b, s, cfg.n_heads, cfg.hd)
-    k8 = int_linear(kv_src, qp["wk"], plans.qkv, backend) \
+    k8 = int_linear(kv_src, qp["wk"], plans.qkv, ops) \
         .reshape(b, sk, cfg.n_kv_heads, cfg.hd)
-    v8 = int_linear(kv_src, qp["wv"], plans.qkv, backend) \
+    v8 = int_linear(kv_src, qp["wv"], plans.qkv, ops) \
         .reshape(b, sk, cfg.n_kv_heads, cfg.hd)
     if rope_tab is not None and memory8 is None:
         pos = positions if positions is not None else jnp.arange(s)
@@ -132,10 +132,14 @@ def int_attn_fwd(qp, x8, plans: qplans.AttnPlan, cfg: ArchConfig,
     k8 = shard(k8, "batch", "seq", "kv_heads", None)
     v8 = shard(v8, "batch", "seq", "kv_heads", None)
 
-    if backend == "pallas" and fuse_attention:
+    # the configured backend handles attention in every branch (the old
+    # code hardcoded the pallas/ref choice here); backends without a
+    # fused kernel fall back to chunked streaming on long sequences
+    attn_backend = ops.backend_for("int_attention")
+    if fuse_attention and attn_backend.fused_attention:
         o8 = ops.int_attention(q8, k8, v8, plans.attn,
                                causal=causal and memory8 is None,
-                               window=window, backend="pallas")
+                               window=window)
     elif s * sk > (4096 * 4096) // 4 and memory8 is None:
         # memory-bounded two-pass streaming path
         rep = cfg.q_group
@@ -146,29 +150,34 @@ def int_attn_fwd(qp, x8, plans: qplans.AttnPlan, cfg: ArchConfig,
                                        window=window)
         o8 = o8.astype(jnp.int8)
     else:
-        o8 = ops.int_attention(q8, k8, v8, plans.attn,
-                               causal=causal and memory8 is None,
-                               window=window, backend="ref")
+        # fuse_attention=False asks for the exact two-pass numerics, so
+        # a fused backend must not be re-entered here — use the oracle
+        be = (get_backend("ref") if attn_backend.fused_attention
+              else attn_backend)
+        o8 = be.int_attention(q8, k8, v8, plans.attn,
+                              causal=causal and memory8 is None,
+                              window=window)
     o8 = shard(o8, "batch", "seq", "heads", None)
     out32 = int_linear(o8.reshape(b, s, cfg.n_heads * cfg.hd), qp["wo"],
-                       plans.out, backend)
+                       plans.out, ops)
     return shard(out32, "batch", "seq", "embed")
 
 
 def int_attn_decode(qp, x8, cache, pos, plans: qplans.AttnPlan,
                     cfg: ArchConfig, rope_tab=None, window: int = 0,
-                    backend="ref"):
+                    ops=None):
     """One-token decode.  x8: (B,1,D); cache: {"k8","v8"} (B,L,Hkv,hd).
 
     ``pos``: (B,) current position (tokens written at cache[:, pos]).
     Returns (out32, new_cache)."""
+    ops = resolve_ops(ops, cfg)
     b, _, d = x8.shape
     L = cache["k8"].shape[1]
-    q8 = int_linear(x8, qp["wq"], plans.qkv, backend) \
+    q8 = int_linear(x8, qp["wq"], plans.qkv, ops) \
         .reshape(b, 1, cfg.n_heads, cfg.hd)
-    k8 = int_linear(x8, qp["wk"], plans.qkv, backend) \
+    k8 = int_linear(x8, qp["wk"], plans.qkv, ops) \
         .reshape(b, 1, cfg.n_kv_heads, cfg.hd)
-    v8 = int_linear(x8, qp["wv"], plans.qkv, backend) \
+    v8 = int_linear(x8, qp["wv"], plans.qkv, ops) \
         .reshape(b, 1, cfg.n_kv_heads, cfg.hd)
     if rope_tab is not None:
         q8 = apply_int_rope(q8, pos[:, None], rope_tab)
@@ -187,36 +196,38 @@ def int_attn_decode(qp, x8, cache, pos, plans: qplans.AttnPlan,
     o8 = iattn.i_attention_decode(q8, k_full, v_full, plans.attn, valid)
     o8 = o8.astype(jnp.int8)
     out32 = int_linear(o8.reshape(b, 1, cfg.n_heads * cfg.hd), qp["wo"],
-                       plans.out, backend)
+                       plans.out, ops)
     return out32, {"k8": k_cache, "v8": v_cache}
 
 
 # --------------------------------------------------------------- ffn ------
 
 def int_ffn_fwd(qp, x8, plans: qplans.FfnPlan, cfg: ArchConfig,
-                backend="ref"):
+                ops=None):
     """x8 (B,S,D) int8 -> int32 at s_res."""
-    h1 = int_linear(x8, qp["w1"], plans.up, backend)        # 10-bit int32
+    ops = resolve_ops(ops, cfg)
+    h1 = int_linear(x8, qp["w1"], plans.up, ops)            # 10-bit int32
     if cfg.activation == "swiglu":
-        h3 = int_linear(x8, qp["w3"], plans.up, backend)
+        h3 = int_linear(x8, qp["w3"], plans.up, ops)
         a8 = iact.i_silu(h1, plans.act_silu, out_bits=8)
         prod = a8 * h3                                      # s8 * s10
         h = clip_to_bits(plans.dn_gate(prod), 8).astype(jnp.int8)
     else:
         a = ops.int_gelu(h1, plans.act_gelu.gelu, plans.act_gelu.dn_out,
-                         out_bits=8, backend=backend)
+                         out_bits=8)
         h = a.astype(jnp.int8)
     h = shard(h, "batch", "seq", "ffn")
-    return shard(int_linear(h, qp["w2"], plans.down, backend),
+    return shard(int_linear(h, qp["w2"], plans.down, ops),
                  "batch", "seq", "embed")
 
 
 # --------------------------------------------------------------- moe ------
 
 def int_moe_fwd(qp, x8, plans: qplans.MoePlan, cfg: ArchConfig,
-                backend="ref", group_size: int = 512):
+                ops=None, group_size: int = 512):
     """Integer MoE: int32 router logits, integer top-k gates (i-softmax
     over the selected k logits), int8 expert FFNs, integer combine."""
+    ops = resolve_ops(ops, cfg)
     b, s, d = x8.shape
     e = cfg.padded_experts()
     k = cfg.top_k
@@ -225,7 +236,7 @@ def int_moe_fwd(qp, x8, plans: qplans.MoePlan, cfg: ArchConfig,
     cap = max(4, int(cfg.capacity_factor * tg * k / e))
     xg = x8.reshape(b * g, tg, d)
 
-    logits = int_linear(xg, qp["router"], plans.router, backend)  # int32
+    logits = int_linear(xg, qp["router"], plans.router, ops)      # int32
     if e != cfg.n_experts:
         padmask = jnp.arange(e) >= cfg.n_experts
         logits = jnp.where(padmask[None, None], jnp.int32(-(2 ** 30)),
@@ -256,8 +267,8 @@ def int_moe_fwd(qp, x8, plans: qplans.MoePlan, cfg: ArchConfig,
         h = clip_to_bits(plans.expert.dn_gate(a8 * h3), 8).astype(jnp.int8)
     else:
         h = ops.int_gelu(h1, plans.expert.act_gelu.gelu,
-                         plans.expert.act_gelu.dn_out, out_bits=8,
-                         backend=backend).astype(jnp.int8)
+                         plans.expert.act_gelu.dn_out,
+                         out_bits=8).astype(jnp.int8)
     y8 = int_expert_linear(h, qp["w2"], plans.expert.down)   # s_res int32
     y8 = shard(y8, "batch", "experts", None, "embed")
 
@@ -270,7 +281,7 @@ def int_moe_fwd(qp, x8, plans: qplans.MoePlan, cfg: ArchConfig,
     out32 = out32.reshape(b, s, d)
     if plans.shared is not None:
         out32 = out32 + int_ffn_fwd(qp["shared"], x8, plans.shared, cfg,
-                                    backend)
+                                    ops)
     return shard(out32, "batch", "seq", "embed")
 
 
@@ -302,13 +313,14 @@ def _int_conv_step(xbc8_t, conv_state, qconv_w8, mp: qplans.MambaPlan):
 
 
 def int_mamba_step(qp, u8_t, state: IntMambaState, mp: qplans.MambaPlan,
-                   cfg: ArchConfig, backend="ref"):
+                   cfg: ArchConfig, ops=None):
     """One token.  u8_t: (B, D) int8 -> (out32 (B,D) at s_res, new state)."""
+    ops = resolve_ops(ops, cfg)
     b = u8_t.shape[0]
     di, gq, n, hh, p = (cfg.ssm_d_inner, cfg.ssm_groups, cfg.ssm_state,
                         cfg.ssm_heads, cfg.ssm_head_dim)
-    zxbc8 = int_linear(u8_t, qp["in_proj"], mp.in_proj, backend)
-    dt_acc = int_linear(u8_t, qp["dt_proj"], _INT32_PLAN(mp), backend)
+    zxbc8 = int_linear(u8_t, qp["in_proj"], mp.in_proj, ops)
+    dt_acc = int_linear(u8_t, qp["dt_proj"], _INT32_PLAN(mp), ops)
     z8, xbc8 = zxbc8[:, :di], zxbc8[:, di:]
     xbc8, conv_new = _int_conv_step(xbc8, state.conv, qp["conv_w8"], mp)
     x8 = xbc8[:, :di].reshape(b, hh, p)
@@ -362,8 +374,8 @@ def int_mamba_step(qp, u8_t, state: IntMambaState, mp: qplans.MambaPlan,
                                     jnp.maximum(s_dyn - 1, 0)), 0)
     y12 = jax.lax.shift_right_arithmetic(gated + half, s_dyn)
     y8 = int_norm({"gamma_q": qp["norm_gamma_q"]}, y12, mp.norm,
-                  backend).astype(jnp.int8)
-    out32 = int_linear(y8, qp["out_proj"], mp.out_proj, backend)
+                  ops).astype(jnp.int8)
+    out32 = int_linear(y8, qp["out_proj"], mp.out_proj, ops)
     return out32, IntMambaState(h, conv_new)
 
 
@@ -380,12 +392,13 @@ def _silu16(zq, plan: iact.ISiluPlan):
 
 
 def int_mamba_prefill(qp, u8, mp: qplans.MambaPlan, cfg: ArchConfig,
-                      state: Optional[IntMambaState] = None, backend="ref"):
+                      state: Optional[IntMambaState] = None, ops=None):
     """Integer prefill with the token-parallel stages hoisted out of the
     recurrence: projections / conv / Δt / decays / contributions batch over
     the whole sequence (MXU-shaped, HLO-countable); only the O(L) h-state
     update and the per-token read-out stay in the scan (cheap elementwise).
     """
+    ops = resolve_ops(ops, cfg)
     b, l, d = u8.shape
     di, gq, n, hh, p = (cfg.ssm_d_inner, cfg.ssm_groups, cfg.ssm_state,
                         cfg.ssm_heads, cfg.ssm_head_dim)
@@ -393,8 +406,8 @@ def int_mamba_prefill(qp, u8, mp: qplans.MambaPlan, cfg: ArchConfig,
         state = init_int_mamba_state(cfg, b)
 
     # --- token-parallel stages -------------------------------------------
-    zxbc8 = int_linear(u8, qp["in_proj"], mp.in_proj, backend)   # (B,L,*)
-    dt_acc = int_linear(u8, qp["dt_proj"], _INT32_PLAN(mp), backend)
+    zxbc8 = int_linear(u8, qp["in_proj"], mp.in_proj, ops)       # (B,L,*)
+    dt_acc = int_linear(u8, qp["dt_proj"], _INT32_PLAN(mp), ops)
     z8, xbc8 = zxbc8[..., :di], zxbc8[..., di:]
     # causal depthwise conv over the sequence, seeded by the carried tail
     km1 = state.conv.shape[1]
@@ -454,8 +467,8 @@ def int_mamba_prefill(qp, u8, mp: qplans.MambaPlan, cfg: ArchConfig,
         jnp.int32(1), jnp.maximum(s_dyn - 1, 0)), 0)
     y12 = jax.lax.shift_right_arithmetic(gated + half, s_dyn)
     y8 = int_norm({"gamma_q": qp["norm_gamma_q"]}, y12, mp.norm,
-                  backend).astype(jnp.int8)
-    out32 = int_linear(y8, qp["out_proj"], mp.out_proj, backend)
+                  ops).astype(jnp.int8)
+    out32 = int_linear(y8, qp["out_proj"], mp.out_proj, ops)
     return out32, IntMambaState(h, conv_tail)
 
 

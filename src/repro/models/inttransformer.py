@@ -23,6 +23,7 @@ from repro.distributed.sharding import shard
 from repro.models import intlayers as il
 from repro.models.common import ArchConfig
 from repro.models.transformer import layer_group_spec
+from repro.ops import resolve_ops
 from repro.quant import plans as qplans
 
 Pytree = Any
@@ -38,35 +39,35 @@ def _sub_plans(plans: qplans.LayerPlans, kind):
 
 
 def _int_sublayer_fwd(qp, x32, plans: qplans.LayerPlans, cfg: ArchConfig,
-                      kind, rope_tab, positions, causal, memory8, backend):
+                      kind, rope_tab, positions, causal, memory8, ops):
     """Pre-norm integer sublayer.  x32: (B,S,D) int32 at s_res."""
     mix, ff, has_cross = kind
-    h8 = il.int_norm(qp["norm1"], x32, plans.norm, backend)
+    h8 = il.int_norm(qp["norm1"], x32, plans.norm, ops)
     if mix == "attn":
         a32 = il.int_attn_fwd(qp["attn"], h8, plans.attn, cfg, rope_tab,
                               positions, causal=causal, window=cfg.window,
-                              backend=backend)
+                              ops=ops)
     elif mix == "cross":
         a32 = il.int_attn_fwd(qp["attn"], h8, plans.cross, cfg, None,
                               positions, causal=False, memory8=memory8,
-                              backend=backend)
+                              ops=ops)
     else:
         out, _ = il.int_mamba_prefill(qp["ssm"], h8, plans.mamba, cfg,
-                                      backend=backend)
+                                      ops=ops)
         a32 = out
     x32 = _residual_add(x32, a32, cfg)
     if has_cross:
-        h8 = il.int_norm(qp["norm_cross"], x32, plans.norm, backend)
+        h8 = il.int_norm(qp["norm_cross"], x32, plans.norm, ops)
         c32 = il.int_attn_fwd(qp["cross"], h8, plans.cross, cfg, None,
                               positions, causal=False, memory8=memory8,
-                              backend=backend)
+                              ops=ops)
         x32 = _residual_add(x32, c32, cfg)
     if ff is not None:
-        h8 = il.int_norm(qp["norm2"], x32, plans.norm, backend)
+        h8 = il.int_norm(qp["norm2"], x32, plans.norm, ops)
         if ff == "moe":
-            f32 = il.int_moe_fwd(qp["moe"], h8, plans.moe, cfg, backend)
+            f32 = il.int_moe_fwd(qp["moe"], h8, plans.moe, cfg, ops)
         else:
-            f32 = il.int_ffn_fwd(qp["ffn"], h8, plans.ffn, cfg, backend)
+            f32 = il.int_ffn_fwd(qp["ffn"], h8, plans.ffn, cfg, ops)
         x32 = _residual_add(x32, f32, cfg)
     return x32
 
@@ -84,30 +85,34 @@ def quantize_memory(mem_f, cfg: ArchConfig):
 
 
 def logits_int(qparams, x32, plans: qplans.LayerPlans, cfg: ArchConfig,
-               backend):
-    h8 = il.int_norm(qparams["final_norm"], x32, plans.final_norm, backend)
+               ops=None):
+    ops = resolve_ops(ops, cfg)
+    h8 = il.int_norm(qparams["final_norm"], x32, plans.final_norm, ops)
     head_plan = qplans.LinearPlan(cfg.s_act8, 0.0, 32, 0, 0, cfg.d_model)
-    acc = il.int_linear(h8, qparams["head"], head_plan, backend)
+    acc = il.int_linear(h8, qparams["head"], head_plan, ops)
     # host-side dequant boundary: float per-channel scales
     return acc.astype(jnp.float32) * qparams["head_scale"][None] \
         * cfg.s_act8
 
 
 def int_prefill(qparams, batch, plans: qplans.LayerPlans, cfg: ArchConfig,
-                backend="ref", return_cache=False, cache_len: int = 0,
+                ops=None, return_cache=False, cache_len: int = 0,
                 rope_tab=None):
     """Full-sequence integer forward; returns last-position float logits
     (+ decode caches when ``return_cache``).
 
+    ``ops``: an ``repro.ops.OpSet`` (or backend name) resolved once here
+    and handed down — per-call backend strings are gone.
     ``rope_tab``: int32 (cos, sin) design tables passed as *arguments* so
     they are inputs, not multi-MB HLO constants."""
+    ops = resolve_ops(ops, cfg)
     gl, ng, kinds = layer_group_spec(cfg)
     tokens = batch["tokens"]
     b, s = tokens.shape
     memory8 = None
     if cfg.family == "encdec":
         memory8 = _int_encoder(qparams, batch["src_embeds"], plans, cfg,
-                               backend)
+                               ops)
     elif cfg.family == "vlm":
         memory8 = quantize_memory(batch["img_embeds"], cfg)
     if rope_tab is None and cfg.pos == "rope":
@@ -120,20 +125,20 @@ def int_prefill(qparams, batch, plans: qplans.LayerPlans, cfg: ArchConfig,
         for j, kind in enumerate(kinds):
             x32 = _int_sublayer_fwd(qp_group[j], x32, plans, cfg, kind,
                                     rope_tab, positions, cfg.is_causal,
-                                    memory8, backend)
+                                    memory8, ops)
         return x32, None
 
     x32, _ = jax.lax.scan(body, x32, tuple(qparams["layers"]))
     last = x32[:, -1:, :]
-    logits = logits_int(qparams, last, plans, cfg, backend)[:, 0]
+    logits = logits_int(qparams, last, plans, cfg, ops)[:, 0]
     if not return_cache:
         return logits
-    cache = build_cache_from_prefill(qparams, batch, plans, cfg, backend,
+    cache = build_cache_from_prefill(qparams, batch, plans, cfg, ops,
                                      cache_len or s)
     return logits, cache
 
 
-def _int_encoder(qparams, src_embeds, plans, cfg: ArchConfig, backend):
+def _int_encoder(qparams, src_embeds, plans, cfg: ArchConfig, ops):
     mem8 = quantize_memory(src_embeds, cfg)
     # boundary embeddings are on the s_act8 grid -> bring to the residual bus
     dn = qplans.fit_dyadic(cfg.s_act8 / cfg.s_res, 127)
@@ -143,21 +148,22 @@ def _int_encoder(qparams, src_embeds, plans, cfg: ArchConfig, backend):
     def body(x32, qp):
         x32 = _int_sublayer_fwd(qp, x32, plans, cfg,
                                 ("attn", "ffn", False), None, positions,
-                                False, None, backend)
+                                False, None, ops)
         return x32, None
 
     enc = qparams["enc_layers"]
     x32, _ = jax.lax.scan(body, x32, enc[0] if isinstance(enc, list)
                           else enc)
-    return il.int_norm(qparams["enc_final_norm"], x32, plans.norm, backend)
+    return il.int_norm(qparams["enc_final_norm"], x32, plans.norm, ops)
 
 
 # ============================================================ decode =======
 
 def init_decode_cache(cfg: ArchConfig, batch: int, cache_len: int,
                       memory8=None, qparams=None, plans=None,
-                      backend="ref"):
+                      ops=None):
     """Per-sublayer-position stacked caches (scan-compatible)."""
+    ops = resolve_ops(ops, cfg)
     gl, ng, kinds = layer_group_spec(cfg)
     L = min(cache_len, cfg.window) if cfg.window > 0 else cache_len
     caches = []
@@ -179,9 +185,9 @@ def init_decode_cache(cfg: ArchConfig, batch: int, cache_len: int,
                 src = qp["cross"] if has_cross else qp["attn"]
                 sk = memory8.shape[1]
                 k8 = il.int_linear(memory8, src["wk"],
-                                   plans.cross.qkv, backend)
+                                   plans.cross.qkv, ops)
                 v8 = il.int_linear(memory8, src["wv"],
-                                   plans.cross.qkv, backend)
+                                   plans.cross.qkv, ops)
                 kv.append((k8.reshape(batch, sk, cfg.n_kv_heads, cfg.hd),
                            v8.reshape(batch, sk, cfg.n_kv_heads, cfg.hd)))
             c["ck8"] = jnp.stack([a for a, _ in kv])
@@ -191,44 +197,44 @@ def init_decode_cache(cfg: ArchConfig, batch: int, cache_len: int,
 
 
 def _int_sublayer_decode(qp, cache, x32, plans, cfg: ArchConfig, kind,
-                         rope_tab, pos, backend):
+                         rope_tab, pos, ops):
     mix, ff, has_cross = kind
     new_cache = dict(cache)
-    h8 = il.int_norm(qp["norm1"], x32, plans.norm, backend)
+    h8 = il.int_norm(qp["norm1"], x32, plans.norm, ops)
     if mix == "attn":
         a32, kv = il.int_attn_decode(qp["attn"], h8, cache, pos,
                                      plans.attn, cfg, rope_tab,
-                                     window=cfg.window, backend=backend)
+                                     window=cfg.window, ops=ops)
         new_cache.update(kv)
     elif mix == "cross":
-        a32 = _cross_decode(qp["attn"], h8, cache, plans, cfg, pos, backend)
+        a32 = _cross_decode(qp["attn"], h8, cache, plans, cfg, pos, ops)
     else:
         st = il.IntMambaState(cache["h"], cache["conv"])
         a32_t, st = il.int_mamba_step(qp["ssm"], h8[:, 0], st, plans.mamba,
-                                      cfg, backend)
+                                      cfg, ops)
         a32 = a32_t[:, None]
         new_cache.update({"h": st.h, "conv": st.conv})
     x32 = _residual_add(x32, a32, cfg)
     if has_cross:
-        h8 = il.int_norm(qp["norm_cross"], x32, plans.norm, backend)
+        h8 = il.int_norm(qp["norm_cross"], x32, plans.norm, ops)
         c32 = _cross_decode(qp["cross"], h8, cache, plans, cfg, pos,
-                            backend)
+                            ops)
         x32 = _residual_add(x32, c32, cfg)
     if ff is not None:
-        h8 = il.int_norm(qp["norm2"], x32, plans.norm, backend)
+        h8 = il.int_norm(qp["norm2"], x32, plans.norm, ops)
         if ff == "moe":
-            f32 = il.int_moe_fwd(qp["moe"], h8, plans.moe, cfg, backend,
+            f32 = il.int_moe_fwd(qp["moe"], h8, plans.moe, cfg, ops,
                                  group_size=1)
         else:
-            f32 = il.int_ffn_fwd(qp["ffn"], h8, plans.ffn, cfg, backend)
+            f32 = il.int_ffn_fwd(qp["ffn"], h8, plans.ffn, cfg, ops)
         x32 = _residual_add(x32, f32, cfg)
     return x32, new_cache
 
 
-def _cross_decode(qp, h8, cache, plans, cfg, pos, backend):
+def _cross_decode(qp, h8, cache, plans, cfg, pos, ops):
     from repro.core import attention as iattn
     b = h8.shape[0]
-    q8 = il.int_linear(h8, qp["wq"], plans.cross.qkv, backend) \
+    q8 = il.int_linear(h8, qp["wq"], plans.cross.qkv, ops) \
         .reshape(b, 1, cfg.n_heads, cfg.hd)
     rep = cfg.q_group
     k8 = jnp.repeat(cache["ck8"], rep, 2) if rep > 1 else cache["ck8"]
@@ -236,15 +242,16 @@ def _cross_decode(qp, h8, cache, plans, cfg, pos, backend):
     valid = jnp.full((b,), k8.shape[1], jnp.int32)
     o8 = iattn.i_attention_decode(q8, k8, v8, plans.cross.attn, valid)
     return il.int_linear(o8.astype(jnp.int8).reshape(b, 1, -1), qp["wo"],
-                         plans.cross.out, backend)
+                         plans.cross.out, ops)
 
 
 def int_decode_step(qparams, caches, tokens, pos, plans, cfg: ArchConfig,
-                    rope_tab=None, backend="ref"):
+                    rope_tab=None, ops=None):
     """tokens: (B,) int32; pos: (B,) int32.  Returns (logits, caches).
 
     One scan over layer groups; inside the body the ``gl`` sublayers run in
     architectural order (same traversal as prefill)."""
+    ops = resolve_ops(ops, cfg)
     gl, ng, kinds = layer_group_spec(cfg)
     x32 = embed_int(qparams, tokens[:, None], plans, cfg)
 
@@ -254,20 +261,21 @@ def int_decode_step(qparams, caches, tokens, pos, plans, cfg: ArchConfig,
         for j, kind in enumerate(kinds):
             x32, nc = _int_sublayer_decode(qp_group[j], cache_group[j],
                                            x32, plans, cfg, kind, rope_tab,
-                                           pos, backend)
+                                           pos, ops)
             new_group.append(nc)
         return x32, tuple(new_group)
 
     x32, new_caches = jax.lax.scan(
         body, x32, (tuple(qparams["layers"]), tuple(caches)))
-    logits = logits_int(qparams, x32, plans, cfg, backend)[:, 0]
+    logits = logits_int(qparams, x32, plans, cfg, ops)[:, 0]
     return logits, list(new_caches)
 
 
-def build_cache_from_prefill(qparams, batch, plans, cfg, backend,
+def build_cache_from_prefill(qparams, batch, plans, cfg, ops,
                              cache_len):
     """Serving-engine helper: run prefill token-by-token into the decode
     cache (kept simple; the engine uses it for short prompts)."""
+    ops = resolve_ops(ops, cfg)
     gl, ng, kinds = layer_group_spec(cfg)
     tokens = batch["tokens"]
     b, s = tokens.shape
@@ -276,9 +284,9 @@ def build_cache_from_prefill(qparams, batch, plans, cfg, backend,
         memory8 = quantize_memory(batch["img_embeds"], cfg)
     elif cfg.family == "encdec":
         memory8 = _int_encoder(qparams, batch["src_embeds"], plans, cfg,
-                               backend)
+                               ops)
     caches = init_decode_cache(cfg, b, cache_len, memory8, qparams, plans,
-                               backend)
+                               ops)
     rope_tab = il.build_rope_table(cache_len + 1, cfg.hd, cfg.rope_theta) \
         if cfg.pos == "rope" else None
 
@@ -287,7 +295,7 @@ def build_cache_from_prefill(qparams, batch, plans, cfg, backend,
         tok = jax.lax.dynamic_index_in_dim(tokens, t, 1, keepdims=False)
         pos = jnp.full((b,), t, jnp.int32)
         logits, caches = int_decode_step(qparams, caches, tok, pos, plans,
-                                         cfg, rope_tab, backend)
+                                         cfg, rope_tab, ops)
         return caches, logits
 
     caches, _ = jax.lax.scan(step, caches, jnp.arange(s))

@@ -17,6 +17,7 @@ from repro.models import transformer as tf
 from repro.models.common import ArchConfig, ShapeConfig, SHAPES
 from repro.models.transformer import layer_group_spec
 from repro.quant import plans as qplans
+from repro.ops import QuantLinearParams
 
 Pytree = Any
 SDS = jax.ShapeDtypeStruct
@@ -71,12 +72,10 @@ def input_specs(cfg: ArchConfig, shape: ShapeConfig,
 
 def _lin_spec(ng, k, n, plan: qplans.LinearPlan, bias=False, lead=()):
     base = (ng,) + lead if ng else lead
-    out = {"w8": SDS(base + (k, n), jnp.int8)}
-    if plan.s_out != 0.0:
-        out["b_mult"] = SDS(base + (n,), jnp.int32)
-    if bias:
-        out["bias32"] = SDS(base + (n,), jnp.int32)
-    return out
+    return QuantLinearParams(
+        w8=SDS(base + (k, n), jnp.int8),
+        b_mult=SDS(base + (n,), jnp.int32) if plan.s_out != 0.0 else None,
+        bias32=SDS(base + (n,), jnp.int32) if bias else None)
 
 
 def _norm_spec(ng, d, cfg):
@@ -113,7 +112,8 @@ def _moe_spec(ng, cfg: ArchConfig, plans: qplans.MoePlan):
     d, e = cfg.d_model, cfg.padded_experts()
     f = cfg.moe_d_ff or cfg.d_ff
     out = {
-        "router": {"w8": SDS((ng, d, e) if ng else (d, e), jnp.int8)},
+        "router": QuantLinearParams(
+            SDS((ng, d, e) if ng else (d, e), jnp.int8)),
         "w1": _lin_spec(ng, d, f, plans.expert.up, lead=(e,)),
         "w2": _lin_spec(ng, f, d, plans.expert.down, lead=(e,)),
     }
@@ -132,7 +132,7 @@ def _mamba_spec(ng, cfg: ArchConfig, mp: qplans.MambaPlan):
     lead = (ng,) if ng else ()
     return {
         "in_proj": _lin_spec(ng, d, w, mp.in_proj),
-        "dt_proj": {"w8": SDS(lead + (d, h), jnp.int8)},
+        "dt_proj": QuantLinearParams(SDS(lead + (d, h), jnp.int8)),
         "conv_w8": SDS(lead + (cfg.ssm_conv, conv_ch), jnp.int8),
         "A_q": SDS(lead + (h,), jnp.int32),
         "D_q": SDS(lead + (h,), jnp.int32),
@@ -171,7 +171,7 @@ def qparams_spec(cfg: ArchConfig,
     spec: Dict[str, Pytree] = {
         "embed_w8": SDS((v, d), jnp.int8),
         "final_norm": _norm_spec(0, d, cfg),
-        "head": {"w8": SDS((d, v), jnp.int8)},
+        "head": QuantLinearParams(SDS((d, v), jnp.int8)),
         "head_scale": SDS((v,), jnp.float32),
         "layers": [_sublayer_spec(ng, cfg, plans, kinds[j])
                    for j in range(gl)],

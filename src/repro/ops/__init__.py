@@ -1,0 +1,89 @@
+"""repro.ops — the unified operator API for the integer datapath.
+
+Single entry point for SwiftTron's five integer ops (INT8 matmul,
+Attention, Softmax, GELU, LayerNorm):
+
+  * :class:`RequantSpec` — typed, validated union of the three requant
+    epilogue forms (per-tensor dyadic / per-channel vector / raw int32);
+  * :class:`QuantLinearParams` — typed quantized-linear parameter pytree;
+  * :class:`Backend` protocol + registry (``register_backend`` /
+    ``get_backend``), the ``REPRO_BACKEND`` env override and the
+    :func:`use_backend` context;
+  * :class:`OpSet` — the handle models take once at construction
+    (default backend + per-op overrides).
+
+See docs/OPS_API.md for the full API and migration notes from the old
+``repro.kernels.ops`` string-dispatch wrappers.
+"""
+from __future__ import annotations
+
+from repro.ops.registry import (Backend, OpSet, available_backends,
+                                current_opset, get_backend,
+                                register_backend, resolve_ops,
+                                unregister_backend, use_backend,
+                                DEFAULT_BACKEND, ENV_VAR, OP_NAMES)
+from repro.ops.spec import (PER_CHANNEL, PER_TENSOR, RAW,
+                            QuantLinearParams, RequantSpec)
+
+__all__ = [
+    "Backend", "OpSet", "QuantLinearParams", "RequantSpec",
+    "available_backends", "current_opset", "get_backend",
+    "register_backend", "resolve_ops", "unregister_backend",
+    "use_backend", "DEFAULT_BACKEND", "ENV_VAR", "OP_NAMES",
+    "PER_CHANNEL", "PER_TENSOR", "RAW",
+    "int8_matmul", "int_softmax", "int_gelu", "int_layernorm",
+    "int_attention",
+]
+
+
+def _register_builtin_backends():
+    from repro.ops.backends.pallas import PallasBackend
+    from repro.ops.backends.ref import RefBackend
+    register_backend("ref", RefBackend(), overwrite=True)
+    register_backend("pallas", lambda: PallasBackend(), overwrite=True)
+    # tuned tile profile: wider matmul K-blocks + deeper row-blocking for
+    # the elementwise kernels; exists to prove per-op backend config needs
+    # no model changes (swap via REPRO_BACKEND=pallas_tuned)
+    register_backend(
+        "pallas_tuned",
+        lambda: PallasBackend(name="pallas_tuned", blocks={
+            "int8_matmul": dict(bm=256, bn=256, bk=1024),
+            "int_attention": dict(bq=256, bkv=256),
+            "int_softmax": dict(block_rows=16),
+            "int_layernorm": dict(block_rows=16),
+            "int_gelu": dict(block=8192),
+        }), overwrite=True)
+
+
+_register_builtin_backends()
+
+
+# Module-level convenience entry points: dispatch through the ambient
+# OpSet (use_backend context > REPRO_BACKEND env > "ref"), or an explicit
+# ``ops=`` handle.
+
+def int8_matmul(x8, w8, spec, *, bias32=None, b_vec=None, ops=None, **opts):
+    return resolve_ops(ops).int8_matmul(x8, w8, spec, bias32=bias32,
+                                        b_vec=b_vec, **opts)
+
+
+def int_softmax(scores, plan, *, ops=None, **opts):
+    return resolve_ops(ops).int_softmax(scores, plan, **opts)
+
+
+def int_gelu(q, plan, dn_out, out_bits: int = 8, *, ops=None, **opts):
+    return resolve_ops(ops).int_gelu(q, plan, dn_out, out_bits=out_bits,
+                                     **opts)
+
+
+def int_layernorm(q, q_gamma, q_beta, plan, out_bits: int = 8, *,
+                  ops=None, **opts):
+    return resolve_ops(ops).int_layernorm(q, q_gamma, q_beta, plan,
+                                          out_bits=out_bits, **opts)
+
+
+def int_attention(q8, k8, v8, plan, causal: bool = True, window: int = 0,
+                  out_bits: int = 8, *, ops=None, **opts):
+    return resolve_ops(ops).int_attention(q8, k8, v8, plan, causal=causal,
+                                          window=window, out_bits=out_bits,
+                                          **opts)

@@ -1,0 +1,5 @@
+"""Built-in backend implementations (registered by ``repro.ops``)."""
+from repro.ops.backends.ref import RefBackend
+from repro.ops.backends.pallas import PallasBackend
+
+__all__ = ["RefBackend", "PallasBackend"]

@@ -1,0 +1,117 @@
+"""Pallas backend: the TPU kernels, interpret-mode on CPU.
+
+Block shapes are a per-op *configuration* of the backend instance —
+``PallasBackend(name="pallas_tuned", blocks={"int8_matmul": dict(bm=256,
+bn=256, bk=256)})`` registers a differently-tiled variant without
+touching the kernels or the models (the registry's whole point).
+Requested blocks are shrunk to the largest divisor of the actual dim so
+a tuned profile never trips the kernels' divisibility asserts on odd
+shapes.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.int8_matmul import int8_matmul_pallas
+from repro.kernels.int_attention import int_attention_pallas
+from repro.kernels.int_gelu import int_gelu_pallas
+from repro.kernels.int_layernorm import int_layernorm_pallas
+from repro.kernels.int_softmax import int_softmax_pallas
+from repro.ops import spec as _spec
+
+
+def _fit_block(blk: int, dim: int) -> int:
+    """Largest block <= blk that divides dim (kernels assert dim % blk)."""
+    blk = min(blk, dim)
+    while dim % blk:
+        blk -= 1
+    return blk
+
+
+class PallasBackend:
+    fused_attention = True
+
+    def __init__(self, name: str = "pallas",
+                 interpret: Optional[bool] = None,
+                 blocks: Optional[Dict[str, Dict[str, int]]] = None):
+        self.name = name
+        self._interpret = interpret
+        self.blocks = {op: dict(kw) for op, kw in (blocks or {}).items()}
+
+    def _interp(self) -> bool:
+        if self._interpret is not None:
+            return self._interpret
+        return jax.default_backend() != "tpu"
+
+    def _opts(self, op: str, call_opts: dict) -> dict:
+        merged = dict(self.blocks.get(op, {}))
+        merged.update(call_opts)
+        return merged
+
+    # ------------------------------------------------------------- ops --
+
+    def int8_matmul(self, x8, w8, spec, *, bias32=None, b_vec=None, **opts):
+        if spec.is_raw:
+            # no requant epilogue to fuse -> nothing for the kernel to
+            # add over XLA's int8 dot, and raw consumers (lm head,
+            # router, dt proj) often have odd N where divisor-fitted
+            # blocks would degenerate; keep the MXU dot
+            acc = jnp.dot(x8, w8, preferred_element_type=jnp.int32)
+            if bias32 is not None:
+                acc = acc + bias32[None, :]
+            return acc
+        opts = self._opts("int8_matmul", opts)
+        m, k = x8.shape
+        n = w8.shape[-1]
+        bm = _fit_block(opts.pop("bm", 128), m)
+        bn = _fit_block(opts.pop("bn", 128), n)
+        bk = _fit_block(opts.pop("bk", 512), k)
+        if spec.kind == _spec.PER_TENSOR:
+            out = int8_matmul_pallas(x8, w8, bias32, dn=spec.dn,
+                                     out_bits=spec.out_bits,
+                                     out_dtype=spec.out_dtype,
+                                     bm=bm, bn=bn, bk=bk,
+                                     interpret=self._interp(), **opts)
+        else:
+            if b_vec is None:
+                raise ValueError("per-channel RequantSpec needs the b_vec "
+                                 "multiplier vector "
+                                 "(QuantLinearParams.b_mult)")
+            out = int8_matmul_pallas(x8, w8, bias32, b_vec=b_vec,
+                                     c=spec.c, pre=spec.pre,
+                                     out_bits=spec.out_bits,
+                                     out_dtype=spec.out_dtype,
+                                     bm=bm, bn=bn, bk=bk,
+                                     interpret=self._interp(), **opts)
+        return out
+
+    def int_softmax(self, scores, plan, **opts):
+        opts = self._opts("int_softmax", opts)
+        opts.pop("where", None)   # oracle-only kwarg; kernel masks inline
+        return int_softmax_pallas(scores, plan, interpret=self._interp(),
+                                  **opts)
+
+    def int_gelu(self, q, plan, dn_out, out_bits: int = 8, **opts):
+        opts = self._opts("int_gelu", opts)
+        return int_gelu_pallas(q, plan, dn_out, out_bits,
+                               interpret=self._interp(), **opts)
+
+    def int_layernorm(self, q, q_gamma, q_beta, plan, out_bits: int = 8,
+                      **opts):
+        opts = self._opts("int_layernorm", opts)
+        return int_layernorm_pallas(q, q_gamma, q_beta, plan, out_bits,
+                                    interpret=self._interp(), **opts)
+
+    def int_attention(self, q8, k8, v8, plan, causal: bool = True,
+                      window: int = 0, out_bits: int = 8, **opts):
+        opts = self._opts("int_attention", opts)
+        sq, skv = q8.shape[1], k8.shape[1]
+        bq = _fit_block(opts.pop("bq", 128), sq)
+        bkv = _fit_block(opts.pop("bkv", 128), skv)
+        return int_attention_pallas(q8, k8, v8, plan, causal=causal,
+                                    window=window, bq=bq, bkv=bkv,
+                                    out_bits=out_bits,
+                                    interpret=self._interp(), **opts)

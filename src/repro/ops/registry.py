@@ -1,0 +1,242 @@
+"""Backend protocol, registry, and the OpSet dispatch handle.
+
+Every integer operator (INT8 matmul, attention, softmax, GELU,
+LayerNorm) is implemented by a *backend* — an object with the five
+methods of :class:`Backend`.  Backends register under a name
+(``register_backend``) and models receive a resolved :class:`OpSet`
+handle once at construction instead of threading ``backend="ref"``
+strings through every call.
+
+Resolution order for ``resolve_ops(spec, cfg)``:
+
+  1. an explicit ``spec`` argument (OpSet / Backend / name);
+  2. the innermost active :func:`use_backend` context;
+  3. the ``REPRO_BACKEND`` environment variable;
+  4. ``cfg.kernel_backend`` when an ArchConfig is supplied;
+  5. the ``"ref"`` default.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import threading
+from typing import Any, Callable, Dict, Optional, Protocol, Union, \
+    runtime_checkable
+
+ENV_VAR = "REPRO_BACKEND"
+DEFAULT_BACKEND = "ref"
+
+OP_NAMES = ("int8_matmul", "int_softmax", "int_gelu", "int_layernorm",
+            "int_attention")
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """The five integer ops every backend implements.
+
+    ``fused_attention`` advertises a single-kernel attention path (the
+    model layer falls back to the streaming/chunked formulation when the
+    backend only offers the full-matrix oracle).
+    """
+
+    name: str
+    fused_attention: bool
+
+    def int8_matmul(self, x8, w8, spec, *, bias32=None, b_vec=None,
+                    **opts): ...
+
+    def int_softmax(self, scores, plan, **opts): ...
+
+    def int_gelu(self, q, plan, dn_out, out_bits: int = 8, **opts): ...
+
+    def int_layernorm(self, q, q_gamma, q_beta, plan, out_bits: int = 8,
+                      **opts): ...
+
+    def int_attention(self, q8, k8, v8, plan, causal: bool = True,
+                      window: int = 0, out_bits: int = 8, **opts): ...
+
+
+def _is_backend(obj) -> bool:
+    """A backend *instance*: the five ops plus name/fused_attention.
+
+    Classes are excluded — a registered class is a factory, and calling
+    its unbound methods would misbind ``self``.
+    """
+    if isinstance(obj, type):
+        return False
+    return (all(callable(getattr(obj, op, None)) for op in OP_NAMES)
+            and isinstance(getattr(obj, "name", None), str)
+            and hasattr(obj, "fused_attention"))
+
+
+_REGISTRY: Dict[str, Union[Backend, Callable[[], Backend]]] = {}
+_LOCK = threading.Lock()
+
+
+def register_backend(name: str, backend, *, overwrite: bool = False):
+    """Register a backend instance or zero-arg factory under ``name``."""
+    if not (_is_backend(backend) or callable(backend)):
+        raise TypeError(f"{backend!r} implements neither the Backend "
+                        "protocol nor a factory for one")
+    with _LOCK:
+        if name in _REGISTRY and not overwrite:
+            raise ValueError(f"backend {name!r} already registered "
+                             "(pass overwrite=True to replace)")
+        _REGISTRY[name] = backend
+
+
+def unregister_backend(name: str):
+    with _LOCK:
+        _REGISTRY.pop(name, None)
+
+
+def get_backend(name: str) -> Backend:
+    """Look up a registered backend, instantiating lazy factories once."""
+    with _LOCK:
+        entry = _REGISTRY.get(name)
+    if entry is None:
+        raise KeyError(f"unknown backend {name!r}; registered: "
+                       f"{available_backends()}")
+    if not _is_backend(entry):
+        entry = entry()
+        if not _is_backend(entry):
+            raise TypeError(f"factory for {name!r} returned a "
+                            "non-Backend")
+        with _LOCK:
+            _REGISTRY[name] = entry
+    return entry
+
+
+def available_backends():
+    with _LOCK:
+        return sorted(_REGISTRY)
+
+
+def _as_backend(spec) -> Backend:
+    if isinstance(spec, str):
+        return get_backend(spec)
+    if _is_backend(spec):
+        return spec
+    raise TypeError(f"cannot interpret {spec!r} as a backend")
+
+
+class OpSet:
+    """A resolved operator bundle: one default backend + per-op overrides.
+
+    Models hold exactly one of these; every integer op dispatches through
+    it, so swapping backends (or overriding a single op, e.g. fused
+    attention on Pallas with everything else on ref) never touches model
+    code.
+    """
+
+    __slots__ = ("default", "overrides")
+
+    def __init__(self, default, overrides: Optional[Dict[str, Any]] = None):
+        self.default = _as_backend(default)
+        ov = {}
+        for op, b in (overrides or {}).items():
+            if op not in OP_NAMES:
+                raise KeyError(f"unknown op {op!r}; valid ops: {OP_NAMES}")
+            ov[op] = _as_backend(b)
+        self.overrides = ov
+
+    # ------------------------------------------------------------ admin --
+
+    @property
+    def name(self) -> str:
+        if not self.overrides:
+            return self.default.name
+        ov = ",".join(f"{op}={b.name}"
+                      for op, b in sorted(self.overrides.items()))
+        return f"{self.default.name}[{ov}]"
+
+    def backend_for(self, op: str) -> Backend:
+        if op not in OP_NAMES:
+            raise KeyError(f"unknown op {op!r}; valid ops: {OP_NAMES}")
+        return self.overrides.get(op, self.default)
+
+    def with_overrides(self, **per_op) -> "OpSet":
+        merged = dict(self.overrides)
+        merged.update(per_op)
+        return OpSet(self.default, merged)
+
+    def __repr__(self):
+        return f"OpSet({self.name})"
+
+    # --------------------------------------------------------- dispatch --
+
+    def int8_matmul(self, x8, w8, spec, *, bias32=None, b_vec=None, **opts):
+        return self.backend_for("int8_matmul").int8_matmul(
+            x8, w8, spec, bias32=bias32, b_vec=b_vec, **opts)
+
+    def int_softmax(self, scores, plan, **opts):
+        return self.backend_for("int_softmax").int_softmax(
+            scores, plan, **opts)
+
+    def int_gelu(self, q, plan, dn_out, out_bits: int = 8, **opts):
+        return self.backend_for("int_gelu").int_gelu(
+            q, plan, dn_out, out_bits=out_bits, **opts)
+
+    def int_layernorm(self, q, q_gamma, q_beta, plan, out_bits: int = 8,
+                      **opts):
+        return self.backend_for("int_layernorm").int_layernorm(
+            q, q_gamma, q_beta, plan, out_bits=out_bits, **opts)
+
+    def int_attention(self, q8, k8, v8, plan, causal: bool = True,
+                      window: int = 0, out_bits: int = 8, **opts):
+        return self.backend_for("int_attention").int_attention(
+            q8, k8, v8, plan, causal=causal, window=window,
+            out_bits=out_bits, **opts)
+
+
+# ------------------------------------------------------------ resolution --
+
+_TLS = threading.local()
+
+
+def _stack():
+    stack = getattr(_TLS, "stack", None)
+    if stack is None:
+        stack = _TLS.stack = []
+    return stack
+
+
+def current_opset() -> Optional[OpSet]:
+    """The innermost active ``use_backend`` OpSet, if any."""
+    stack = _stack()
+    return stack[-1] if stack else None
+
+
+@contextlib.contextmanager
+def use_backend(spec, **per_op):
+    """Scope a backend choice: ``with use_backend("pallas"): ...``.
+
+    ``per_op`` overrides route individual ops elsewhere, e.g.
+    ``use_backend("ref", int_attention="pallas")``.
+    """
+    ops = OpSet(_as_backend(spec),
+                per_op or None) if not isinstance(spec, OpSet) \
+        else (spec.with_overrides(**per_op) if per_op else spec)
+    stack = _stack()
+    stack.append(ops)
+    try:
+        yield ops
+    finally:
+        stack.pop()
+
+
+def resolve_ops(spec=None, cfg=None) -> OpSet:
+    """Resolve ``spec`` (OpSet / Backend / name / None) to an OpSet."""
+    if isinstance(spec, OpSet):
+        return spec
+    if spec is not None:
+        return OpSet(_as_backend(spec))
+    active = current_opset()
+    if active is not None:
+        return active
+    env = os.environ.get(ENV_VAR)
+    if env:
+        return OpSet(get_backend(env))
+    if cfg is not None and getattr(cfg, "kernel_backend", None):
+        return OpSet(get_backend(cfg.kernel_backend))
+    return OpSet(get_backend(DEFAULT_BACKEND))

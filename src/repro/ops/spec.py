@@ -1,0 +1,142 @@
+"""Typed operator-API datatypes: the requant epilogue and linear params.
+
+SwiftTron freezes every scale ratio at design time; at the API boundary
+that means each integer op carries exactly one of three epilogue forms:
+
+  * **per-tensor**  — a single :class:`~repro.core.dyadic.Dyadic` pair
+    ``(b, c, pre)`` applied to the whole accumulator;
+  * **per-channel** — an int32 multiplier *vector* (a runtime array,
+    ``QuantLinearParams.b_mult``) with plan-level shared shifts
+    ``(c, pre)`` (the paper's per-channel weight scales folded into the
+    requant unit);
+  * **raw**         — no requant: the int32 accumulator is returned
+    untouched (router logits, lm-head, Δt projection).
+
+:class:`RequantSpec` is the frozen, validated union of the three; it
+replaces the ``dn= / b_vec= / c= / pre= / out_bits=`` keyword spaghetti
+the kernels used to take.  :class:`QuantLinearParams` replaces the
+untyped ``{"w8", "b_mult", "bias32"}`` dicts in the quantized parameter
+pytree (NamedTuples are jax pytrees, so scan / tree_map / checkpointing
+all keep working).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax.numpy as jnp
+
+from repro.core.dyadic import Dyadic
+
+PER_TENSOR = "per_tensor"
+PER_CHANNEL = "per_channel"
+RAW = "raw"
+
+_KINDS = (PER_TENSOR, PER_CHANNEL, RAW)
+
+
+@dataclasses.dataclass(frozen=True)
+class RequantSpec:
+    """Frozen description of an op's requantization epilogue.
+
+    Use the constructors — ``per_tensor`` / ``per_channel`` / ``raw`` /
+    ``for_linear`` — rather than the raw dataclass fields.
+    """
+
+    kind: str
+    out_bits: int = 8
+    dn: Optional[Dyadic] = None   # per-tensor dyadic pair
+    c: int = 0                    # per-channel shared total shift
+    pre: int = 0                  # per-channel shared pre-shift
+
+    def __post_init__(self):
+        if self.kind not in _KINDS:
+            raise ValueError(f"RequantSpec kind must be one of {_KINDS}, "
+                             f"got {self.kind!r}")
+        if not 2 <= self.out_bits <= 32:
+            raise ValueError(f"out_bits must be in [2, 32], got "
+                             f"{self.out_bits}")
+        if self.kind == PER_TENSOR:
+            if not isinstance(self.dn, Dyadic):
+                raise ValueError("per-tensor RequantSpec needs a Dyadic "
+                                 f"(got dn={self.dn!r})")
+        elif self.kind == PER_CHANNEL:
+            if self.dn is not None:
+                raise ValueError("per-channel RequantSpec takes (c, pre), "
+                                 "not a Dyadic")
+            if not 0 <= self.pre <= self.c:
+                raise ValueError(f"need 0 <= pre <= c, got c={self.c} "
+                                 f"pre={self.pre}")
+        else:  # RAW
+            if self.dn is not None or self.c or self.pre:
+                raise ValueError("raw RequantSpec carries no requant "
+                                 "constants")
+            if self.out_bits != 32:
+                raise ValueError("raw accumulators are int32 "
+                                 f"(out_bits=32), got {self.out_bits}")
+
+    # ------------------------------------------------------ constructors --
+
+    @classmethod
+    def per_tensor(cls, dn: Dyadic, out_bits: int = 8) -> "RequantSpec":
+        """Whole-tensor dyadic requant (``q_out = (q_in * b) >> c``)."""
+        return cls(PER_TENSOR, out_bits, dn=dn)
+
+    @classmethod
+    def per_channel(cls, c: int, pre: int, out_bits: int = 8
+                    ) -> "RequantSpec":
+        """Per-out-channel multipliers with shared static shifts.
+
+        The multiplier vector itself is a runtime array and travels with
+        the weights (``QuantLinearParams.b_mult``); only the shifts are
+        frozen here.
+        """
+        return cls(PER_CHANNEL, out_bits, c=c, pre=pre)
+
+    @classmethod
+    def raw(cls) -> "RequantSpec":
+        """Keep the int32 accumulator (requant happens downstream)."""
+        return cls(RAW, 32)
+
+    @classmethod
+    def for_linear(cls, plan) -> "RequantSpec":
+        """The epilogue a ``quant.plans.LinearPlan`` describes."""
+        if plan.s_out == 0.0:
+            return cls.raw()
+        return cls.per_channel(plan.c, plan.pre, plan.out_bits)
+
+    # -------------------------------------------------------- properties --
+
+    @property
+    def is_raw(self) -> bool:
+        return self.kind == RAW
+
+    @property
+    def out_dtype(self):
+        """Narrowest container for the clipped output."""
+        return jnp.int8 if self.out_bits <= 8 else jnp.int32
+
+
+class QuantLinearParams(NamedTuple):
+    """Quantized linear-layer parameters (a jax pytree).
+
+    ``w8``     — int8 weights ``(..., K, N)``;
+    ``b_mult`` — optional int32 per-out-channel requant multipliers
+                 ``(..., N)`` (present iff the layer's plan requantizes);
+    ``bias32`` — optional int32 bias at the accumulator scale ``(..., N)``.
+    """
+
+    w8: Any
+    b_mult: Optional[Any] = None
+    bias32: Optional[Any] = None
+
+    @classmethod
+    def of(cls, obj) -> "QuantLinearParams":
+        """Normalize a legacy ``{"w8", ...}`` dict or pass through."""
+        if isinstance(obj, cls):
+            return obj
+        if isinstance(obj, dict):
+            return cls(w8=obj["w8"], b_mult=obj.get("b_mult"),
+                       bias32=obj.get("bias32"))
+        raise TypeError(f"cannot interpret {type(obj).__name__} as "
+                        "QuantLinearParams")

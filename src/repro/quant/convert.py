@@ -19,6 +19,7 @@ import numpy as np
 from repro.core import norms
 from repro.models.common import ArchConfig
 from repro.models.transformer import layer_group_spec
+from repro.ops import QuantLinearParams
 from repro.quant import plans as qplans
 
 Pytree = Any
@@ -30,7 +31,7 @@ def _pc_scales(w: np.ndarray, out_axis: int) -> np.ndarray:
 
 
 def _q_linear(w, plan: qplans.LinearPlan, bias=None, stacked: bool = False):
-    """w: (K, N) or stacked (..., K, N) -> {"w8", "b_mult"[, "bias32"]}.
+    """w: (K, N) or stacked (..., K, N) -> QuantLinearParams.
 
     Per-channel scales along the last axis; leading axes (layer-stack /
     expert) keep their own scale vectors.
@@ -38,17 +39,17 @@ def _q_linear(w, plan: qplans.LinearPlan, bias=None, stacked: bool = False):
     w = np.asarray(jax.device_get(w), np.float64)
     s = np.maximum(np.abs(w).max(axis=-2), 1e-8) / 127.0       # (..., N)
     w8 = np.clip(np.round(w / s[..., None, :]), -127, 127).astype(np.int8)
-    out = {"w8": jnp.asarray(w8)}
+    b_mult = bias32 = None
     if plan.s_out != 0.0:
         ratios = plan.s_in * s / plan.s_out
         b = np.round(ratios * (1 << plan.c))
         assert (np.abs(b) < 2 ** 31).all(), "per-channel multiplier overflow"
-        out["b_mult"] = jnp.asarray(b.astype(np.int32))
+        b_mult = jnp.asarray(b.astype(np.int32))
     if bias is not None:
         bias = np.asarray(jax.device_get(bias), np.float64)
-        out["bias32"] = jnp.asarray(
+        bias32 = jnp.asarray(
             np.round(bias / (plan.s_in * s)).astype(np.int32))
-    return out, s
+    return QuantLinearParams(jnp.asarray(w8), b_mult, bias32), s
 
 
 def _q_attn_w(w, plan):
@@ -88,8 +89,8 @@ def _q_attn(p, plans: qplans.AttnPlan):
             w = np.asarray(jax.device_get(p[w_key]), np.float64)
             w = w.reshape(*w.shape[:-2], -1)
             s = np.maximum(np.abs(w).max(axis=-2), 1e-8) / 127.0
-            out[w_key]["bias32"] = jnp.asarray(
-                np.round(bias / (plans.qkv.s_in * s)).astype(np.int32))
+            out[w_key] = out[w_key]._replace(bias32=jnp.asarray(
+                np.round(bias / (plans.qkv.s_in * s)).astype(np.int32)))
     return out
 
 
@@ -107,8 +108,8 @@ def _q_moe(p, plans: qplans.MoePlan):
     out = {}
     w = np.asarray(jax.device_get(p["router"]), np.float64)
     s_router = np.abs(w).max() / 127.0
-    out["router"] = {"w8": jnp.asarray(
-        np.clip(np.round(w / s_router), -127, 127).astype(np.int8))}
+    out["router"] = QuantLinearParams(jnp.asarray(
+        np.clip(np.round(w / s_router), -127, 127).astype(np.int8)))
     out["w1"], _ = _q_linear(p["w1"], plans.expert.up)
     if "w3" in p:
         out["w3"], _ = _q_linear(p["w3"], plans.expert.up)
@@ -126,8 +127,8 @@ def _q_mamba(p, mp: qplans.MambaPlan, cfg: ArchConfig):
     out["in_proj"], _ = _q_linear(w[..., :n_zxbc], mp.in_proj)
     wdt = w[..., n_zxbc:]
     s_dtw = float(np.abs(wdt).max()) / 127.0
-    out["dt_proj"] = {"w8": jnp.asarray(
-        np.clip(np.round(wdt / s_dtw), -127, 127).astype(np.int8))}
+    out["dt_proj"] = QuantLinearParams(jnp.asarray(
+        np.clip(np.round(wdt / s_dtw), -127, 127).astype(np.int8)))
     cw = np.asarray(jax.device_get(p["conv_w"]), np.float64)
     s_conv = float(np.abs(cw).max()) / 127.0
     out["conv_w8"] = jnp.asarray(
@@ -197,8 +198,8 @@ def quantize_params(params: Pytree, cfg: ArchConfig
     head_w = emb.T if cfg.tie_embeddings else np.asarray(
         jax.device_get(params["lm_head"]), np.float64)
     s_head = _pc_scales(head_w, 1)
-    qparams["head"] = {"w8": jnp.asarray(np.clip(
-        np.round(head_w / s_head[None, :]), -127, 127).astype(np.int8))}
+    qparams["head"] = QuantLinearParams(jnp.asarray(np.clip(
+        np.round(head_w / s_head[None, :]), -127, 127).astype(np.int8)))
     qparams["head_scale"] = jnp.asarray(s_head.astype(np.float32))
     qparams["layers"] = [
         _q_sublayer(params["layers"][j], plans, cfg, kinds[j], {})

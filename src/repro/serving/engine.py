@@ -12,6 +12,7 @@ Slots are recycled between requests without recompiling: every shape
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Dict, List, Optional
 
 import jax
@@ -21,6 +22,7 @@ import numpy as np
 from repro.models import intlayers as il
 from repro.models import inttransformer as it
 from repro.models.common import ArchConfig
+from repro.ops import resolve_ops
 from repro.quant import plans as qplans
 
 
@@ -37,13 +39,18 @@ class Request:
 class ServingEngine:
     def __init__(self, qparams, plans: qplans.LayerPlans, cfg: ArchConfig,
                  batch_size: int = 8, cache_len: int = 512,
-                 backend: str = "ref", seed: int = 0):
+                 ops=None, seed: int = 0, backend=None):
+        if backend is not None:
+            warnings.warn("ServingEngine(backend=...) is deprecated; pass "
+                          "ops= (an OpSet or backend name)",
+                          DeprecationWarning, stacklevel=2)
+            ops = backend if ops is None else ops
         self.cfg = cfg
         self.plans = plans
         self.qparams = qparams
         self.batch = batch_size
         self.cache_len = cache_len
-        self.backend = backend
+        self.ops = resolve_ops(ops, cfg)
         self.rng = np.random.default_rng(seed)
         self.rope_tab = il.build_rope_table(cache_len + 1, cfg.hd,
                                             cfg.rope_theta) \
@@ -57,7 +64,7 @@ class ServingEngine:
     def _decode_impl(self, qparams, caches, tokens, pos):
         return it.int_decode_step(qparams, caches, tokens, pos,
                                   self.plans, self.cfg, self.rope_tab,
-                                  backend=self.backend)
+                                  ops=self.ops)
 
     # ------------------------------------------------------ scheduling ---
 

@@ -7,7 +7,11 @@ from repro.core import attention as iattn
 from repro.core import intmath, norms
 from repro.core import softmax as ism
 from repro.core.dyadic import fit_dyadic
-from repro.kernels import ops, ref
+from repro.kernels import ref
+from repro.ops import RequantSpec, get_backend
+
+PALLAS = get_backend("pallas")
+REF = get_backend("ref")
 
 
 @pytest.mark.parametrize("m,k,n,bm,bn,bk", [
@@ -21,9 +25,9 @@ def test_int8_matmul_shapes(rng, m, k, n, bm, bn, bk):
     w = rng.integers(-127, 128, (k, n)).astype(np.int8)
     bias = rng.integers(-2**18, 2**18, (n,)).astype(np.int32)
     dn = fit_dyadic(1 / 4000.0, k * 127 * 127 + 2**18)
-    got = np.asarray(ops.int8_matmul(
-        jnp.asarray(x), jnp.asarray(w), jnp.asarray(bias), dn=dn,
-        backend="pallas", bm=bm, bn=bn, bk=bk))
+    got = np.asarray(PALLAS.int8_matmul(
+        jnp.asarray(x), jnp.asarray(w), RequantSpec.per_tensor(dn),
+        bias32=jnp.asarray(bias), bm=bm, bn=bn, bk=bk))
     want = np.asarray(ref.ref_int8_matmul(
         jnp.asarray(x), jnp.asarray(w), jnp.asarray(bias), dn))
     assert np.array_equal(got, want)
@@ -34,9 +38,9 @@ def test_int8_matmul_perchannel(rng):
     x = rng.integers(-127, 128, (m, k)).astype(np.int8)
     w = rng.integers(-127, 128, (k, n)).astype(np.int8)
     bvec = rng.integers(1000, 30000, (n,)).astype(np.int32)
-    got = np.asarray(ops.int8_matmul(
-        jnp.asarray(x), jnp.asarray(w), None, b_vec=jnp.asarray(bvec),
-        c=28, pre=7, backend="pallas"))
+    got = np.asarray(PALLAS.int8_matmul(
+        jnp.asarray(x), jnp.asarray(w), RequantSpec.per_channel(28, 7),
+        b_vec=jnp.asarray(bvec)))
     want = np.asarray(ref.ref_int8_matmul_perchannel(
         jnp.asarray(x), jnp.asarray(w), None, jnp.asarray(bvec), 28, 7))
     assert np.array_equal(got, want)
@@ -46,9 +50,8 @@ def test_int8_matmul_perchannel(rng):
 def test_int_softmax_kernel(rng, rows, rowlen):
     sp = ism.make_isoftmax(s_score=3.5e-4, qmax_score=128 * 127 * 127)
     sc = rng.integers(-60000, 60000, (rows, rowlen)).astype(np.int32)
-    got = np.asarray(ops.int_softmax(jnp.asarray(sc), sp,
-                                     backend="pallas"))
-    want = np.asarray(ops.int_softmax(jnp.asarray(sc), sp, backend="ref"))
+    got = np.asarray(PALLAS.int_softmax(jnp.asarray(sc), sp))
+    want = np.asarray(REF.int_softmax(jnp.asarray(sc), sp))
     assert np.array_equal(got, want)
 
 
@@ -58,10 +61,8 @@ def test_int_gelu_kernel(rng, shape):
     plan = intmath.make_igelu(s, 1024)
     dn = fit_dyadic(plan.s_out / (8 / 127), 1024 * 2 * plan.q_one)
     q = rng.integers(-1024, 1025, shape).astype(np.int32)
-    got = np.asarray(ops.int_gelu(jnp.asarray(q), plan, dn,
-                                  backend="pallas"))
-    want = np.asarray(ops.int_gelu(jnp.asarray(q), plan, dn,
-                                   backend="ref"))
+    got = np.asarray(PALLAS.int_gelu(jnp.asarray(q), plan, dn))
+    want = np.asarray(REF.int_gelu(jnp.asarray(q), plan, dn))
     assert np.array_equal(got, want)
 
 
@@ -78,10 +79,8 @@ def test_int_layernorm_kernel(rng, d, subtract_mean):
         jnp.asarray(gamma), jnp.asarray(beta) if beta is not None else
         None, plan)
     q = rng.integers(-1024, 1025, (16, d)).astype(np.int32)
-    got = np.asarray(ops.int_layernorm(jnp.asarray(q), qg, qb, plan,
-                                       backend="pallas"))
-    want = np.asarray(ops.int_layernorm(jnp.asarray(q), qg, qb, plan,
-                                        backend="ref"))
+    got = np.asarray(PALLAS.int_layernorm(jnp.asarray(q), qg, qb, plan))
+    want = np.asarray(REF.int_layernorm(jnp.asarray(q), qg, qb, plan))
     assert np.array_equal(got, want)
 
 
@@ -95,12 +94,12 @@ def test_fused_attention_kernel(rng, h, hkv, window):
         .astype(np.int8)
     v8 = np.clip(rng.normal(0, 40, (b, s, hkv, d)), -127, 127) \
         .astype(np.int8)
-    got = np.asarray(ops.int_attention(
+    got = np.asarray(PALLAS.int_attention(
         jnp.asarray(q8), jnp.asarray(k8), jnp.asarray(v8), plan,
-        causal=True, window=window, backend="pallas", bq=64, bkv=64))
-    want = np.asarray(ops.int_attention(
+        causal=True, window=window, bq=64, bkv=64))
+    want = np.asarray(REF.int_attention(
         jnp.asarray(q8), jnp.asarray(k8), jnp.asarray(v8), plan,
-        causal=True, window=window, backend="ref"))
+        causal=True, window=window))
     diff = np.abs(got.astype(int) - want.astype(int))
     # online rescaling vs exact normalisation: <=1% of elements off by >1
     assert diff.max() <= 4
@@ -118,8 +117,8 @@ def test_int8_matmul_wide_output_bits(rng):
     w = rng.normal(0, 0.1, (128, 256))
     from repro.quant.convert import _q_linear
     qw, _ = _q_linear(jnp.asarray(w), plan)
-    a = np.asarray(il.int_linear(x8, qw, plan, backend="ref"))
-    b = np.asarray(il.int_linear(x8, qw, plan, backend="pallas"))
+    a = np.asarray(il.int_linear(x8, qw, plan, ops="ref"))
+    b = np.asarray(il.int_linear(x8, qw, plan, ops="pallas"))
     assert a.dtype == b.dtype == np.int32
     assert np.array_equal(a, b)
     assert np.abs(a).max() > 127          # exercises the >int8 range

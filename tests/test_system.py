@@ -49,8 +49,8 @@ def test_kernel_backend_flag():
     batch = {"tokens": jax.random.randint(jax.random.key(1), (1, 16), 0,
                                           cfg.vocab)}
     qp, plans = convert.quantize_params(params, cfg)
-    ref_logits = it.int_prefill(qp, batch, plans, cfg, backend="ref")
-    pl_logits = it.int_prefill(qp, batch, plans, cfg, backend="pallas")
+    ref_logits = it.int_prefill(qp, batch, plans, cfg, ops="ref")
+    pl_logits = it.int_prefill(qp, batch, plans, cfg, ops="pallas")
     corr = np.corrcoef(np.asarray(ref_logits).ravel(),
                        np.asarray(pl_logits).ravel())[0, 1]
     # fused online-softmax attention differs from the two-pass ref by
