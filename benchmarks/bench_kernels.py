@@ -60,6 +60,26 @@ def run():
     f = jax.jit(lambda a, kk: be.int_attention(a, kk, kk, ap))
     rows.append(("kernel_int_attention_us", round(_t(f, q8, k8), 1),
                  "1x1024x8x128 causal (ref path)"))
+
+    # fused-vs-unfused attention: the single-launch pallas_fused kernel
+    # against the two-pass reference on the same problem (modest shape —
+    # interpret mode on CPU; on TPU the same harness times the compiled
+    # kernel).  bench_fused_attention sweeps more shapes.
+    b, s, h, hd = 1, 256, 4, 64
+    q8 = jnp.asarray(rng.integers(-127, 128, (b, s, h, hd)), jnp.int8)
+    k8 = jnp.asarray(rng.integers(-127, 128, (b, s, h, hd)), jnp.int8)
+    ap = iattn.make_iattention(hd, 8/127, 8/127, 4/127, 4/127)
+    fused_be = ops.resolve_ops("pallas_fused")
+    f_ref = jax.jit(lambda a, kk: be.int_attention(a, kk, kk, ap))
+    f_fused = jax.jit(lambda a, kk: fused_be.int_attention(a, kk, kk, ap))
+    us_ref = _t(f_ref, q8, k8, iters=3)
+    us_fused = _t(f_fused, q8, k8, iters=3)
+    rows.append(("kernel_attn_two_pass_us", round(us_ref, 1),
+                 "1x256x4x64 causal (ref two-pass)"))
+    rows.append(("kernel_attn_fused_us", round(us_fused, 1),
+                 "1x256x4x64 causal (pallas_fused, one launch)"))
+    rows.append(("kernel_attn_fused_vs_two_pass", round(us_fused / us_ref, 2),
+                 "wall-clock ratio (interpret mode on CPU; <1 on TPU)"))
     return rows
 
 

@@ -8,6 +8,7 @@ Prints ``name,value,derived`` CSV rows.  Tables:
              + bench_asic_model latency rows (cycle model)
   §III     -> bench_approx_error (per-unit approximation error)
   kernels  -> bench_kernels     (per-kernel microbench)
+  fusion   -> bench_fused_attention (fused vs two-pass attention)
 """
 import sys
 import traceback
@@ -19,11 +20,12 @@ def main() -> None:
                                     "src"))
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
     from benchmarks import (bench_approx_error, bench_asic_model,
-                            bench_kernels, bench_operators, bench_table2)
+                            bench_fused_attention, bench_kernels,
+                            bench_operators, bench_table2)
     print("name,value,derived")
     ok = True
     for mod in (bench_operators, bench_asic_model, bench_approx_error,
-                bench_kernels, bench_table2):
+                bench_kernels, bench_fused_attention, bench_table2):
         try:
             for row in mod.run():
                 print(",".join(str(x) for x in row))

@@ -41,10 +41,12 @@ def main():
 
     qp, plans = convert.quantize_params(params, cfg)
     # the engine takes one OpSet handle at construction (repro.ops
-    # registry); swap "ref" for "pallas"/"pallas_tuned" — or set the
-    # REPRO_BACKEND env var — without touching the model code
+    # registry); swap "ref" for "pallas"/"pallas_tuned"/"pallas_fused"
+    # — or set the REPRO_BACKEND env var — without touching the model
+    # code (docs/OPS_API.md lists the built-ins)
     engine = ServingEngine(qp, plans, cfg, batch_size=4, cache_len=64,
                            ops=rops.resolve_ops("ref"))
+    print(f"engine: {engine.describe()}")
     reqs = [Request(uid=i, prompt=[1 + 3 * i, 7, 42, 5],
                     max_new_tokens=12,
                     temperature=0.0 if i % 2 == 0 else 0.8)

@@ -64,11 +64,18 @@ def _scores(q8, k8):
 def i_attention_full(q8, k8, v8, plan: IAttnPlan, mask=None,
                      out_bits: int = 8):
     """mask: bool (B,H,Sq,Sk) or broadcastable; True = attend."""
+    out = i_attention_acc(q8, k8, v8, plan, mask=mask)
+    return clip_to_bits(plan.dn_out(out), out_bits)
+
+
+def i_attention_acc(q8, k8, v8, plan: IAttnPlan, mask=None):
+    """Full-matrix attention stopping at the int32 P·V accumulator
+    (scale ``2^-7 * s_v``) — the input of the requant epilogue; what a
+    ``RequantSpec.raw()`` attention returns."""
     scores = _scores(q8, k8)
     p8 = i_softmax(scores, plan.sm, axis=-1, where=mask)
-    out = jnp.einsum("bhqk,bkhd->bqhd", p8, v8,
-                     preferred_element_type=jnp.int32)
-    return clip_to_bits(plan.dn_out(out), out_bits)
+    return jnp.einsum("bhqk,bkhd->bqhd", p8, v8,
+                      preferred_element_type=jnp.int32)
 
 
 def causal_mask(sq: int, sk: int, q_offset: int = 0, window: int = 0):

@@ -1,3 +1,11 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the SwiftTron integer datapath.
+
+One module per op (``int8_matmul``, ``int_softmax``, ``int_gelu``,
+``int_layernorm``, ``int_attention`` — online softmax,
+``int_attention_fused`` — bit-exact attention+requant) plus the pure-jnp
+oracles (``ref``) they are tested against.  Models never import these
+directly: dispatch goes through the ``repro.ops`` backend registry (see
+docs/KERNELS.md for the contract, docs/OPS_API.md for the API).
+``ops.py`` here is the deprecated string-dispatch shim kept for one
+release of migration.
+"""

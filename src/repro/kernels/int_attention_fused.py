@@ -1,0 +1,214 @@
+"""Pallas TPU kernel: fused integer attention + requant, bit-exact.
+
+One kernel launch computes the whole SwiftTron attention datapath
+(§III-D/E, Figs. 8-10): int8 Q·Kᵀ → dyadic-scaled integer softmax (the
+``core.softmax`` Shiftmax numerics) → int8 P·V → requant epilogue —
+streaming over KV blocks with int32 accumulators, so the O(Sq·Skv) score
+matrix never exists in HBM.
+
+Relation to ``int_attention.py`` (the ``pallas`` backend's kernel): that
+kernel keeps a one-pass *online* softmax whose running rescales round
+(±LSB vs the oracle).  This kernel instead makes **three streaming
+sweeps** over the KV blocks per query block and is *bit-exact* against
+the two-pass reference (``kernels.ref.ref_int_attention``):
+
+  sweep 0  row max        m = max_k(scores)          (int32 compare — exact)
+  sweep 1  row sum        s = Σ_k e16(scores - m)    (int32 add — exact)
+  sweep 2  normalise+AV   p8 = ⌊e16·(2³⁰//s) + h⌋»23; acc += p8·v8 (MXU)
+
+Each sweep recomputes the int8 Q·Kᵀ block product instead of storing it —
+the FlashAttention recompute-over-store trade, paid twice more here to
+buy exactness (integer maxima and sums are associative; the online
+rescale of ``int_attention.py`` is not).
+
+Epilogue: the int32 accumulator (scale ``2⁻⁷·s_v``) takes any of the
+three :class:`repro.ops.RequantSpec` forms —
+
+  * per-tensor  — ``clip(rshift_round(rshift_round(acc, pre)·b, c-pre))``
+  * per-channel — same staging with an int32 multiplier vector over the
+    flattened (head, head_dim) output channels
+  * raw         — the int32 accumulator is written untouched
+
+Bit budgets (mirroring ``core.softmax``): row sums need Skv ≤ 2¹⁵ so
+``Σ e16 ≤ 2³⁰`` stays int32-exact; the P·V accumulator is bounded by
+``(2⁷ + Skv/2)·127`` (normalised probabilities + rounding), int32-safe at
+every supported length.  The wrapper asserts the sum budget; backends
+fall back to the two-pass path beyond it (see
+``ops.backends.pallas_fused``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.attention import IAttnPlan
+from repro.core.softmax import PROB_SHIFT, RECIP_BITS
+from repro.kernels.int_softmax import _exp16_tile, _rshift_round
+from repro.ops.spec import PER_CHANNEL, PER_TENSOR, RequantSpec
+
+NEG = -(2 ** 30)
+
+MAX_SKV = 1 << 15    # row-sum int32 budget: Skv * 2^15 <= 2^30
+
+
+def _fused_kernel(q_ref, k_ref, v_ref, *rest, plan: IAttnPlan,
+                  requant: RequantSpec, has_bvec: bool, n_kv: int,
+                  bq: int, bkv: int, causal: bool, window: int):
+    if has_bvec:
+        b_ref, o_ref, m_ref, s_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, s_ref, acc_ref = rest
+    q_blk = pl.program_id(2)
+    phase = pl.program_id(3)
+    kv_step = pl.program_id(4)
+
+    @pl.when((phase == 0) & (kv_step == 0))
+    def _init_max():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+
+    @pl.when((phase == 1) & (kv_step == 0))
+    def _init_sum():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    @pl.when((phase == 2) & (kv_step == 0))
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q8 = q_ref[0, :, 0, :]                      # (bq, d) int8
+    k8 = k_ref[0, :, 0, :]                      # (bkv, d) int8
+    v8 = v_ref[0, :, 0, :]
+
+    qi = q_blk * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+    ki = kv_step * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    live = jnp.ones((bq, bkv), jnp.bool_)
+    if causal or window > 0:
+        # mirror core.attention.causal_mask: a window implies causality
+        live = live & (ki <= qi)
+    if window > 0:
+        live = live & (ki > qi - window)
+
+    def _scores():
+        s = jax.lax.dot_general(q8, k8, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.int32)
+        return jnp.where(live, s, jnp.int32(NEG))
+
+    def _e16():
+        e16 = _exp16_tile(_scores() - m_ref[...], plan.sm)
+        return jnp.where(live, e16, 0)
+
+    # upper-triangle blocks contribute NEG to the max and 0 to the sum
+    # and the accumulator — skip them entirely under a causal mask
+    if causal or window > 0:
+        blk_live = kv_step * bkv <= q_blk * bq + bq - 1
+    else:
+        blk_live = True
+
+    @pl.when((phase == 0) & blk_live)
+    def _sweep_max():
+        m_ref[...] = jnp.maximum(m_ref[...],
+                                 jnp.max(_scores(), axis=-1, keepdims=True))
+
+    @pl.when((phase == 1) & blk_live)
+    def _sweep_sum():
+        s_ref[...] = s_ref[...] + jnp.sum(_e16(), axis=-1, keepdims=True)
+
+    @pl.when((phase == 2) & blk_live)
+    def _sweep_av():
+        r = jnp.int32(1 << RECIP_BITS) // jnp.maximum(s_ref[...], 1)
+        p = _rshift_round(_e16() * r, RECIP_BITS - PROB_SHIFT)
+        p8 = jnp.clip(p, 0, 127).astype(jnp.int8)
+        acc_ref[...] = acc_ref[...] + jax.lax.dot_general(
+            p8, v8, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+
+    @pl.when((phase == 2) & (kv_step == n_kv - 1))
+    def _epilogue():
+        acc = acc_ref[...]                      # int32 at 2^-7 * s_v
+        if requant.is_raw:
+            o_ref[0, :, 0, :] = acc
+            return
+        lo = -(1 << (requant.out_bits - 1))
+        hi = (1 << (requant.out_bits - 1)) - 1
+        if requant.kind == PER_TENSOR:
+            dn = requant.dn
+            out = _rshift_round(_rshift_round(acc, dn.pre) * jnp.int32(dn.b),
+                                dn.c - dn.pre)
+        else:                                   # per-channel over (h, d)
+            b = b_ref[0, :].astype(jnp.int32)[None, :]
+            out = _rshift_round(_rshift_round(acc, requant.pre) * b,
+                                requant.c - requant.pre)
+        out = jnp.clip(out, lo, hi)
+        o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+
+
+def int_attention_fused(q8, k8, v8, plan: IAttnPlan, requant=None,
+                        b_vec=None, causal: bool = True, window: int = 0,
+                        bq: int = 128, bkv: int = 128, out_bits: int = 8,
+                        interpret: bool = True):
+    """q8: (B, Sq, H, D) int8; k8/v8: (B, Skv, Hkv, D) int8 (GQA: Hkv | H).
+
+    ``requant``: a :class:`RequantSpec` for the epilogue (default: the
+    plan's per-tensor ``dn_out``); ``b_vec``: int32 per-channel
+    multipliers, shape (H*D,) or (H, D), required iff per-channel.
+
+    Returns (B, Sq, H, D): int8 when the epilogue clips to ≤ 8 bits,
+    int32 otherwise (raw / wide output).  Bit-exact against
+    ``kernels.ref.ref_int_attention`` for the same arguments.
+    """
+    if requant is None:
+        requant = RequantSpec.per_tensor(plan.dn_out, out_bits)
+    b, sq, h, d = q8.shape
+    _, skv, hkv, _ = k8.shape
+    assert h % hkv == 0, (h, hkv)
+    assert skv <= MAX_SKV, \
+        f"row-sum int32 budget: Skv <= {MAX_SKV} (got {skv}); " \
+        "use the two-pass streaming path (see module docstring)"
+    group = h // hkv
+    bq = min(bq, sq)
+    bkv = min(bkv, skv)
+    assert sq % bq == 0 and skv % bkv == 0, (sq, bq, skv, bkv)
+    n_kv = skv // bkv
+
+    has_bvec = requant.kind == PER_CHANNEL
+    if has_bvec:
+        if b_vec is None:
+            raise ValueError("per-channel RequantSpec needs the b_vec "
+                             "multiplier vector")
+        b2 = jnp.asarray(b_vec, jnp.int32).reshape(h, d)
+    out_dtype = jnp.int8 if (not requant.is_raw
+                             and requant.out_bits <= 8) else jnp.int32
+
+    kernel = functools.partial(
+        _fused_kernel, plan=plan, requant=requant, has_bvec=has_bvec,
+        n_kv=n_kv, bq=bq, bkv=bkv, causal=causal, window=window)
+
+    in_specs = [
+        pl.BlockSpec((1, bq, 1, d),
+                     lambda bi, hi, qi, ph, ki: (bi, qi, hi, 0)),
+        pl.BlockSpec((1, bkv, 1, d),
+                     lambda bi, hi, qi, ph, ki: (bi, ki, hi // group, 0)),
+        pl.BlockSpec((1, bkv, 1, d),
+                     lambda bi, hi, qi, ph, ki: (bi, ki, hi // group, 0)),
+    ]
+    args = [q8, k8, v8]
+    if has_bvec:
+        in_specs.append(
+            pl.BlockSpec((1, d), lambda bi, hi, qi, ph, ki: (hi, 0)))
+        args.append(b2)
+
+    from jax.experimental.pallas import tpu as pltpu
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, sq // bq, 3, n_kv),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bq, 1, d),
+                               lambda bi, hi, qi, ph, ki: (bi, qi, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sq, h, d), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.int32),
+                        pltpu.VMEM((bq, 1), jnp.int32),
+                        pltpu.VMEM((bq, d), jnp.int32)],
+        interpret=interpret,
+    )(*args)

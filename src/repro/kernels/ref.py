@@ -53,8 +53,16 @@ def ref_int_layernorm(q, q_gamma, q_beta, plan: inorms.INormPlan,
 
 
 def ref_int_attention(q8, k8, v8, plan: iattn.IAttnPlan, causal: bool = True,
-                      window: int = 0, out_bits: int = 8):
-    """Oracle for the fused attention kernel: full-matrix integer attention."""
+                      window: int = 0, out_bits: int = 8, requant=None,
+                      b_vec=None):
+    """Oracle for the fused attention kernels: full-matrix integer attention.
+
+    ``requant``: optional :class:`repro.ops.RequantSpec` epilogue applied
+    to the int32 P·V accumulator (scale ``2^-7 * s_v``).  ``None`` keeps
+    the historical behaviour — the plan's per-tensor ``dn_out``.  For the
+    per-channel form, ``b_vec`` holds int32 multipliers over the
+    flattened (head, head_dim) output channels, shape (H*D,) or (H, D).
+    """
     sq, sk = q8.shape[1], k8.shape[1]
     mask = iattn.causal_mask(sq, sk, window=window)[None, None] \
         if (causal or window > 0) else None
@@ -64,5 +72,31 @@ def ref_int_attention(q8, k8, v8, plan: iattn.IAttnPlan, causal: bool = True,
         rep = h // hkv
         k8 = jnp.repeat(k8, rep, axis=2)
         v8 = jnp.repeat(v8, rep, axis=2)
-    return iattn.i_attention_full(q8, k8, v8, plan, mask=mask,
-                                  out_bits=out_bits)
+    if requant is None:
+        return iattn.i_attention_full(q8, k8, v8, plan, mask=mask,
+                                      out_bits=out_bits)
+    acc = iattn.i_attention_acc(q8, k8, v8, plan, mask=mask)
+    return apply_attn_requant(acc, requant, b_vec)
+
+
+def apply_attn_requant(acc, requant, b_vec=None):
+    """Apply a RequantSpec epilogue to the (B, Sq, H, D) int32 P·V
+    accumulator — the exact rounding the fused kernel replicates.  The
+    per-channel axis is the flattened (head, head_dim) output channel."""
+    from repro.core.dyadic import apply_dyadic_perchannel
+    from repro.ops.spec import PER_TENSOR
+    if requant.is_raw:
+        return acc
+    if requant.kind == PER_TENSOR:
+        out = apply_dyadic(acc, requant.dn)
+    else:
+        if b_vec is None:
+            raise ValueError("per-channel RequantSpec needs the b_vec "
+                             "multiplier vector")
+        b, sq, h, d = acc.shape
+        out = apply_dyadic_perchannel(
+            acc.reshape(b, sq, h * d),
+            jnp.asarray(b_vec, jnp.int32).reshape(h * d),
+            requant.c, requant.pre, axis=-1).reshape(b, sq, h, d)
+    out = clip_to_bits(out, requant.out_bits)
+    return out.astype(jnp.int8) if requant.out_bits <= 8 else out

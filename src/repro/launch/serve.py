@@ -61,9 +61,9 @@ def main():
     print(f"  {n_int8/1e6:.1f}M int8 weights "
           f"({n_int8/2**20:.0f} MiB vs {n_int8*2/2**20:.0f} MiB bf16)")
 
-    print(f"op backend: {ops.name}")
     eng = ServingEngine(qp, plans, cfg, batch_size=args.batch,
                         cache_len=args.cache_len, ops=ops)
+    print(f"engine: {eng.describe()}")
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,
                     prompt=list(rng.integers(1, cfg.vocab, 4)),

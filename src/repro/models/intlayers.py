@@ -134,12 +134,17 @@ def int_attn_fwd(qp, x8, plans: qplans.AttnPlan, cfg: ArchConfig,
 
     # the configured backend handles attention in every branch (the old
     # code hardcoded the pallas/ref choice here); backends without a
-    # fused kernel fall back to chunked streaming on long sequences
+    # fused kernel fall back to chunked streaming on long sequences, and
+    # fused backends fall back internally on shapes their kernel can't
+    # tile (see ops.backends.pallas_fused).  The epilogue travels as a
+    # typed RequantSpec, same as the matmul call sites.
     attn_backend = ops.backend_for("int_attention")
     if fuse_attention and attn_backend.fused_attention:
         o8 = ops.int_attention(q8, k8, v8, plans.attn,
                                causal=causal and memory8 is None,
-                               window=window)
+                               window=window,
+                               requant=RequantSpec.per_tensor(
+                                   plans.attn.dn_out))
     elif s * sk > (4096 * 4096) // 4 and memory8 is None:
         # memory-bounded two-pass streaming path
         rep = cfg.q_group

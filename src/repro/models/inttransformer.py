@@ -232,15 +232,14 @@ def _int_sublayer_decode(qp, cache, x32, plans, cfg: ArchConfig, kind,
 
 
 def _cross_decode(qp, h8, cache, plans, cfg, pos, ops):
-    from repro.core import attention as iattn
+    # cross memory is fully valid at decode time, so this is plain
+    # non-causal attention over the cached K/V — route it through the
+    # configured backend (GQA head-repeat is the backend's job)
     b = h8.shape[0]
     q8 = il.int_linear(h8, qp["wq"], plans.cross.qkv, ops) \
         .reshape(b, 1, cfg.n_heads, cfg.hd)
-    rep = cfg.q_group
-    k8 = jnp.repeat(cache["ck8"], rep, 2) if rep > 1 else cache["ck8"]
-    v8 = jnp.repeat(cache["cv8"], rep, 2) if rep > 1 else cache["cv8"]
-    valid = jnp.full((b,), k8.shape[1], jnp.int32)
-    o8 = iattn.i_attention_decode(q8, k8, v8, plans.cross.attn, valid)
+    o8 = ops.int_attention(q8, cache["ck8"], cache["cv8"],
+                           plans.cross.attn, causal=False)
     return il.int_linear(o8.astype(jnp.int8).reshape(b, 1, -1), qp["wo"],
                          plans.cross.out, ops)
 

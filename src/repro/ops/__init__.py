@@ -38,9 +38,14 @@ __all__ = [
 
 def _register_builtin_backends():
     from repro.ops.backends.pallas import PallasBackend
+    from repro.ops.backends.pallas_fused import PallasFusedBackend
     from repro.ops.backends.ref import RefBackend
     register_backend("ref", RefBackend(), overwrite=True)
     register_backend("pallas", lambda: PallasBackend(), overwrite=True)
+    # single-launch attention+requant kernel, bit-exact vs the two-pass
+    # reference — see docs/KERNELS.md
+    register_backend("pallas_fused", lambda: PallasFusedBackend(),
+                     overwrite=True)
     # tuned tile profile: wider matmul K-blocks + deeper row-blocking for
     # the elementwise kernels; exists to prove per-op backend config needs
     # no model changes (swap via REPRO_BACKEND=pallas_tuned)

@@ -106,9 +106,27 @@ class PallasBackend:
                                     interpret=self._interp(), **opts)
 
     def int_attention(self, q8, k8, v8, plan, causal: bool = True,
-                      window: int = 0, out_bits: int = 8, **opts):
+                      window: int = 0, out_bits: int = 8, requant=None,
+                      b_vec=None, **opts):
         opts = self._opts("int_attention", opts)
+        if requant is not None:
+            # this kernel hardcodes the per-tensor epilogue; fold the
+            # spec's dyadic into the plan (pallas_fused takes all forms)
+            if requant.kind != _spec.PER_TENSOR:
+                raise NotImplementedError(
+                    f"{self.name!r} attention supports per-tensor requant "
+                    "only; use the 'pallas_fused' backend for "
+                    f"{requant.kind!r}")
+            plan = plan._replace(dn_out=requant.dn)
+            out_bits = requant.out_bits
         sq, skv = q8.shape[1], k8.shape[1]
+        if sq < 16 or skv < 16:
+            # decode-sized problems: a degenerate (bq<16) grid costs more
+            # than the oracle, which is also exact — same escape hatch as
+            # pallas_fused's _can_tile
+            from repro.kernels import ref as _ref
+            return _ref.ref_int_attention(q8, k8, v8, plan, causal=causal,
+                                          window=window, out_bits=out_bits)
         bq = _fit_block(opts.pop("bq", 128), sq)
         bkv = _fit_block(opts.pop("bkv", 128), skv)
         return int_attention_pallas(q8, k8, v8, plan, causal=causal,

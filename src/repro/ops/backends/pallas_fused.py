@@ -1,0 +1,92 @@
+"""`pallas_fused` backend: bit-exact fused attention+requant kernel.
+
+Everything except attention reuses the :class:`PallasBackend` kernels;
+``int_attention`` routes to ``kernels.int_attention_fused`` — one kernel
+launch for Q·Kᵀ → Shiftmax → P·V → requant, streaming over KV blocks —
+and is **bit-exact** against the two-pass reference
+(``kernels.ref.ref_int_attention``), unlike the ``pallas`` backend's
+one-pass online kernel (±LSB).
+
+Shapes the kernel can't tile fall back to the existing two-pass path
+with identical numerics:
+
+  * ``Skv > 2^15`` — the exact row sum would leave the int32 budget; the
+    chunked two-pass streaming formulation takes over (per-tensor
+    epilogues only, which is all the model datapath uses at such
+    lengths);
+  * awkward sequence lengths (no block divisor ≥ ``min_block`` — e.g. a
+    prime Sq) and tiny problems, where a grid of degenerate blocks would
+    be slower than the full-matrix oracle.
+
+See docs/KERNELS.md for the kernel contract this backend satisfies.
+"""
+from __future__ import annotations
+
+from repro.kernels import ref as _ref
+from repro.kernels.int_attention_fused import MAX_SKV, int_attention_fused
+from repro.ops import spec as _spec
+from repro.ops.backends.pallas import PallasBackend, _fit_block
+
+
+class PallasFusedBackend(PallasBackend):
+    fused_attention = True
+
+    def __init__(self, name: str = "pallas_fused", interpret=None,
+                 blocks=None, min_block: int = 16):
+        super().__init__(name, interpret=interpret, blocks=blocks)
+        self.min_block = min_block
+
+    # ------------------------------------------------------- attention --
+
+    def int_attention(self, q8, k8, v8, plan, causal: bool = True,
+                      window: int = 0, out_bits: int = 8, requant=None,
+                      b_vec=None, **opts):
+        opts = self._opts("int_attention", opts)
+        if requant is None:
+            requant = _spec.RequantSpec.per_tensor(plan.dn_out, out_bits)
+        sq, skv = q8.shape[1], k8.shape[1]
+        bq = _fit_block(opts.pop("bq", 128), sq)
+        bkv = _fit_block(opts.pop("bkv", 128), skv)
+        if not self._can_tile(sq, skv, bq, bkv):
+            return self._two_pass_fallback(q8, k8, v8, plan, causal,
+                                           window, requant, b_vec)
+        return int_attention_fused(q8, k8, v8, plan, requant=requant,
+                                   b_vec=b_vec, causal=causal,
+                                   window=window, bq=bq, bkv=bkv,
+                                   interpret=self._interp(), **opts)
+
+    def _can_tile(self, sq: int, skv: int, bq: int, bkv: int) -> bool:
+        if skv > MAX_SKV:
+            return False          # exact row sum leaves the int32 budget
+        mb = self.min_block
+        if sq < mb or skv < mb:
+            return False          # tiny problem (e.g. decode): oracle wins
+        if bq < mb or bkv < mb:
+            return False          # no usable divisor (e.g. prime Sq)
+        return True
+
+    def _two_pass_fallback(self, q8, k8, v8, plan, causal, window,
+                           requant, b_vec):
+        """The pre-fusion formulation, numerics preserved exactly."""
+        sq, skv = q8.shape[1], k8.shape[1]
+        if skv > MAX_SKV:
+            # memory-bounded chunked streaming (per-tensor epilogue: the
+            # only form the model datapath carries at such lengths)
+            if requant.kind != _spec.PER_TENSOR:
+                raise NotImplementedError(
+                    f"Skv={skv} needs the chunked streaming path, which "
+                    "supports per-tensor requant only")
+            from repro.core import attention as iattn
+            import jax.numpy as jnp
+            h, hkv = q8.shape[2], k8.shape[2]
+            if hkv != h:
+                k8 = jnp.repeat(k8, h // hkv, axis=2)
+                v8 = jnp.repeat(v8, h // hkv, axis=2)
+            p = plan._replace(dn_out=requant.dn)
+            out = iattn.i_attention_chunked(
+                q8, k8, v8, p, chunk=_fit_block(1024, skv), causal=causal,
+                window=window, out_bits=requant.out_bits)
+            return out.astype(jnp.int8) if requant.out_bits <= 8 else out
+        return _ref.ref_int_attention(q8, k8, v8, plan, causal=causal,
+                                      window=window, requant=requant,
+                                      b_vec=b_vec)

@@ -43,6 +43,8 @@ class RefBackend:
         return _ref.ref_int_layernorm(q, q_gamma, q_beta, plan, out_bits)
 
     def int_attention(self, q8, k8, v8, plan, causal: bool = True,
-                      window: int = 0, out_bits: int = 8, **opts):
+                      window: int = 0, out_bits: int = 8, requant=None,
+                      b_vec=None, **opts):
         return _ref.ref_int_attention(q8, k8, v8, plan, causal, window,
-                                      out_bits)
+                                      out_bits, requant=requant,
+                                      b_vec=b_vec)

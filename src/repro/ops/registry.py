@@ -37,6 +37,11 @@ class Backend(Protocol):
     ``fused_attention`` advertises a single-kernel attention path (the
     model layer falls back to the streaming/chunked formulation when the
     backend only offers the full-matrix oracle).
+
+    ``int_attention`` additionally accepts ``requant=`` (a
+    :class:`~repro.ops.spec.RequantSpec` epilogue; default: the plan's
+    per-tensor ``dn_out``) and ``b_vec=`` (the per-channel multiplier
+    vector) via ``**opts`` — see docs/KERNELS.md for the exact contract.
     """
 
     name: str

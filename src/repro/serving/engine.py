@@ -51,6 +51,10 @@ class ServingEngine:
         self.batch = batch_size
         self.cache_len = cache_len
         self.ops = resolve_ops(ops, cfg)
+        # whether prefill/cross attention runs as one fused kernel launch
+        # (pallas / pallas_fused) or the two-pass oracle path (ref)
+        self.attn_fused = \
+            self.ops.backend_for("int_attention").fused_attention
         self.rng = np.random.default_rng(seed)
         self.rope_tab = il.build_rope_table(cache_len + 1, cfg.hd,
                                             cfg.rope_theta) \
@@ -137,6 +141,12 @@ class ServingEngine:
                 self.slots[i] = None
                 self.pos[i] = 0
         return len(live)
+
+    def describe(self) -> str:
+        """One-line engine signature for drivers/logs."""
+        return (f"ops={self.ops.name} "
+                f"attn={'fused' if self.attn_fused else 'two-pass'} "
+                f"batch={self.batch} cache_len={self.cache_len}")
 
     def run_until_done(self, max_steps: int = 10000) -> List[Request]:
         finished: List[Request] = []

@@ -1,0 +1,110 @@
+"""Docs can't rot: every ``python`` code block in docs/*.md + README.md
+must execute, and every intra-repo markdown link must resolve.
+
+Conventions:
+  * fenced blocks whose info string is exactly ``python`` are executed
+    (in one namespace per file, in document order — later blocks may use
+    earlier definitions);
+  * put ``<!-- no-run -->`` on the line above a fence to skip it;
+  * ``bash``/``text``/unlabelled fences are never executed;
+  * links: ``[...](path)`` with no scheme must point at an existing file
+    (anchors are stripped; bare ``#anchor`` links are skipped).
+
+The CI docs job runs exactly this module (see .github/workflows/ci.yml).
+"""
+import os
+import re
+import sys
+
+import pytest
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+DOCS = sorted(
+    [os.path.join(ROOT, "README.md")]
+    + [os.path.join(ROOT, "docs", f)
+       for f in sorted(os.listdir(os.path.join(ROOT, "docs")))
+       if f.endswith(".md")])
+
+# fences may be indented up to 3 spaces (markdown spec; e.g. inside a
+# list item) — 4+ is an indented code block, not a fence
+_FENCE = re.compile(r"^ {0,3}```(\S*)\s*$")
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def _blocks(path):
+    """(start_line, info, source, skip) per fenced block in ``path``."""
+    import textwrap
+    out, info, buf, start, skip_next = [], None, [], 0, False
+    prev_nonblank = ""
+    with open(path) as f:
+        for i, line in enumerate(f, 1):
+            m = _FENCE.match(line)
+            if m and info is None:
+                info, buf, start = m.group(1), [], i
+                skip_next = "<!-- no-run -->" in prev_nonblank
+            elif m and not m.group(1):
+                out.append((start, info, textwrap.dedent("".join(buf)),
+                            skip_next))
+                info = None
+            elif info is not None:
+                buf.append(line)
+            if line.strip():
+                prev_nonblank = line
+    assert info is None, f"{path}: unterminated fence at line {start}"
+    return out
+
+
+def _doc_id(path):
+    return os.path.relpath(path, ROOT)
+
+
+@pytest.mark.parametrize("path", DOCS, ids=_doc_id)
+def test_python_snippets_run(path, tmp_path, monkeypatch):
+    blocks = [(ln, src) for ln, info, src, skip in _blocks(path)
+              if info == "python" and not skip]
+    if not blocks:
+        pytest.skip("no runnable python blocks")
+    monkeypatch.chdir(ROOT)          # snippets use sys.path.insert("src")
+    ns = {"__name__": f"doc_{os.path.basename(path)}"}
+    path_before = list(sys.path)
+    try:
+        for ln, src in blocks:
+            try:
+                exec(compile(src, f"{path}:{ln}", "exec"), ns)
+            except Exception as e:
+                raise AssertionError(
+                    f"{_doc_id(path)} line {ln}: snippet raised "
+                    f"{type(e).__name__}: {e}") from e
+    finally:
+        sys.path[:] = path_before    # snippets insert a relative "src"
+
+
+@pytest.mark.parametrize("path", DOCS, ids=_doc_id)
+def test_intra_repo_links_resolve(path):
+    base = os.path.dirname(path)
+    broken = []
+    in_fence = False
+    with open(path) as f:
+        for i, line in enumerate(f, 1):
+            if _FENCE.match(line):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for target in _LINK.findall(line):
+                if "://" in target or target.startswith(("mailto:", "#")):
+                    continue
+                rel = target.split("#", 1)[0]
+                if not rel:
+                    continue
+                if not os.path.exists(os.path.join(base, rel)):
+                    broken.append(f"line {i}: {target}")
+    assert not broken, f"{_doc_id(path)}: broken links:\n  " + \
+        "\n  ".join(broken)
+
+
+def test_docs_exist():
+    """The documented doc set itself (ISSUE 2 acceptance)."""
+    for f in ("docs/ARCHITECTURE.md", "docs/KERNELS.md", "docs/OPS_API.md",
+              "README.md"):
+        assert os.path.exists(os.path.join(ROOT, f)), f
