@@ -9,25 +9,41 @@ Prints ``name,value,derived`` CSV rows.  Tables:
   §III     -> bench_approx_error (per-unit approximation error)
   kernels  -> bench_kernels     (per-kernel microbench)
   fusion   -> bench_fused_attention (fused vs two-pass attention)
+  decode   -> bench_decode_attention (fused vs oracle ragged decode)
+
+``--quick`` runs a smoke subset (each module's cheapest shapes, the
+slow accuracy sweep skipped) — the CI job runs exactly this, so the
+benchmark scripts cannot rot.
 """
+import inspect
 import sys
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
     import os
+    argv = list(sys.argv[1:] if argv is None else argv)
+    quick = "--quick" in argv
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
                                     "src"))
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
     from benchmarks import (bench_approx_error, bench_asic_model,
-                            bench_fused_attention, bench_kernels,
-                            bench_operators, bench_table2)
+                            bench_decode_attention, bench_fused_attention,
+                            bench_kernels, bench_operators, bench_table2)
+    mods = [bench_operators, bench_asic_model, bench_approx_error,
+            bench_kernels, bench_fused_attention, bench_decode_attention,
+            bench_table2]
+    if quick:
+        # the Table-II accuracy sweep dominates runtime; smoke the rest
+        mods.remove(bench_table2)
     print("name,value,derived")
     ok = True
-    for mod in (bench_operators, bench_asic_model, bench_approx_error,
-                bench_kernels, bench_fused_attention, bench_table2):
+    for mod in mods:
         try:
-            for row in mod.run():
+            kw = {}
+            if quick and "quick" in inspect.signature(mod.run).parameters:
+                kw["quick"] = True
+            for row in mod.run(**kw):
                 print(",".join(str(x) for x in row))
         except Exception as e:
             ok = False

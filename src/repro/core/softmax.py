@@ -35,6 +35,9 @@ S_PROB = 2.0 ** -7       # int8 probability scale
 PROB_SHIFT = 7
 RECIP_BITS = 30
 Z_MAX = 30               # exp(-z_max*ln2) == 2^-30 ~ 0
+# longest row whose e16 sum is int32-exact: rowlen * 2^15 <= 2^30 — the
+# budget every exact (non-streaming-corrected) attention kernel asserts
+MAX_ROWSUM_LEN = 1 << 15
 
 
 class ISoftmaxPlan(NamedTuple):

@@ -2,10 +2,12 @@
 
 One module per op (``int8_matmul``, ``int_softmax``, ``int_gelu``,
 ``int_layernorm``, ``int_attention`` — online softmax,
-``int_attention_fused`` — bit-exact attention+requant) plus the pure-jnp
-oracles (``ref``) they are tested against.  Models never import these
-directly: dispatch goes through the ``repro.ops`` backend registry (see
-docs/KERNELS.md for the contract, docs/OPS_API.md for the API).
-``ops.py`` here is the deprecated string-dispatch shim kept for one
-release of migration.
+``int_attention_fused`` — bit-exact attention+requant,
+``int_decode_attention`` — fused ragged-cache decode with valid_len
+scalar-prefetch masking) plus the pure-jnp oracles (``ref``) they are
+tested against.  Models never import these directly: dispatch goes
+through the ``repro.ops`` backend registry (see docs/KERNELS.md for the
+contract, docs/OPS_API.md for the API).  The old ``ops.py``
+string-dispatch shims are removed; importing them raises with a pointer
+to ``repro.ops``.
 """

@@ -45,26 +45,26 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.attention import IAttnPlan
-from repro.core.softmax import PROB_SHIFT, RECIP_BITS
+from repro.core.softmax import MAX_ROWSUM_LEN, PROB_SHIFT, RECIP_BITS
 from repro.kernels.int_softmax import _exp16_tile, _rshift_round
 from repro.ops.spec import PER_CHANNEL, PER_TENSOR, RequantSpec
 
 NEG = -(2 ** 30)
 
-MAX_SKV = 1 << 15    # row-sum int32 budget: Skv * 2^15 <= 2^30
+MAX_SKV = MAX_ROWSUM_LEN    # row-sum int32 budget: Skv * 2^15 <= 2^30
 
 
-def _fused_kernel(q_ref, k_ref, v_ref, *rest, plan: IAttnPlan,
-                  requant: RequantSpec, has_bvec: bool, n_kv: int,
-                  bq: int, bkv: int, causal: bool, window: int):
-    if has_bvec:
-        b_ref, o_ref, m_ref, s_ref, acc_ref = rest
-    else:
-        o_ref, m_ref, s_ref, acc_ref = rest
-    q_blk = pl.program_id(2)
-    phase = pl.program_id(3)
-    kv_step = pl.program_id(4)
+def _streaming_attn_body(phase, kv_step, n_kv, q8, k8, v8, live, blk_live,
+                         o_ref, m_ref, s_ref, acc_ref, b_ref, *,
+                         plan: IAttnPlan, requant: RequantSpec):
+    """The shared three-sweep streaming datapath + requant epilogue.
 
+    Everything downstream of mask construction is identical between the
+    prefill kernel and the decode kernel (``int_decode_attention.py``)
+    — only ``live`` (element mask) and ``blk_live`` (whole-block skip
+    predicate) differ, so both kernels delegate here and a numerics
+    change lands in exactly one place.
+    """
     @pl.when((phase == 0) & (kv_step == 0))
     def _init_max():
         m_ref[...] = jnp.full_like(m_ref, NEG)
@@ -77,19 +77,6 @@ def _fused_kernel(q_ref, k_ref, v_ref, *rest, plan: IAttnPlan,
     def _init_acc():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q8 = q_ref[0, :, 0, :]                      # (bq, d) int8
-    k8 = k_ref[0, :, 0, :]                      # (bkv, d) int8
-    v8 = v_ref[0, :, 0, :]
-
-    qi = q_blk * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
-    ki = kv_step * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
-    live = jnp.ones((bq, bkv), jnp.bool_)
-    if causal or window > 0:
-        # mirror core.attention.causal_mask: a window implies causality
-        live = live & (ki <= qi)
-    if window > 0:
-        live = live & (ki > qi - window)
-
     def _scores():
         s = jax.lax.dot_general(q8, k8, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.int32)
@@ -98,13 +85,6 @@ def _fused_kernel(q_ref, k_ref, v_ref, *rest, plan: IAttnPlan,
     def _e16():
         e16 = _exp16_tile(_scores() - m_ref[...], plan.sm)
         return jnp.where(live, e16, 0)
-
-    # upper-triangle blocks contribute NEG to the max and 0 to the sum
-    # and the accumulator — skip them entirely under a causal mask
-    if causal or window > 0:
-        blk_live = kv_step * bkv <= q_blk * bq + bq - 1
-    else:
-        blk_live = True
 
     @pl.when((phase == 0) & blk_live)
     def _sweep_max():
@@ -144,6 +124,63 @@ def _fused_kernel(q_ref, k_ref, v_ref, *rest, plan: IAttnPlan,
         o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
 
 
+def _epilogue_setup(requant, plan: IAttnPlan, out_bits: int, b_vec,
+                    h: int, d: int):
+    """Shared wrapper-side epilogue policy (prefill and decode kernels):
+    default requant, per-channel b_vec validation + (h, d) reshape, and
+    the output container rule.  Returns (requant, has_bvec, b2,
+    out_dtype)."""
+    if requant is None:
+        requant = RequantSpec.per_tensor(plan.dn_out, out_bits)
+    has_bvec = requant.kind == PER_CHANNEL
+    b2 = None
+    if has_bvec:
+        if b_vec is None:
+            raise ValueError("per-channel RequantSpec needs the b_vec "
+                             "multiplier vector")
+        b2 = jnp.asarray(b_vec, jnp.int32).reshape(h, d)
+    out_dtype = jnp.int8 if (not requant.is_raw
+                             and requant.out_bits <= 8) else jnp.int32
+    return requant, has_bvec, b2, out_dtype
+
+
+def _fused_kernel(q_ref, k_ref, v_ref, *rest, plan: IAttnPlan,
+                  requant: RequantSpec, has_bvec: bool, n_kv: int,
+                  bq: int, bkv: int, causal: bool, window: int):
+    if has_bvec:
+        b_ref, o_ref, m_ref, s_ref, acc_ref = rest
+    else:
+        b_ref = None
+        o_ref, m_ref, s_ref, acc_ref = rest
+    q_blk = pl.program_id(2)
+    phase = pl.program_id(3)
+    kv_step = pl.program_id(4)
+
+    q8 = q_ref[0, :, 0, :]                      # (bq, d) int8
+    k8 = k_ref[0, :, 0, :]                      # (bkv, d) int8
+    v8 = v_ref[0, :, 0, :]
+
+    qi = q_blk * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+    ki = kv_step * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    live = jnp.ones((bq, bkv), jnp.bool_)
+    if causal or window > 0:
+        # mirror core.attention.causal_mask: a window implies causality
+        live = live & (ki <= qi)
+    if window > 0:
+        live = live & (ki > qi - window)
+
+    # upper-triangle blocks contribute NEG to the max and 0 to the sum
+    # and the accumulator — skip them entirely under a causal mask
+    if causal or window > 0:
+        blk_live = kv_step * bkv <= q_blk * bq + bq - 1
+    else:
+        blk_live = True
+
+    _streaming_attn_body(phase, kv_step, n_kv, q8, k8, v8, live, blk_live,
+                         o_ref, m_ref, s_ref, acc_ref, b_ref,
+                         plan=plan, requant=requant)
+
+
 def int_attention_fused(q8, k8, v8, plan: IAttnPlan, requant=None,
                         b_vec=None, causal: bool = True, window: int = 0,
                         bq: int = 128, bkv: int = 128, out_bits: int = 8,
@@ -158,8 +195,6 @@ def int_attention_fused(q8, k8, v8, plan: IAttnPlan, requant=None,
     int32 otherwise (raw / wide output).  Bit-exact against
     ``kernels.ref.ref_int_attention`` for the same arguments.
     """
-    if requant is None:
-        requant = RequantSpec.per_tensor(plan.dn_out, out_bits)
     b, sq, h, d = q8.shape
     _, skv, hkv, _ = k8.shape
     assert h % hkv == 0, (h, hkv)
@@ -172,14 +207,8 @@ def int_attention_fused(q8, k8, v8, plan: IAttnPlan, requant=None,
     assert sq % bq == 0 and skv % bkv == 0, (sq, bq, skv, bkv)
     n_kv = skv // bkv
 
-    has_bvec = requant.kind == PER_CHANNEL
-    if has_bvec:
-        if b_vec is None:
-            raise ValueError("per-channel RequantSpec needs the b_vec "
-                             "multiplier vector")
-        b2 = jnp.asarray(b_vec, jnp.int32).reshape(h, d)
-    out_dtype = jnp.int8 if (not requant.is_raw
-                             and requant.out_bits <= 8) else jnp.int32
+    requant, has_bvec, b2, out_dtype = _epilogue_setup(
+        requant, plan, out_bits, b_vec, h, d)
 
     kernel = functools.partial(
         _fused_kernel, plan=plan, requant=requant, has_bvec=has_bvec,

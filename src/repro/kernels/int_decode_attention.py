@@ -1,0 +1,168 @@
+"""Pallas TPU kernel: fused integer *decode* attention, bit-exact.
+
+The serving hot path: one (or a few speculative) new query tokens per
+sequence against an int8 KV cache whose per-slot occupancy differs —
+slot ``b`` has ``valid_len[b]`` live positions, the rest of the cache is
+stale.  One kernel launch runs the whole SwiftTron datapath (int8 Q·Kᵀ →
+Shiftmax → int8 P·V → RequantSpec epilogue) streaming over KV-cache
+blocks, with **data-dependent ``valid_len`` masking**:
+
+  * ``valid_len`` (B,) int32 rides as a *scalar-prefetch* operand
+    (``pltpu.PrefetchScalarGridSpec``), so it is resident before the
+    kernel body runs and may steer the block pipeline;
+  * KV blocks that are entirely dead for a slot are **skipped, not
+    computed-and-discarded**: the block index map clamps to the last
+    live block (the pipeline re-reads a resident block instead of
+    fetching a dead one) and every sweep is predicated off with
+    ``pl.when`` — per-step work is O(valid_len), not O(cache_len);
+  * inside the boundary block, dead positions contribute ``-2³⁰`` to the
+    row max and 0 to the sum and the P·V accumulator, exactly like the
+    prefill kernel's causal masking.
+
+Like ``int_attention_fused`` this buys bit-exactness with three
+streaming sweeps over the live KV blocks (max → sum → normalise+AV) —
+integer maxima and sums are associative, so the result is bit-identical
+to the full-matrix decode oracle ``kernels.ref.ref_int_decode_attention``
+for every RequantSpec epilogue form.
+
+Speculative queries (1 < Sq ≤ 8): query row ``i`` attends to cache
+positions ``< valid_len − (Sq − 1 − i)`` — the *last* row sees exactly
+``valid_len`` positions, earlier speculative rows one fewer each (the
+stepped causal mask of draft verification).  ``Sq = 1`` reduces to the
+plain ``pos < valid_len`` occupancy mask.
+
+Accumulator budget (Sq ≤ 8 rows live in VMEM scratch the whole launch):
+row sums need ``valid_len ≤ 2¹⁵`` so ``Σ e16 ≤ 2³⁰`` stays int32-exact —
+the same ``MAX_SKV`` budget as the prefill kernel, asserted on the
+*cache length* here because ``valid_len ≤ L`` by construction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.attention import IAttnPlan
+from repro.core.softmax import MAX_ROWSUM_LEN
+from repro.kernels.int_attention_fused import (_epilogue_setup,
+                                               _streaming_attn_body)
+from repro.ops.spec import RequantSpec
+
+MAX_SQ = 8                  # speculative query budget (scratch rows/head)
+MAX_SKV = MAX_ROWSUM_LEN    # row-sum int32 budget: L * 2^15 <= 2^30
+
+
+def _decode_kernel(vl_ref, q_ref, k_ref, v_ref, *rest, plan: IAttnPlan,
+                   requant: RequantSpec, has_bvec: bool, n_kv: int,
+                   sq: int, bkv: int):
+    if has_bvec:
+        b_ref, o_ref, m_ref, s_ref, acc_ref = rest
+    else:
+        b_ref = None
+        o_ref, m_ref, s_ref, acc_ref = rest
+    bi = pl.program_id(0)
+    phase = pl.program_id(2)
+    kv_step = pl.program_id(3)
+    vl = vl_ref[bi]
+
+    q8 = q_ref[0, :, 0, :]                      # (sq, d) int8
+    k8 = k_ref[0, :, 0, :]                      # (bkv, d) int8
+    v8 = v_ref[0, :, 0, :]
+
+    # stepped occupancy mask: row i sees vl - (sq-1-i) positions (sq=1:
+    # the plain pos < valid_len cache-occupancy mask)
+    qi = jax.lax.broadcasted_iota(jnp.int32, (sq, bkv), 0)
+    ki = kv_step * bkv + jax.lax.broadcasted_iota(jnp.int32, (sq, bkv), 1)
+    live = ki < vl - (sq - 1 - qi)
+
+    # data-dependent block skip: a block whose first position is already
+    # past the widest row's occupancy (the last query row sees vl) is
+    # entirely dead — contribute nothing, in any sweep.  The epilogue
+    # inside the shared body still runs on the last step, so a slot with
+    # valid_len == 0 writes requant(0) (matching the all-masked oracle).
+    blk_live = kv_step * bkv < vl
+
+    _streaming_attn_body(phase, kv_step, n_kv, q8, k8, v8, live, blk_live,
+                         o_ref, m_ref, s_ref, acc_ref, b_ref,
+                         plan=plan, requant=requant)
+
+
+def int_decode_attention_fused(q8, k8_cache, v8_cache, plan: IAttnPlan,
+                               valid_len, requant=None, b_vec=None,
+                               bkv: int = 128, out_bits: int = 8,
+                               interpret: bool = True):
+    """q8: (B, Sq, H, D) int8, Sq ≤ 8; caches: (B, L, Hkv, D) int8
+    (GQA: Hkv | H); valid_len: (B,) int32 live positions per slot.
+
+    ``requant``: a :class:`RequantSpec` for the epilogue (default: the
+    plan's per-tensor ``dn_out``); ``b_vec``: int32 per-channel
+    multipliers, shape (H*D,) or (H, D), required iff per-channel.
+
+    Returns (B, Sq, H, D): int8 when the epilogue clips to ≤ 8 bits,
+    int32 otherwise.  Bit-exact against
+    ``kernels.ref.ref_int_decode_attention`` for the same arguments.
+    """
+    b, sq, h, d = q8.shape
+    _, L, hkv, _ = k8_cache.shape
+    assert h % hkv == 0, (h, hkv)
+    assert sq <= MAX_SQ, \
+        f"decode kernel holds Sq <= {MAX_SQ} query rows in scratch " \
+        f"(got {sq}); use the prefill kernel for larger Sq"
+    assert L <= MAX_SKV, \
+        f"row-sum int32 budget: cache_len <= {MAX_SKV} (got {L}); " \
+        "use the two-pass path (see module docstring)"
+    group = h // hkv
+    bkv = min(bkv, L)
+    assert L % bkv == 0, (L, bkv)
+    n_kv = L // bkv
+    valid_len = jnp.asarray(valid_len, jnp.int32)
+
+    requant, has_bvec, b2, out_dtype = _epilogue_setup(
+        requant, plan, out_bits, b_vec, h, d)
+
+    kernel = functools.partial(
+        _decode_kernel, plan=plan, requant=requant, has_bvec=has_bvec,
+        n_kv=n_kv, sq=sq, bkv=bkv)
+
+    def _kv_block(ki, vl, bi):
+        # clamp dead blocks to the slot's last live block: the pipeline
+        # re-reads a resident block instead of DMA-ing a dead one (the
+        # compute for those steps is pl.when-ed off anyway)
+        last = jnp.maximum(pl.cdiv(vl[bi], bkv) - 1, 0)
+        return jnp.minimum(ki, last)
+
+    in_specs = [
+        pl.BlockSpec((1, sq, 1, d),
+                     lambda bi, hi, ph, ki, vl: (bi, 0, hi, 0)),
+        pl.BlockSpec((1, bkv, 1, d),
+                     lambda bi, hi, ph, ki, vl:
+                     (bi, _kv_block(ki, vl, bi), hi // group, 0)),
+        pl.BlockSpec((1, bkv, 1, d),
+                     lambda bi, hi, ph, ki, vl:
+                     (bi, _kv_block(ki, vl, bi), hi // group, 0)),
+    ]
+    args = [q8, k8_cache, v8_cache]
+    if has_bvec:
+        in_specs.append(
+            pl.BlockSpec((1, d), lambda bi, hi, ph, ki, vl: (hi, 0)))
+        args.append(b2)
+
+    from jax.experimental.pallas import tpu as pltpu
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, h, 3, n_kv),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, sq, 1, d),
+                               lambda bi, hi, ph, ki, vl: (bi, 0, hi, 0)),
+        scratch_shapes=[pltpu.VMEM((sq, 1), jnp.int32),
+                        pltpu.VMEM((sq, 1), jnp.int32),
+                        pltpu.VMEM((sq, d), jnp.int32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, sq, h, d), out_dtype),
+        interpret=interpret,
+    )(valid_len, *args)

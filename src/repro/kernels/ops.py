@@ -1,62 +1,17 @@
-"""DEPRECATED string-dispatch wrappers — use :mod:`repro.ops` instead.
+"""REMOVED: the ``repro.kernels.ops`` string-dispatch wrappers.
 
-This module kept a ``backend="ref"|"pallas"`` string and a loose bag of
-requant keywords (``dn`` vs ``b_vec``/``c``/``pre``, ``out_bits``,
-``**blocks``) threaded through every call site.  The typed replacement
-lives in :mod:`repro.ops`: a frozen :class:`repro.ops.RequantSpec` plus a
-pluggable backend registry.  These wrappers translate the old calling
-convention and emit ``DeprecationWarning``; they will be removed one
-release after the migration (see docs/OPS_API.md).
+These wrappers threaded ``backend="ref"|"pallas"`` strings and a loose
+bag of requant keywords through every call site.  They were deprecated
+(with ``DeprecationWarning``) when the typed operator API landed and are
+now gone, one release later, as scheduled.
+
+Use :mod:`repro.ops` instead — a frozen :class:`repro.ops.RequantSpec`
+describes the epilogue and the backend registry owns dispatch; see
+docs/OPS_API.md for the old-to-new migration table.
 """
-from __future__ import annotations
-
-import warnings
-
-from repro import ops as _ops
-from repro.ops import RequantSpec
-
-
-def _warn(name: str):
-    warnings.warn(
-        f"repro.kernels.ops.{name} is deprecated; use repro.ops "
-        "(RequantSpec + backend registry) instead — see docs/OPS_API.md",
-        DeprecationWarning, stacklevel=3)
-
-
-def int8_matmul(x8, w8, bias32=None, dn=None, b_vec=None, c=0, pre=0,
-                out_bits=8, backend="ref", **blocks):
-    _warn("int8_matmul")
-    if dn is not None:
-        spec = RequantSpec.per_tensor(dn, out_bits)
-    elif b_vec is not None:
-        spec = RequantSpec.per_channel(c, pre, out_bits)
-    else:
-        spec = RequantSpec.raw()
-    return _ops.resolve_ops(backend).int8_matmul(
-        x8, w8, spec, bias32=bias32, b_vec=b_vec, **blocks)
-
-
-def int_softmax(scores, plan, backend="ref", **kw):
-    _warn("int_softmax")
-    return _ops.resolve_ops(backend).int_softmax(scores, plan, **kw)
-
-
-def int_gelu(q, plan, dn_out, out_bits=8, backend="ref", **kw):
-    _warn("int_gelu")
-    return _ops.resolve_ops(backend).int_gelu(q, plan, dn_out,
-                                              out_bits=out_bits, **kw)
-
-
-def int_layernorm(q, q_gamma, q_beta, plan, out_bits=8, backend="ref",
-                  **kw):
-    _warn("int_layernorm")
-    return _ops.resolve_ops(backend).int_layernorm(
-        q, q_gamma, q_beta, plan, out_bits=out_bits, **kw)
-
-
-def int_attention(q8, k8, v8, plan, causal=True, window=0, out_bits=8,
-                  backend="ref", **kw):
-    _warn("int_attention")
-    return _ops.resolve_ops(backend).int_attention(
-        q8, k8, v8, plan, causal=causal, window=window,
-        out_bits=out_bits, **kw)
+raise ImportError(
+    "repro.kernels.ops was removed (it warned for one release): use "
+    "repro.ops instead — RequantSpec for the requant epilogue and the "
+    "backend registry (get_backend/use_backend/OpSet) for dispatch. "
+    "Migration table: docs/OPS_API.md."
+)

@@ -79,6 +79,38 @@ def ref_int_attention(q8, k8, v8, plan: iattn.IAttnPlan, causal: bool = True,
     return apply_attn_requant(acc, requant, b_vec)
 
 
+def ref_int_decode_attention(q8, k8_cache, v8_cache, plan: iattn.IAttnPlan,
+                             valid_len, out_bits: int = 8, requant=None,
+                             b_vec=None):
+    """Oracle for the fused decode kernel: full-matrix attention of a few
+    query rows against a ragged int8 KV cache.
+
+    q8: (B, Sq, H, D); caches: (B, L, Hkv, D) (GQA: Hkv | H);
+    ``valid_len``: (B,) int32 live cache positions per slot.  Query row
+    ``i`` attends to positions ``< valid_len − (Sq − 1 − i)`` — the
+    stepped mask of speculative decode; Sq = 1 is the plain
+    ``pos < valid_len`` occupancy mask.  ``requant``/``b_vec``: epilogue
+    exactly as :func:`ref_int_attention` (default: the plan's per-tensor
+    ``dn_out``).
+    """
+    b, sq, h, d = q8.shape
+    L, hkv = k8_cache.shape[1], k8_cache.shape[2]
+    if hkv != h:
+        rep = h // hkv
+        k8_cache = jnp.repeat(k8_cache, rep, axis=2)
+        v8_cache = jnp.repeat(v8_cache, rep, axis=2)
+    valid_len = jnp.asarray(valid_len, jnp.int32)
+    pos = jnp.arange(L)[None, None, None, :]
+    limit = valid_len[:, None, None, None] \
+        - (sq - 1 - jnp.arange(sq))[None, None, :, None]
+    mask = pos < limit                                   # (B,1,Sq,L)
+    if requant is None:
+        return iattn.i_attention_full(q8, k8_cache, v8_cache, plan,
+                                      mask=mask, out_bits=out_bits)
+    acc = iattn.i_attention_acc(q8, k8_cache, v8_cache, plan, mask=mask)
+    return apply_attn_requant(acc, requant, b_vec)
+
+
 def apply_attn_requant(acc, requant, b_vec=None):
     """Apply a RequantSpec epilogue to the (B, Sq, H, D) int32 P·V
     accumulator — the exact rounding the fused kernel replicates.  The

@@ -174,7 +174,14 @@ def int_attn_decode(qp, x8, cache, pos, plans: qplans.AttnPlan,
     """One-token decode.  x8: (B,1,D); cache: {"k8","v8"} (B,L,Hkv,hd).
 
     ``pos``: (B,) current position (tokens written at cache[:, pos]).
-    Returns (out32, new_cache)."""
+    Returns (out32, new_cache).
+
+    The ragged-cache attention dispatches through the configured
+    backend's ``int_decode_attention`` (per-slot ``valid_len`` masking;
+    ``pallas_fused`` runs it as one kernel launch skipping dead cache
+    blocks) — the backend owns GQA head-repeat, so the KV cache is
+    handed over in its compact (B, L, Hkv, hd) form.
+    """
     ops = resolve_ops(ops, cfg)
     b, _, d = x8.shape
     L = cache["k8"].shape[1]
@@ -194,11 +201,10 @@ def int_attn_decode(qp, x8, cache, pos, plans: qplans.AttnPlan,
     bidx = jnp.arange(b)
     k_cache = cache["k8"].at[bidx, slot].set(k8[:, 0])
     v_cache = cache["v8"].at[bidx, slot].set(v8[:, 0])
-    rep = cfg.q_group
-    k_full = jnp.repeat(k_cache, rep, 2) if rep > 1 else k_cache
-    v_full = jnp.repeat(v_cache, rep, 2) if rep > 1 else v_cache
     valid = jnp.minimum(pos + 1, L) if window > 0 else pos + 1
-    o8 = iattn.i_attention_decode(q8, k_full, v_full, plans.attn, valid)
+    o8 = ops.int_decode_attention(
+        q8, k_cache, v_cache, plans.attn, valid,
+        requant=RequantSpec.per_tensor(plans.attn.dn_out))
     o8 = o8.astype(jnp.int8)
     out32 = int_linear(o8.reshape(b, 1, cfg.n_heads * cfg.hd), qp["wo"],
                        plans.out, ops)

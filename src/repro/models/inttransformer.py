@@ -232,14 +232,18 @@ def _int_sublayer_decode(qp, cache, x32, plans, cfg: ArchConfig, kind,
 
 
 def _cross_decode(qp, h8, cache, plans, cfg, pos, ops):
-    # cross memory is fully valid at decode time, so this is plain
-    # non-causal attention over the cached K/V — route it through the
-    # configured backend (GQA head-repeat is the backend's job)
+    # cross memory is fully valid at decode time: decode attention with
+    # valid_len pinned to the full memory length — through the configured
+    # backend's fused decode path (one kernel launch on pallas_fused;
+    # GQA head-repeat is the backend's job).  Bit-identical to plain
+    # non-causal attention over the same K/V.
     b = h8.shape[0]
+    sk = cache["ck8"].shape[1]
     q8 = il.int_linear(h8, qp["wq"], plans.cross.qkv, ops) \
         .reshape(b, 1, cfg.n_heads, cfg.hd)
-    o8 = ops.int_attention(q8, cache["ck8"], cache["cv8"],
-                           plans.cross.attn, causal=False)
+    valid = jnp.full((b,), sk, jnp.int32)
+    o8 = ops.int_decode_attention(q8, cache["ck8"], cache["cv8"],
+                                  plans.cross.attn, valid)
     return il.int_linear(o8.astype(jnp.int8).reshape(b, 1, -1), qp["wo"],
                          plans.cross.out, ops)
 

@@ -1,7 +1,7 @@
 """repro.ops — the unified operator API for the integer datapath.
 
-Single entry point for SwiftTron's five integer ops (INT8 matmul,
-Attention, Softmax, GELU, LayerNorm):
+Single entry point for SwiftTron's six integer ops (INT8 matmul,
+Attention, Decode Attention, Softmax, GELU, LayerNorm):
 
   * :class:`RequantSpec` — typed, validated union of the three requant
     epilogue forms (per-tensor dyadic / per-channel vector / raw int32);
@@ -12,8 +12,8 @@ Attention, Softmax, GELU, LayerNorm):
   * :class:`OpSet` — the handle models take once at construction
     (default backend + per-op overrides).
 
-See docs/OPS_API.md for the full API and migration notes from the old
-``repro.kernels.ops`` string-dispatch wrappers.
+See docs/OPS_API.md for the full API (the old ``repro.kernels.ops``
+string-dispatch wrappers are gone; the migration table lives there).
 """
 from __future__ import annotations
 
@@ -32,7 +32,7 @@ __all__ = [
     "use_backend", "DEFAULT_BACKEND", "ENV_VAR", "OP_NAMES",
     "PER_CHANNEL", "PER_TENSOR", "RAW",
     "int8_matmul", "int_softmax", "int_gelu", "int_layernorm",
-    "int_attention",
+    "int_attention", "int_decode_attention",
 ]
 
 
@@ -92,3 +92,9 @@ def int_attention(q8, k8, v8, plan, causal: bool = True, window: int = 0,
     return resolve_ops(ops).int_attention(q8, k8, v8, plan, causal=causal,
                                           window=window, out_bits=out_bits,
                                           **opts)
+
+
+def int_decode_attention(q8, k8_cache, v8_cache, plan, valid_len,
+                         out_bits: int = 8, *, ops=None, **opts):
+    return resolve_ops(ops).int_decode_attention(
+        q8, k8_cache, v8_cache, plan, valid_len, out_bits=out_bits, **opts)

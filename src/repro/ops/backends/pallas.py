@@ -33,6 +33,7 @@ def _fit_block(blk: int, dim: int) -> int:
 
 class PallasBackend:
     fused_attention = True
+    fused_decode = False      # no ragged-cache decode kernel (see below)
 
     def __init__(self, name: str = "pallas",
                  interpret: Optional[bool] = None,
@@ -133,3 +134,14 @@ class PallasBackend:
                                     window=window, bq=bq, bkv=bkv,
                                     out_bits=out_bits,
                                     interpret=self._interp(), **opts)
+
+    def int_decode_attention(self, q8, k8_cache, v8_cache, plan, valid_len,
+                             out_bits: int = 8, requant=None, b_vec=None,
+                             **opts):
+        # the online-softmax kernel has no ragged-cache decode variant;
+        # decode-sized problems take the exact full-matrix oracle here
+        # (the 'pallas_fused' backend has the single-launch decode kernel)
+        from repro.kernels import ref as _ref
+        return _ref.ref_int_decode_attention(q8, k8_cache, v8_cache, plan,
+                                             valid_len, out_bits,
+                                             requant=requant, b_vec=b_vec)

@@ -5,7 +5,11 @@ Everything except attention reuses the :class:`PallasBackend` kernels;
 launch for Q·Kᵀ → Shiftmax → P·V → requant, streaming over KV blocks —
 and is **bit-exact** against the two-pass reference
 (``kernels.ref.ref_int_attention``), unlike the ``pallas`` backend's
-one-pass online kernel (±LSB).
+one-pass online kernel (±LSB).  ``int_decode_attention`` routes to
+``kernels.int_decode_attention`` — the same fused datapath for the
+serving hot path (Sq ≤ 8 queries over a ragged KV cache, per-slot
+``valid_len`` as a scalar-prefetch operand, dead blocks skipped) —
+bit-exact against ``kernels.ref.ref_int_decode_attention``.
 
 Shapes the kernel can't tile fall back to the existing two-pass path
 with identical numerics:
@@ -22,14 +26,22 @@ See docs/KERNELS.md for the kernel contract this backend satisfies.
 """
 from __future__ import annotations
 
+from repro.core.softmax import MAX_ROWSUM_LEN as MAX_SKV
 from repro.kernels import ref as _ref
-from repro.kernels.int_attention_fused import MAX_SKV, int_attention_fused
 from repro.ops import spec as _spec
 from repro.ops.backends.pallas import PallasBackend, _fit_block
+
+# NOTE: the fused kernel modules (kernels.int_attention_fused /
+# kernels.int_decode_attention) are imported lazily inside the methods:
+# this module runs during ``repro.ops`` package init, and both kernel
+# modules themselves import ``repro.ops.spec`` — a top-level import here
+# would re-enter a half-initialised kernel module whenever a caller
+# imports a kernel before the ops package.
 
 
 class PallasFusedBackend(PallasBackend):
     fused_attention = True
+    fused_decode = True       # single-launch valid_len-masked decode kernel
 
     def __init__(self, name: str = "pallas_fused", interpret=None,
                  blocks=None, min_block: int = 16):
@@ -41,6 +53,7 @@ class PallasFusedBackend(PallasBackend):
     def int_attention(self, q8, k8, v8, plan, causal: bool = True,
                       window: int = 0, out_bits: int = 8, requant=None,
                       b_vec=None, **opts):
+        from repro.kernels.int_attention_fused import int_attention_fused
         opts = self._opts("int_attention", opts)
         if requant is None:
             requant = _spec.RequantSpec.per_tensor(plan.dn_out, out_bits)
@@ -54,6 +67,39 @@ class PallasFusedBackend(PallasBackend):
                                    b_vec=b_vec, causal=causal,
                                    window=window, bq=bq, bkv=bkv,
                                    interpret=self._interp(), **opts)
+
+    # -------------------------------------------------- decode attention --
+
+    def int_decode_attention(self, q8, k8_cache, v8_cache, plan, valid_len,
+                             out_bits: int = 8, requant=None, b_vec=None,
+                             **opts):
+        from repro.kernels.int_decode_attention import \
+            int_decode_attention_fused
+        opts = self._opts("int_decode_attention", opts)
+        if requant is None:
+            requant = _spec.RequantSpec.per_tensor(plan.dn_out, out_bits)
+        sq, L, d = q8.shape[1], k8_cache.shape[1], q8.shape[3]
+        bkv = _fit_block(opts.pop("bkv", 128), L)
+        if not self._can_tile_decode(sq, L, d, bkv):
+            return _ref.ref_int_decode_attention(
+                q8, k8_cache, v8_cache, plan, valid_len,
+                requant=requant, b_vec=b_vec)
+        return int_decode_attention_fused(q8, k8_cache, v8_cache, plan,
+                                          valid_len, requant=requant,
+                                          b_vec=b_vec, bkv=bkv,
+                                          interpret=self._interp(), **opts)
+
+    def _can_tile_decode(self, sq: int, L: int, d: int, bkv: int) -> bool:
+        from repro.kernels.int_decode_attention import MAX_SQ
+        if sq > MAX_SQ:
+            return False          # scratch holds at most MAX_SQ query rows
+        if L > MAX_SKV:
+            return False          # exact row sum leaves the int32 budget
+        if bkv < self.min_block:
+            return False          # no usable cache-block divisor
+        if d % 2:
+            return False          # odd head dims: lane-hostile, oracle wins
+        return True
 
     def _can_tile(self, sq: int, skv: int, bq: int, bkv: int) -> bool:
         if skv > MAX_SKV:

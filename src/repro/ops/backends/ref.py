@@ -14,6 +14,7 @@ from repro.ops import spec as _spec
 class RefBackend:
     name = "ref"
     fused_attention = False   # full-matrix oracle, not an online kernel
+    fused_decode = False      # decode runs the full-matrix oracle too
 
     def int8_matmul(self, x8, w8, spec, *, bias32=None, b_vec=None, **opts):
         if spec.is_raw:
@@ -48,3 +49,10 @@ class RefBackend:
         return _ref.ref_int_attention(q8, k8, v8, plan, causal, window,
                                       out_bits, requant=requant,
                                       b_vec=b_vec)
+
+    def int_decode_attention(self, q8, k8_cache, v8_cache, plan, valid_len,
+                             out_bits: int = 8, requant=None, b_vec=None,
+                             **opts):
+        return _ref.ref_int_decode_attention(q8, k8_cache, v8_cache, plan,
+                                             valid_len, out_bits,
+                                             requant=requant, b_vec=b_vec)

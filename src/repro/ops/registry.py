@@ -1,8 +1,8 @@
 """Backend protocol, registry, and the OpSet dispatch handle.
 
-Every integer operator (INT8 matmul, attention, softmax, GELU,
-LayerNorm) is implemented by a *backend* — an object with the five
-methods of :class:`Backend`.  Backends register under a name
+Every integer operator (INT8 matmul, attention, decode attention,
+softmax, GELU, LayerNorm) is implemented by a *backend* — an object with
+the six methods of :class:`Backend`.  Backends register under a name
 (``register_backend``) and models receive a resolved :class:`OpSet`
 handle once at construction instead of threading ``backend="ref"``
 strings through every call.
@@ -27,21 +27,26 @@ ENV_VAR = "REPRO_BACKEND"
 DEFAULT_BACKEND = "ref"
 
 OP_NAMES = ("int8_matmul", "int_softmax", "int_gelu", "int_layernorm",
-            "int_attention")
+            "int_attention", "int_decode_attention")
 
 
 @runtime_checkable
 class Backend(Protocol):
-    """The five integer ops every backend implements.
+    """The six integer ops every backend implements.
 
     ``fused_attention`` advertises a single-kernel attention path (the
     model layer falls back to the streaming/chunked formulation when the
     backend only offers the full-matrix oracle).
 
-    ``int_attention`` additionally accepts ``requant=`` (a
-    :class:`~repro.ops.spec.RequantSpec` epilogue; default: the plan's
-    per-tensor ``dn_out``) and ``b_vec=`` (the per-channel multiplier
-    vector) via ``**opts`` — see docs/KERNELS.md for the exact contract.
+    ``int_attention`` and ``int_decode_attention`` additionally accept
+    ``requant=`` (a :class:`~repro.ops.spec.RequantSpec` epilogue;
+    default: the plan's per-tensor ``dn_out``) and ``b_vec=`` (the
+    per-channel multiplier vector) via ``**opts`` — see docs/KERNELS.md
+    for the exact contract.  ``int_decode_attention`` serves the ragged
+    KV-cache hot path: ``valid_len`` (B,) int32 is the per-slot cache
+    occupancy (see the "Decode kernel contract" section there); an
+    optional ``fused_decode`` flag (default False) advertises a
+    single-launch kernel for it — the numerics are identical either way.
     """
 
     name: str
@@ -60,9 +65,12 @@ class Backend(Protocol):
     def int_attention(self, q8, k8, v8, plan, causal: bool = True,
                       window: int = 0, out_bits: int = 8, **opts): ...
 
+    def int_decode_attention(self, q8, k8_cache, v8_cache, plan, valid_len,
+                             out_bits: int = 8, **opts): ...
+
 
 def _is_backend(obj) -> bool:
-    """A backend *instance*: the five ops plus name/fused_attention.
+    """A backend *instance*: the six ops plus name/fused_attention.
 
     Classes are excluded — a registered class is a factory, and calling
     its unbound methods would misbind ``self``.
@@ -192,6 +200,12 @@ class OpSet:
         return self.backend_for("int_attention").int_attention(
             q8, k8, v8, plan, causal=causal, window=window,
             out_bits=out_bits, **opts)
+
+    def int_decode_attention(self, q8, k8_cache, v8_cache, plan, valid_len,
+                             out_bits: int = 8, **opts):
+        return self.backend_for("int_decode_attention").int_decode_attention(
+            q8, k8_cache, v8_cache, plan, valid_len, out_bits=out_bits,
+            **opts)
 
 
 # ------------------------------------------------------------ resolution --

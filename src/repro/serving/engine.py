@@ -4,7 +4,11 @@ The serving counterpart of the ASIC's control unit (§III-J): admits
 requests into fixed batch slots, runs the INT8 prefill/decode datapath
 (int8 KV caches = the paper's quantization applied to the cache), and
 retires finished sequences — a continuous-batching-lite scheduler suitable
-for the fixed-shape XLA world.
+for the fixed-shape XLA world.  Slots fill raggedly (each has its own
+``pos``), so every decode step is a batched ragged-cache attention: it
+dispatches through the configured backend's ``int_decode_attention``,
+which on ``pallas_fused`` is one valid_len-masked kernel launch that
+skips dead cache blocks instead of computing over the full ``cache_len``.
 
 Slots are recycled between requests without recompiling: every shape
 (batch, cache length) is fixed at engine construction.
@@ -22,8 +26,22 @@ import numpy as np
 from repro.models import intlayers as il
 from repro.models import inttransformer as it
 from repro.models.common import ArchConfig
-from repro.ops import resolve_ops
+from repro.ops import OP_NAMES, resolve_ops
 from repro.quant import plans as qplans
+
+# Process-level cache of compiled decode steps, keyed by everything the
+# traced closure captures (cfg, plans, shapes, the resolved backend per
+# op).  Two engines with the same key share ONE executable, so (a)
+# engine construction stops paying an XLA recompile and (b) identical
+# request streams produce identical tokens across engine instances —
+# separately compiled executables of the same program are not guaranteed
+# to agree to the last integer on every input (XLA CPU compile variance),
+# which shows up as cross-engine token divergence in parity tests.
+# Bounded LRU (insertion order): a process sweeping many distinct
+# (shape, plan) combinations evicts the oldest executable instead of
+# pinning one per combination forever.
+_DECODE_STEP_CACHE: Dict[tuple, Callable] = {}
+_DECODE_STEP_CACHE_MAX = 8
 
 
 @dataclasses.dataclass
@@ -55,6 +73,15 @@ class ServingEngine:
         # (pallas / pallas_fused) or the two-pass oracle path (ref)
         self.attn_fused = \
             self.ops.backend_for("int_attention").fused_attention
+        # whether the per-step decode attention over the ragged KV cache
+        # runs as the backend's single-launch valid_len-masked kernel
+        # (the ``fused_decode`` capability flag; pallas_fused only) or
+        # the full-matrix oracle; either way the step dispatches through
+        # the backend — there is no hardcoded oracle call on the decode
+        # path (models.intlayers.int_attn_decode)
+        self.decode_fused = getattr(
+            self.ops.backend_for("int_decode_attention"), "fused_decode",
+            False)
         self.rng = np.random.default_rng(seed)
         self.rope_tab = il.build_rope_table(cache_len + 1, cfg.hd,
                                             cfg.rope_theta) \
@@ -63,12 +90,41 @@ class ServingEngine:
         self.pos = np.zeros(batch_size, np.int32)
         self.slots: List[Optional[Request]] = [None] * batch_size
         self.queue: List[Request] = []
-        self._decode = jax.jit(self._decode_impl)
+        self._decode = self._shared_decode_step()
 
     def _decode_impl(self, qparams, caches, tokens, pos):
         return it.int_decode_step(qparams, caches, tokens, pos,
                                   self.plans, self.cfg, self.rope_tab,
                                   ops=self.ops)
+
+    def _shared_decode_step(self) -> Callable:
+        """The jitted decode step, shared across same-shaped engines via
+        ``_DECODE_STEP_CACHE`` (falls back to a private jit when the key
+        is unhashable, e.g. exotic plan objects).
+
+        The cached callable closes over (plans, cfg, rope_tab, ops) only
+        — never ``self`` — so a retired engine's weights, caches and
+        request slots are not pinned by the process-global cache."""
+        try:
+            key = (self.cfg, self.plans, self.batch, self.cache_len,
+                   tuple(id(self.ops.backend_for(op)) for op in OP_NAMES))
+            hash(key)
+        except TypeError:
+            return jax.jit(self._decode_impl)
+        fn = _DECODE_STEP_CACHE.pop(key, None)
+        if fn is None:
+            plans, cfg, rope_tab, ops = (self.plans, self.cfg,
+                                         self.rope_tab, self.ops)
+
+            def step(qparams, caches, tokens, pos):
+                return it.int_decode_step(qparams, caches, tokens, pos,
+                                          plans, cfg, rope_tab, ops=ops)
+
+            fn = jax.jit(step)
+        _DECODE_STEP_CACHE[key] = fn            # (re-)insert most recent
+        while len(_DECODE_STEP_CACHE) > _DECODE_STEP_CACHE_MAX:
+            _DECODE_STEP_CACHE.pop(next(iter(_DECODE_STEP_CACHE)))
+        return fn
 
     # ------------------------------------------------------ scheduling ---
 
@@ -98,12 +154,24 @@ class ServingEngine:
             return leaf
         self.caches = jax.tree.map(zero_slot, self.caches)
 
+    def _snap_pos(self):
+        """Snapshot ``self.pos`` for a decode call.
+
+        ``jnp.asarray`` on a numpy array may alias its buffer (zero-copy)
+        while dispatch is asynchronous; the engine then mutates
+        ``self.pos`` in place (``+= 1``), racing the executing step and
+        intermittently decoding at the wrong position.  An explicit copy
+        makes the hand-off a snapshot.  (This was a real, observed ~1/10
+        token-stream flake on CPU.)
+        """
+        return jnp.asarray(self.pos.copy())
+
     def _step_one(self, slot: int, token: int):
         toks = np.zeros(self.batch, np.int32)
         toks[slot] = token
-        pos = jnp.asarray(self.pos)
         logits, self.caches = self._decode(self.qparams, self.caches,
-                                           jnp.asarray(toks), pos)
+                                           jnp.asarray(toks),
+                                           self._snap_pos())
         self.pos[slot] += 1
         return np.asarray(logits[slot])
 
@@ -121,7 +189,7 @@ class ServingEngine:
             toks[i] = self.slots[i]._last_token
         logits, self.caches = self._decode(self.qparams, self.caches,
                                            jnp.asarray(toks),
-                                           jnp.asarray(self.pos))
+                                           self._snap_pos())
         logits = np.asarray(logits)
         for i in live:
             req = self.slots[i]
@@ -146,6 +214,7 @@ class ServingEngine:
         """One-line engine signature for drivers/logs."""
         return (f"ops={self.ops.name} "
                 f"attn={'fused' if self.attn_fused else 'two-pass'} "
+                f"decode={'fused' if self.decode_fused else 'oracle'} "
                 f"batch={self.batch} cache_len={self.cache_len}")
 
     def run_until_done(self, max_steps: int = 10000) -> List[Request]:

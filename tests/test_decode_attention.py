@@ -1,0 +1,175 @@
+"""Fused decode attention: exact-integer parity over ragged KV caches.
+
+The contract under test (docs/KERNELS.md "Decode kernel contract"): the
+single-launch ``pallas_fused`` decode kernel — valid_len scalar-prefetch
+masking, dead cache blocks skipped, Shiftmax, int8 P·V, RequantSpec
+epilogue — is *bit-exact* against the full-matrix decode oracle
+``kernels.ref.ref_int_decode_attention`` for every (valid_len, head_dim,
+RequantSpec) combination, including ragged batches where every slot has
+a different occupancy, and falls back with identical numerics on shapes
+it can't tile.  Randomised coverage lives in
+``test_decode_attention_props.py`` (hypothesis).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import attention as iattn
+from repro.core.dyadic import fit_dyadic
+from repro.kernels.int_decode_attention import (MAX_SKV, MAX_SQ,
+                                                int_decode_attention_fused)
+from repro.ops import RequantSpec, get_backend
+
+FUSED = get_backend("pallas_fused")
+REF = get_backend("ref")
+
+
+def _plan(d):
+    return iattn.make_iattention(d, 8 / 127, 8 / 127, 4 / 127, 4 / 127)
+
+
+def _qkv(rng, b, sq, L, h, hkv, d):
+    q8 = np.clip(rng.normal(0, 40, (b, sq, h, d)), -127, 127).astype(np.int8)
+    k8 = np.clip(rng.normal(0, 40, (b, L, hkv, d)), -127, 127).astype(np.int8)
+    v8 = np.clip(rng.normal(0, 40, (b, L, hkv, d)), -127, 127).astype(np.int8)
+    return jnp.asarray(q8), jnp.asarray(k8), jnp.asarray(v8)
+
+
+def _spec(form, plan, h, d, rng):
+    if form == "per_tensor":
+        return RequantSpec.per_tensor(
+            fit_dyadic(plan.dn_out.value * 1.7, 127 * (1 << 8))), None
+    if form == "per_channel":
+        b_vec = jnp.asarray(rng.integers(1000, 30000, (h * d,)), jnp.int32)
+        return RequantSpec.per_channel(c=28, pre=7), b_vec
+    return RequantSpec.raw(), None
+
+
+# ragged occupancy edge set for a 64-slot cache tiled at bkv=16: empty,
+# single token, block boundary -1/0/+1, full cache
+EDGE_VALID = [0, 1, 15, 16, 17, 63, 64]
+
+
+@pytest.mark.parametrize("form", ["per_tensor", "per_channel", "raw"])
+def test_exact_parity_ragged_batch(rng, form):
+    """One ragged batch covering every edge occupancy at once — every
+    slot has a different valid_len, including 0 and full."""
+    b, sq, L, h, hkv, d = len(EDGE_VALID), 1, 64, 4, 2, 32
+    plan = _plan(d)
+    q8, k8, v8 = _qkv(rng, b, sq, L, h, hkv, d)
+    vl = jnp.asarray(EDGE_VALID, jnp.int32)
+    spec, b_vec = _spec(form, plan, h, d, rng)
+    got = np.asarray(int_decode_attention_fused(
+        q8, k8, v8, plan, vl, requant=spec, b_vec=b_vec, bkv=16))
+    want = np.asarray(REF.int_decode_attention(
+        q8, k8, v8, plan, vl, requant=spec, b_vec=b_vec))
+    assert np.array_equal(got, want)
+    assert got.dtype == (np.int32 if form == "raw" else np.int8)
+    if form != "raw":
+        # dead slots produce requant(0) == 0, live slots are non-trivial
+        assert not got[0].any() and got[-1].any()
+
+
+@pytest.mark.parametrize("sq", [1, 4, MAX_SQ])
+@pytest.mark.parametrize("d", [16, 64])
+def test_exact_parity_speculative_and_head_dims(rng, sq, d):
+    """Speculative Sq>1 uses the stepped mask (row i sees valid_len -
+    (Sq-1-i) positions); exact across head dims, through the backend."""
+    b, L, h, hkv = 3, 96, 4, 1
+    plan = _plan(d)
+    q8, k8, v8 = _qkv(rng, b, sq, L, h, hkv, d)
+    vl = jnp.asarray([sq, 41, 96], jnp.int32)
+    got = np.asarray(FUSED.int_decode_attention(q8, k8, v8, plan, vl,
+                                                bkv=32))
+    want = np.asarray(REF.int_decode_attention(q8, k8, v8, plan, vl))
+    assert np.array_equal(got, want)
+
+
+def test_int8_extremes_saturate_identically(rng):
+    """All-(-128) operands drive the accumulator to its negative rail;
+    the epilogue clip must saturate identically to the oracle."""
+    b, sq, L, h, d = 2, 1, 32, 2, 16
+    plan = _plan(d)
+    full = jnp.full((b, sq, h, d), -128, jnp.int8)
+    kv = jnp.full((b, L, h, d), -128, jnp.int8)
+    vl = jnp.asarray([7, 32], jnp.int32)
+    got = np.asarray(int_decode_attention_fused(full, kv, kv, plan, vl,
+                                                bkv=16))
+    want = np.asarray(REF.int_decode_attention(full, kv, kv, plan, vl))
+    assert np.array_equal(got, want)
+    # (-128)·(-128) scores are positive, V is the negative rail: the
+    # requantized output actually exercises the lower clip bound
+    assert want.min() < 0
+
+
+def test_decode_core_oracle_agrees_with_legacy_decode(rng):
+    """Sq=1 decode == the historical core i_attention_decode (head-
+    repeated caches), so the backend migration changed no numerics."""
+    b, L, h, d = 2, 64, 2, 32
+    plan = _plan(d)
+    q8, k8, v8 = _qkv(rng, b, 1, L, h, h, d)
+    vl = jnp.asarray([5, 64], jnp.int32)
+    legacy = np.asarray(iattn.i_attention_decode(q8, k8, v8, plan, vl))
+    via_ref = np.asarray(REF.int_decode_attention(q8, k8, v8, plan, vl))
+    fused = np.asarray(FUSED.int_decode_attention(q8, k8, v8, plan, vl))
+    assert np.array_equal(legacy, via_ref)
+    assert np.array_equal(via_ref, fused.astype(via_ref.dtype))
+
+
+# ------------------------------------------------------ negative paths ----
+
+@pytest.mark.parametrize("sq,L,d,why", [
+    (1, 64, 31, "odd head dim"),
+    (MAX_SQ + 1, 64, 16, "speculative budget exceeded"),
+    (1, 8, 16, "tiny cache below min_block: oracle wins"),
+])
+def test_untileable_decode_shapes_fall_back_exactly(rng, sq, L, d, why):
+    """Shapes the kernel refuses take the full-matrix oracle with
+    identical numerics — callers never observe which path ran."""
+    h, hkv = 2, 1
+    plan = _plan(d)
+    bkv = L
+    while L % bkv:
+        bkv -= 1
+    assert not FUSED._can_tile_decode(sq, L, d, min(bkv, 128)), why
+    q8, k8, v8 = _qkv(rng, 2, sq, L, h, hkv, d)
+    vl = jnp.asarray([sq + 3, L], jnp.int32)
+    got = np.asarray(FUSED.int_decode_attention(q8, k8, v8, plan, vl))
+    want = np.asarray(REF.int_decode_attention(q8, k8, v8, plan, vl))
+    assert np.array_equal(got, want)
+
+
+def test_oversized_cache_falls_back_exactly(rng):
+    """cache_len beyond the exact row-sum budget (2^15): the kernel's
+    int32 e16 sum could overflow, so the backend must not enter it."""
+    L = MAX_SKV + 16
+    assert not FUSED._can_tile_decode(1, L, 8, 128)
+    plan = _plan(8)
+    q8, k8, v8 = _qkv(np.random.default_rng(3), 1, 1, L, 1, 1, 8)
+    vl = jnp.asarray([L - 5], jnp.int32)
+    got = np.asarray(FUSED.int_decode_attention(q8, k8, v8, plan, vl))
+    want = np.asarray(REF.int_decode_attention(q8, k8, v8, plan, vl))
+    assert np.array_equal(got, want)
+
+
+def test_per_channel_without_bvec_raises(rng):
+    plan = _plan(16)
+    q8, k8, v8 = _qkv(rng, 1, 1, 32, 2, 2, 16)
+    vl = jnp.asarray([32], jnp.int32)
+    spec = RequantSpec.per_channel(c=28, pre=7)
+    for be in (REF, FUSED):
+        with pytest.raises(ValueError, match="b_vec"):
+            be.int_decode_attention(q8, k8, v8, plan, vl, requant=spec)
+
+
+def test_unknown_backend_and_malformed_spec_raise():
+    """The documented error surface: unknown backend name lists the
+    registered ones; RequantSpec validation fires at construction."""
+    with pytest.raises(KeyError, match="registered"):
+        get_backend("nonexistent")
+    with pytest.raises(ValueError, match="Dyadic"):
+        RequantSpec("per_tensor", 8)           # per-tensor needs a Dyadic
+    with pytest.raises(ValueError, match="pre <= c"):
+        RequantSpec.per_channel(c=3, pre=9)
+    with pytest.raises(ValueError, match="int32"):
+        RequantSpec("raw", 8)                  # raw is 32-bit by definition

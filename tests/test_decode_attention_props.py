@@ -1,0 +1,83 @@
+"""Property-based parity for the fused decode attention kernel.
+
+Hypothesis drives the whole decode-contract space — head dims, GQA
+groupings, speculative query counts, cache tilings and *ragged* per-slot
+``valid_len`` (empty, single-token, block-boundary, full) plus all three
+RequantSpec epilogue forms and int8-extreme operands — and asserts the
+single-launch kernel is bit-exact against the full-matrix oracle on
+every draw.  Deterministic edge-case coverage (and the negative paths)
+lives in ``test_decode_attention.py``; this module needs the optional
+``hypothesis`` dev dependency.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis "
+                           "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import attention as iattn
+from repro.core.dyadic import fit_dyadic
+from repro.kernels.int_decode_attention import int_decode_attention_fused
+from repro.ops import RequantSpec, get_backend
+
+REF = get_backend("ref")
+
+# (L, bkv) pairs exercise exact tiling, boundary blocks and bkv == L
+CACHES = [(32, 8), (48, 16), (64, 64)]
+
+
+@st.composite
+def decode_cases(draw):
+    seed = draw(st.integers(0, 2 ** 31 - 1))
+    h = draw(st.sampled_from([1, 2, 4]))
+    hkv = draw(st.sampled_from([g for g in (1, 2, 4) if h % g == 0]))
+    d = draw(st.sampled_from([8, 16, 32]))
+    sq = draw(st.integers(1, 8))
+    L, bkv = draw(st.sampled_from(CACHES))
+    b = draw(st.integers(1, 3))
+    # ragged occupancy per slot, biased onto the edges the mask must get
+    # right: empty, one token, the block boundary, the full cache
+    edges = [0, 1, bkv - 1, bkv, bkv + 1, L - 1, L]
+    vl = [draw(st.one_of(st.sampled_from(edges), st.integers(0, L)))
+          for _ in range(b)]
+    form = draw(st.sampled_from(["per_tensor", "per_channel", "raw"]))
+    extreme = draw(st.booleans())
+    return seed, b, sq, L, bkv, h, hkv, d, tuple(vl), form, extreme
+
+
+@given(decode_cases())
+@settings(max_examples=12, deadline=None)
+def test_decode_kernel_matches_oracle_on_random_cases(case):
+    seed, b, sq, L, bkv, h, hkv, d, vl, form, extreme = case
+    rng = np.random.default_rng(seed)
+    plan = iattn.make_iattention(d, 8 / 127, 8 / 127, 4 / 127, 4 / 127)
+    if extreme:
+        # rail-to-rail operands: saturation arithmetic must still agree
+        q = rng.choice(np.asarray([-128, -127, 127], np.int8),
+                       (b, sq, h, d))
+        k = rng.choice(np.asarray([-128, 127], np.int8), (b, L, hkv, d))
+        v = rng.choice(np.asarray([-128, 127], np.int8), (b, L, hkv, d))
+    else:
+        q = np.clip(rng.normal(0, 40, (b, sq, h, d)), -128, 127)
+        k = np.clip(rng.normal(0, 40, (b, L, hkv, d)), -128, 127)
+        v = np.clip(rng.normal(0, 40, (b, L, hkv, d)), -128, 127)
+    q8, k8, v8 = (jnp.asarray(a, jnp.int8) for a in (q, k, v))
+    valid = jnp.asarray(vl, jnp.int32)
+    b_vec = None
+    if form == "per_tensor":
+        spec = RequantSpec.per_tensor(
+            fit_dyadic(plan.dn_out.value * 1.7, 127 * (1 << 8)))
+    elif form == "per_channel":
+        spec = RequantSpec.per_channel(c=28, pre=7)
+        b_vec = jnp.asarray(rng.integers(1000, 30000, (h * d,)), jnp.int32)
+    else:
+        spec = RequantSpec.raw()
+    got = np.asarray(int_decode_attention_fused(
+        q8, k8, v8, plan, valid, requant=spec, b_vec=b_vec, bkv=bkv))
+    want = np.asarray(REF.int_decode_attention(
+        q8, k8, v8, plan, valid, requant=spec, b_vec=b_vec))
+    assert np.array_equal(got, want), \
+        f"decode parity broke: {case!r}"

@@ -1,7 +1,5 @@
 """The unified operator API: RequantSpec forms, backend registry dispatch,
-ref<->pallas parity for all five ops, and the deprecation shims."""
-import warnings
-
+ref<->pallas parity across the ops, and the removed deprecation shims."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -265,18 +263,11 @@ def test_pallas_tuned_backend_parity(rng):
 
 # ------------------------------------------------- deprecation shims ------
 
-def test_kernels_ops_shim_warns_and_matches(rng):
-    from repro.kernels import ops as kops
-    x = jnp.asarray(rng.integers(-127, 128, (16, 64)), jnp.int8)
-    w = jnp.asarray(rng.integers(-127, 128, (64, 32)), jnp.int8)
-    dn = fit_dyadic(1 / 4000.0, 64 * 127 * 127)
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        old = kops.int8_matmul(x, w, None, dn=dn, backend="pallas")
-    assert any(issubclass(r.category, DeprecationWarning) for r in rec)
-    new = resolve_ops("pallas").int8_matmul(x, w,
-                                            RequantSpec.per_tensor(dn))
-    assert np.array_equal(np.asarray(old), np.asarray(new))
+def test_kernels_ops_shims_removed_with_pointer():
+    """The old string-dispatch import path is gone (it warned for one
+    release); the tombstone must point migrators at repro.ops."""
+    with pytest.raises(ImportError, match=r"repro\.ops"):
+        import repro.kernels.ops  # noqa: F401
 
 
 def test_engine_backend_kwarg_deprecated():
