@@ -1,0 +1,98 @@
+"""Paged vs contiguous serving decode: tokens/s and cache bytes.
+
+Drives the same request schedule through two `ServingEngine`
+configurations — the contiguous per-lane cache and the paged pool
+(undersubscribed, so cache memory is O(live tokens)) — asserting
+bit-identical token streams as a by-product, and reports decode
+throughput plus the KV bytes each layout provisions.
+
+Besides the usual CSV rows this module writes the machine-readable
+``benchmarks/BENCH_serving.json`` (schema: ``{"configs": {name:
+{"tokens_per_s", "kv_bytes", "pages", "tokens"}}, "parity": bool}``) —
+the artifact the bench-smoke CI job uploads, so the serving perf
+trajectory is tracked per commit.  On CPU both paths run through
+XLA/interpret so the ratio mostly documents overhead; on TPU the same
+harness times compiled kernels and the bytes column is what matters.
+"""
+import json
+import os
+import time
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "BENCH_serving.json")
+
+
+def _build(quick: bool):
+    import jax
+    from repro.configs.registry import get_config
+    from repro.models import model as M
+    from repro.models import transformer as tf
+    from repro.quant import convert
+
+    cfg = M.reduce_config(get_config("llama3-8b"), dtype="float32",
+                          vocab=128, num_layers=1 if quick else 2)
+    params = tf.init_params(jax.random.key(0), cfg)
+    qp, plans = convert.quantize_params(params, cfg)
+    return cfg, qp, plans
+
+
+def _serve(cfg, qp, plans, n_req: int, max_new: int, **engine_kw):
+    import numpy as np
+    from repro.serving import Request, ServingEngine
+
+    eng = ServingEngine(qp, plans, cfg, batch_size=2, cache_len=64,
+                        ops="ref", **engine_kw)
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i, prompt=list(rng.integers(1, cfg.vocab, 3)),
+                    max_new_tokens=max_new) for i in range(n_req)]
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.perf_counter()
+    eng.run_until_done()
+    dt = time.perf_counter() - t0
+    toks = [r.out_tokens for r in reqs]
+    n_tok = sum(len(t) for t in toks)
+    stats = eng.describe()["cache"]
+    return {
+        "tokens": n_tok,
+        "tokens_per_s": round(n_tok / dt, 2),
+        "kv_bytes": stats["kv_bytes"],
+        "pages": {k: stats[k] for k in ("page_size", "num_pages")
+                  if k in stats},
+        "mode": stats["mode"],
+    }, toks
+
+
+def run(quick: bool = False):
+    cfg, qp, plans = _build(quick)
+    n_req, max_new = (3, 4) if quick else (6, 8)
+    configs = {}
+    contiguous, toks_c = _serve(cfg, qp, plans, n_req, max_new,
+                                cache_mode="contiguous")
+    configs["contiguous"] = contiguous
+    # undersubscribed pool: far less than batch x cache_len provisioned
+    paged, toks_p = _serve(cfg, qp, plans, n_req, max_new,
+                           cache_mode="paged", page_size=16, num_pages=5)
+    configs["paged"] = paged
+    parity = toks_p == toks_c
+    assert parity, "paged tokens diverged from contiguous"
+
+    with open(JSON_PATH, "w") as f:
+        json.dump({"configs": configs, "parity": parity,
+                   "arch": cfg.name, "quick": quick}, f, indent=2)
+
+    rows = []
+    for name, c in configs.items():
+        rows.append((f"serving_tokens_per_s[{name}]", c["tokens_per_s"],
+                     "parity verified"))
+        rows.append((f"serving_kv_bytes[{name}]", c["kv_bytes"],
+                     f"mode={c['mode']}"))
+    saved = 100.0 * (1 - paged["kv_bytes"] / contiguous["kv_bytes"])
+    rows.append(("serving_kv_bytes_saved_pct", round(saved, 1),
+                 f"paged pool undersubscribed; JSON at {JSON_PATH}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

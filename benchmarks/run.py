@@ -10,6 +10,9 @@ Prints ``name,value,derived`` CSV rows.  Tables:
   kernels  -> bench_kernels     (per-kernel microbench)
   fusion   -> bench_fused_attention (fused vs two-pass attention)
   decode   -> bench_decode_attention (fused vs oracle ragged decode)
+  serving  -> bench_serving     (paged vs contiguous engine; also writes
+             the machine-readable benchmarks/BENCH_serving.json that the
+             bench-smoke CI job uploads as an artifact)
 
 ``--quick`` runs a smoke subset (each module's cheapest shapes, the
 slow accuracy sweep skipped) — the CI job runs exactly this, so the
@@ -29,10 +32,11 @@ def main(argv=None) -> None:
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
     from benchmarks import (bench_approx_error, bench_asic_model,
                             bench_decode_attention, bench_fused_attention,
-                            bench_kernels, bench_operators, bench_table2)
+                            bench_kernels, bench_operators, bench_serving,
+                            bench_table2)
     mods = [bench_operators, bench_asic_model, bench_approx_error,
             bench_kernels, bench_fused_attention, bench_decode_attention,
-            bench_table2]
+            bench_serving, bench_table2]
     if quick:
         # the Table-II accuracy sweep dominates runtime; smoke the rest
         mods.remove(bench_table2)

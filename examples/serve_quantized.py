@@ -43,10 +43,13 @@ def main():
     # the engine takes one OpSet handle at construction (repro.ops
     # registry); swap "ref" for "pallas"/"pallas_tuned"/"pallas_fused"
     # — or set the REPRO_BACKEND env var — without touching the model
-    # code (docs/OPS_API.md lists the built-ins)
+    # code (docs/OPS_API.md lists the built-ins).  The default cache is
+    # the paged pool; num_pages undersubscribes it so KV memory tracks
+    # live tokens, not batch x cache_len (repro.serving.kvcache)
     engine = ServingEngine(qp, plans, cfg, batch_size=4, cache_len=64,
-                           ops=rops.resolve_ops("ref"))
-    print(f"engine: {engine.describe()}")
+                           ops=rops.resolve_ops("ref"),
+                           page_size=16, num_pages=9)
+    print(f"engine: {engine.describe_str()}")
     reqs = [Request(uid=i, prompt=[1 + 3 * i, 7, 42, 5],
                     max_new_tokens=12,
                     temperature=0.0 if i % 2 == 0 else 0.8)

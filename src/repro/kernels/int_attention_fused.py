@@ -110,18 +110,30 @@ def _streaming_attn_body(phase, kv_step, n_kv, q8, k8, v8, live, blk_live,
         if requant.is_raw:
             o_ref[0, :, 0, :] = acc
             return
-        lo = -(1 << (requant.out_bits - 1))
-        hi = (1 << (requant.out_bits - 1)) - 1
-        if requant.kind == PER_TENSOR:
-            dn = requant.dn
-            out = _rshift_round(_rshift_round(acc, dn.pre) * jnp.int32(dn.b),
-                                dn.c - dn.pre)
-        else:                                   # per-channel over (h, d)
-            b = b_ref[0, :].astype(jnp.int32)[None, :]
-            out = _rshift_round(_rshift_round(acc, requant.pre) * b,
-                                requant.c - requant.pre)
-        out = jnp.clip(out, lo, hi)
-        o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+        b_row = None if b_ref is None \
+            else b_ref[0, :].astype(jnp.int32)[None, :]
+        o_ref[0, :, 0, :] = _requant_tile(acc, requant,
+                                          b_row).astype(o_ref.dtype)
+
+
+def _requant_tile(acc, requant: RequantSpec, b_row=None):
+    """The in-kernel requant epilogue on an int32 tile: the exact
+    two-stage rounding of docs/KERNELS.md for the per-tensor and
+    per-channel forms (``b_row``: int32 ``(1, N)`` multipliers, required
+    iff per-channel).  Shared by the prefill/decode epilogues and the
+    decode kernel's folded wo projection, so the rounding exists once."""
+    if requant.is_raw:
+        return acc
+    lo = -(1 << (requant.out_bits - 1))
+    hi = (1 << (requant.out_bits - 1)) - 1
+    if requant.kind == PER_TENSOR:
+        dn = requant.dn
+        out = _rshift_round(_rshift_round(acc, dn.pre) * jnp.int32(dn.b),
+                            dn.c - dn.pre)
+    else:                                       # per-channel over N
+        out = _rshift_round(_rshift_round(acc, requant.pre) * b_row,
+                            requant.c - requant.pre)
+    return jnp.clip(out, lo, hi)
 
 
 def _epilogue_setup(requant, plan: IAttnPlan, out_bits: int, b_vec,

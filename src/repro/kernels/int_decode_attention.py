@@ -19,6 +19,30 @@ blocks, with **data-dependent ``valid_len`` masking**:
     row max and 0 to the sum and the P·V accumulator, exactly like the
     prefill kernel's causal masking.
 
+**Paged KV caches** (``pages=``): instead of a contiguous per-slot cache
+``(B, L, Hkv, D)``, the K/V operands may be a physical page pool
+``(num_pages, page_size, Hkv, D)`` plus a page table ``pages: int32[B,
+max_pages]`` riding as a *second* scalar-prefetch operand next to
+``valid_len``.  The kernel body is unchanged — masking works in logical
+positions — only the KV block index map differs: logical block ``k`` of
+slot ``b`` resolves to physical page ``pages[b, k·bkv // page_size]``
+(sub-block ``k·bkv % page_size // bkv``).  Dead logical blocks clamp to
+the last live block *before* translation, so the DMA always lands on a
+resident page; unmapped table entries hold the null page 0, which every
+pool reserves (see ``repro.serving.kvcache``).  Numerics are
+bit-identical to gathering the pages into the contiguous layout first.
+
+**Folded wo projection** (``wo_w8=``): the decode epilogue can absorb
+the attention output projection — per head, the requantized int8
+``(Sq, D)`` tile is contracted against that head's ``(D, N)`` slab of
+``wo`` and accumulated across the head grid dimension in VMEM scratch;
+the *last* head adds ``bias32`` and applies the wo ``RequantSpec``
+(typically per-channel over the N output channels, the same two-stage
+rounding the attention epilogue already implements).  The launch then
+returns the ``(B, Sq, N)`` projected output directly — one kernel for
+attention *and* o-projection, bit-exact against the unfolded
+attention-then-``int8_matmul`` composition.
+
 Like ``int_attention_fused`` this buys bit-exactness with three
 streaming sweeps over the live KV blocks (max → sum → normalise+AV) —
 integer maxima and sums are associative, so the result is bit-identical
@@ -34,7 +58,8 @@ plain ``pos < valid_len`` occupancy mask.
 Accumulator budget (Sq ≤ 8 rows live in VMEM scratch the whole launch):
 row sums need ``valid_len ≤ 2¹⁵`` so ``Σ e16 ≤ 2³⁰`` stays int32-exact —
 the same ``MAX_SKV`` budget as the prefill kernel, asserted on the
-*cache length* here because ``valid_len ≤ L`` by construction.
+*logical cache length* here because ``valid_len ≤ L`` by construction.
+The folded-wo scratch adds ``(Sq, N)`` int32 (N = H·D out channels).
 """
 from __future__ import annotations
 
@@ -47,22 +72,40 @@ from jax.experimental import pallas as pl
 from repro.core.attention import IAttnPlan
 from repro.core.softmax import MAX_ROWSUM_LEN
 from repro.kernels.int_attention_fused import (_epilogue_setup,
+                                               _requant_tile,
                                                _streaming_attn_body)
-from repro.ops.spec import RequantSpec
+from repro.ops.spec import PER_CHANNEL, RequantSpec
 
 MAX_SQ = 8                  # speculative query budget (scratch rows/head)
 MAX_SKV = MAX_ROWSUM_LEN    # row-sum int32 budget: L * 2^15 <= 2^30
 
 
-def _decode_kernel(vl_ref, q_ref, k_ref, v_ref, *rest, plan: IAttnPlan,
-                   requant: RequantSpec, has_bvec: bool, n_kv: int,
-                   sq: int, bkv: int):
-    if has_bvec:
-        b_ref, o_ref, m_ref, s_ref, acc_ref = rest
-    else:
-        b_ref = None
-        o_ref, m_ref, s_ref, acc_ref = rest
+def _decode_kernel(*refs, plan: IAttnPlan, requant: RequantSpec,
+                   has_bvec: bool, n_kv: int, sq: int, bkv: int,
+                   paged: bool, fold: bool, wo_spec, wo_has_bias: bool,
+                   wo_has_bvec: bool, n_heads: int):
+    refs = list(refs)
+    vl_ref = refs.pop(0)
+    if paged:
+        refs.pop(0)                 # page table: read by index maps only
+    q_ref, k_ref, v_ref = refs.pop(0), refs.pop(0), refs.pop(0)
+    b_ref = refs.pop(0) if has_bvec else None
+    wo_ref = wob_ref = wobv_ref = None
+    if fold:
+        wo_ref = refs.pop(0)
+        if wo_has_bias:
+            wob_ref = refs.pop(0)
+        if wo_has_bvec:
+            wobv_ref = refs.pop(0)
+    o_ref = refs.pop(0)
+    m_ref, s_ref, acc_ref = refs.pop(0), refs.pop(0), refs.pop(0)
+    # with the folded projection the per-head attention tile lands in
+    # VMEM scratch (same (1, sq, 1, d) indexing as the real output ref)
+    attn_out = refs.pop(0) if fold else o_ref
+    wacc_ref = refs.pop(0) if fold else None
+
     bi = pl.program_id(0)
+    head = pl.program_id(1)
     phase = pl.program_id(2)
     kv_step = pl.program_id(3)
     vl = vl_ref[bi]
@@ -72,7 +115,9 @@ def _decode_kernel(vl_ref, q_ref, k_ref, v_ref, *rest, plan: IAttnPlan,
     v8 = v_ref[0, :, 0, :]
 
     # stepped occupancy mask: row i sees vl - (sq-1-i) positions (sq=1:
-    # the plain pos < valid_len cache-occupancy mask)
+    # the plain pos < valid_len cache-occupancy mask).  ki is the
+    # *logical* position — under paging the index map already translated
+    # the block to its physical page, the mask math is unchanged.
     qi = jax.lax.broadcasted_iota(jnp.int32, (sq, bkv), 0)
     ki = kv_step * bkv + jax.lax.broadcasted_iota(jnp.int32, (sq, bkv), 1)
     live = ki < vl - (sq - 1 - qi)
@@ -85,27 +130,74 @@ def _decode_kernel(vl_ref, q_ref, k_ref, v_ref, *rest, plan: IAttnPlan,
     blk_live = kv_step * bkv < vl
 
     _streaming_attn_body(phase, kv_step, n_kv, q8, k8, v8, live, blk_live,
-                         o_ref, m_ref, s_ref, acc_ref, b_ref,
+                         attn_out, m_ref, s_ref, acc_ref, b_ref,
                          plan=plan, requant=requant)
+
+    if fold:
+        @pl.when((phase == 2) & (kv_step == n_kv - 1))
+        def _wo_accumulate():
+            # this head's slab of the o-projection: (sq, d) @ (d, n_out)
+            o8 = attn_out[0, :, 0, :]
+            part = jax.lax.dot_general(o8, wo_ref[...],
+                                       (((1,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.int32)
+            prev = jnp.where(head == 0, jnp.zeros_like(part),
+                             wacc_ref[...])
+            wacc_ref[...] = prev + part
+
+        @pl.when((phase == 2) & (kv_step == n_kv - 1)
+                 & (head == n_heads - 1))
+        def _wo_epilogue():
+            acc = wacc_ref[...]
+            if wo_has_bias:
+                acc = acc + wob_ref[0, :][None, :]
+            b_row = None if wobv_ref is None \
+                else wobv_ref[0, :].astype(jnp.int32)[None, :]
+            o_ref[0, :, :] = _requant_tile(acc, wo_spec,
+                                           b_row).astype(o_ref.dtype)
 
 
 def int_decode_attention_fused(q8, k8_cache, v8_cache, plan: IAttnPlan,
                                valid_len, requant=None, b_vec=None,
                                bkv: int = 128, out_bits: int = 8,
-                               interpret: bool = True):
-    """q8: (B, Sq, H, D) int8, Sq ≤ 8; caches: (B, L, Hkv, D) int8
-    (GQA: Hkv | H); valid_len: (B,) int32 live positions per slot.
+                               interpret: bool = True,
+                               pages=None, page_size: int = 0,
+                               wo_w8=None, wo_bias32=None, wo_b_vec=None,
+                               wo_spec=None):
+    """q8: (B, Sq, H, D) int8, Sq ≤ 8; valid_len: (B,) int32 live
+    positions per slot.  Caches, either layout:
+
+      * contiguous — k8/v8 ``(B, L, Hkv, D)`` int8 (GQA: Hkv | H);
+      * paged      — k8/v8 ``(num_pages, page_size, Hkv, D)`` pools plus
+        ``pages: int32 (B, max_pages)`` (logical block → physical page;
+        unmapped entries = null page 0) and ``page_size``.  The logical
+        length is ``max_pages · page_size``.
 
     ``requant``: a :class:`RequantSpec` for the epilogue (default: the
     plan's per-tensor ``dn_out``); ``b_vec``: int32 per-channel
     multipliers, shape (H*D,) or (H, D), required iff per-channel.
 
-    Returns (B, Sq, H, D): int8 when the epilogue clips to ≤ 8 bits,
-    int32 otherwise.  Bit-exact against
-    ``kernels.ref.ref_int_decode_attention`` for the same arguments.
+    ``wo_w8`` (+ ``wo_bias32`` / ``wo_b_vec`` / ``wo_spec``): fold the
+    output projection into the launch — ``wo_w8 (H·D, N)`` int8,
+    ``wo_spec`` its epilogue (``wo_b_vec (N,)`` iff per-channel).  The
+    attention epilogue must clip to ≤ 8 bits (it feeds the int8 MXU
+    contraction); the return becomes ``(B, Sq, N)``.
+
+    Returns (B, Sq, H, D) — or (B, Sq, N) when folded: int8 when the
+    final epilogue clips to ≤ 8 bits, int32 otherwise.  Bit-exact
+    against ``kernels.ref.ref_int_decode_attention`` (+ the unfolded
+    per-channel matmul when folding) for the same arguments.
     """
     b, sq, h, d = q8.shape
-    _, L, hkv, _ = k8_cache.shape
+    paged = pages is not None
+    if paged:
+        ps, hkv = k8_cache.shape[1], k8_cache.shape[2]
+        assert page_size == ps, (page_size, ps)
+        pages = jnp.asarray(pages, jnp.int32)
+        assert pages.ndim == 2 and pages.shape[0] == b, pages.shape
+        L = pages.shape[1] * ps
+    else:
+        _, L, hkv, _ = k8_cache.shape
     assert h % hkv == 0, (h, hkv)
     assert sq <= MAX_SQ, \
         f"decode kernel holds Sq <= {MAX_SQ} query rows in scratch " \
@@ -114,55 +206,130 @@ def int_decode_attention_fused(q8, k8_cache, v8_cache, plan: IAttnPlan,
         f"row-sum int32 budget: cache_len <= {MAX_SKV} (got {L}); " \
         "use the two-pass path (see module docstring)"
     group = h // hkv
-    bkv = min(bkv, L)
-    assert L % bkv == 0, (L, bkv)
+    bkv = min(bkv, ps if paged else L)
+    if paged:
+        assert ps % bkv == 0, (ps, bkv)
+        sub = ps // bkv                 # KV sub-blocks per physical page
+    else:
+        assert L % bkv == 0, (L, bkv)
+        sub = 1
     n_kv = L // bkv
     valid_len = jnp.asarray(valid_len, jnp.int32)
 
     requant, has_bvec, b2, out_dtype = _epilogue_setup(
         requant, plan, out_bits, b_vec, h, d)
 
+    fold = wo_w8 is not None
+    wo_has_bias = wo_has_bvec = False
+    if fold:
+        assert wo_spec is not None, "folded wo projection needs wo_spec"
+        assert not requant.is_raw and requant.out_bits <= 8, \
+            "wo folding needs an int8 attention epilogue"
+        wo_w8 = jnp.asarray(wo_w8)
+        n_out = wo_w8.shape[-1]
+        assert wo_w8.shape == (h * d, n_out), (wo_w8.shape, h, d)
+        wo_has_bias = wo_bias32 is not None
+        wo_has_bvec = wo_spec.kind == PER_CHANNEL
+        if wo_has_bvec and wo_b_vec is None:
+            raise ValueError("per-channel wo_spec needs the wo_b_vec "
+                             "multiplier vector")
+        out_dtype = jnp.int8 if (not wo_spec.is_raw
+                                 and wo_spec.out_bits <= 8) else jnp.int32
+
     kernel = functools.partial(
         _decode_kernel, plan=plan, requant=requant, has_bvec=has_bvec,
-        n_kv=n_kv, sq=sq, bkv=bkv)
+        n_kv=n_kv, sq=sq, bkv=bkv, paged=paged, fold=fold, wo_spec=wo_spec,
+        wo_has_bias=wo_has_bias, wo_has_bvec=wo_has_bvec, n_heads=h)
 
-    def _kv_block(ki, vl, bi):
+    def _kv_block(ki, vl):
         # clamp dead blocks to the slot's last live block: the pipeline
         # re-reads a resident block instead of DMA-ing a dead one (the
         # compute for those steps is pl.when-ed off anyway)
-        last = jnp.maximum(pl.cdiv(vl[bi], bkv) - 1, 0)
+        last = jnp.maximum(pl.cdiv(vl, bkv) - 1, 0)
         return jnp.minimum(ki, last)
 
+    # index maps: scalar-prefetch refs arrive as trailing args — one
+    # (valid_len) for the contiguous layout, two (valid_len, pages) for
+    # the paged layout, where the KV map translates logical block →
+    # physical (page, sub-block) through the prefetched table.
+    if paged:
+        def q_map(bi, hi, ph, ki, vl, pt):
+            return (bi, 0, hi, 0)
+
+        def kv_map(bi, hi, ph, ki, vl, pt):
+            kc = _kv_block(ki, vl[bi])
+            return (pt[bi, kc // sub], kc % sub, hi // group, 0)
+
+        def head_row_map(bi, hi, ph, ki, vl, pt):
+            return (hi, 0)
+
+        def one_row_map(bi, hi, ph, ki, vl, pt):
+            return (0, 0)
+
+        def out_map(bi, hi, ph, ki, vl, pt):
+            return (bi, 0, 0) if fold else (bi, 0, hi, 0)
+    else:
+        def q_map(bi, hi, ph, ki, vl):
+            return (bi, 0, hi, 0)
+
+        def kv_map(bi, hi, ph, ki, vl):
+            return (bi, _kv_block(ki, vl[bi]), hi // group, 0)
+
+        def head_row_map(bi, hi, ph, ki, vl):
+            return (hi, 0)
+
+        def one_row_map(bi, hi, ph, ki, vl):
+            return (0, 0)
+
+        def out_map(bi, hi, ph, ki, vl):
+            return (bi, 0, 0) if fold else (bi, 0, hi, 0)
+
+    kv_blk = (1, bkv, 1, d)
     in_specs = [
-        pl.BlockSpec((1, sq, 1, d),
-                     lambda bi, hi, ph, ki, vl: (bi, 0, hi, 0)),
-        pl.BlockSpec((1, bkv, 1, d),
-                     lambda bi, hi, ph, ki, vl:
-                     (bi, _kv_block(ki, vl, bi), hi // group, 0)),
-        pl.BlockSpec((1, bkv, 1, d),
-                     lambda bi, hi, ph, ki, vl:
-                     (bi, _kv_block(ki, vl, bi), hi // group, 0)),
+        pl.BlockSpec((1, sq, 1, d), q_map),
+        pl.BlockSpec(kv_blk, kv_map),
+        pl.BlockSpec(kv_blk, kv_map),
     ]
     args = [q8, k8_cache, v8_cache]
     if has_bvec:
-        in_specs.append(
-            pl.BlockSpec((1, d), lambda bi, hi, ph, ki, vl: (hi, 0)))
+        in_specs.append(pl.BlockSpec((1, d), head_row_map))
         args.append(b2)
+    if fold:
+        in_specs.append(pl.BlockSpec((d, n_out), head_row_map))
+        args.append(wo_w8)
+        if wo_has_bias:
+            in_specs.append(pl.BlockSpec((1, n_out), one_row_map))
+            args.append(jnp.asarray(wo_bias32, jnp.int32).reshape(1, n_out))
+        if wo_has_bvec:
+            in_specs.append(pl.BlockSpec((1, n_out), one_row_map))
+            args.append(jnp.asarray(wo_b_vec, jnp.int32).reshape(1, n_out))
 
     from jax.experimental.pallas import tpu as pltpu
+    scratch = [pltpu.VMEM((sq, 1), jnp.int32),
+               pltpu.VMEM((sq, 1), jnp.int32),
+               pltpu.VMEM((sq, d), jnp.int32)]
+    if fold:
+        # per-head attention tile (int8: asserted above) + the (Sq, N)
+        # o-projection accumulator carried across the head grid dim
+        scratch += [pltpu.VMEM((1, sq, 1, d), jnp.int8),
+                    pltpu.VMEM((sq, n_out), jnp.int32)]
+        out_specs = pl.BlockSpec((1, sq, n_out), out_map)
+        out_shape = jax.ShapeDtypeStruct((b, sq, n_out), out_dtype)
+    else:
+        out_specs = pl.BlockSpec((1, sq, 1, d), out_map)
+        out_shape = jax.ShapeDtypeStruct((b, sq, h, d), out_dtype)
+
+    scalar_args = (valid_len, pages) if paged else (valid_len,)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=len(scalar_args),
         grid=(b, h, 3, n_kv),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, sq, 1, d),
-                               lambda bi, hi, ph, ki, vl: (bi, 0, hi, 0)),
-        scratch_shapes=[pltpu.VMEM((sq, 1), jnp.int32),
-                        pltpu.VMEM((sq, 1), jnp.int32),
-                        pltpu.VMEM((sq, d), jnp.int32)],
+        out_specs=out_specs,
+        scratch_shapes=scratch,
     )
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, sq, h, d), out_dtype),
+        out_shape=out_shape,
         interpret=interpret,
-    )(valid_len, *args)
+    )(*scalar_args, *args)

@@ -111,6 +111,49 @@ def ref_int_decode_attention(q8, k8_cache, v8_cache, plan: iattn.IAttnPlan,
     return apply_attn_requant(acc, requant, b_vec)
 
 
+def ref_int_paged_decode_attention(q8, k_pool, v_pool, plan, valid_len,
+                                   pages, page_size: int,
+                                   out_bits: int = 8, requant=None,
+                                   b_vec=None):
+    """Decode oracle for the *paged* cache layout: gather the page pool
+    ``(num_pages, page_size, Hkv, D)`` through ``pages (B, max_pages)``
+    into the contiguous per-slot layout, then delegate to
+    :func:`ref_int_decode_attention` — paged decode is *defined* as
+    bit-identical to this composition."""
+    from repro.ops.paged import gather_pages
+    k8 = gather_pages(k_pool, pages, page_size)
+    v8 = gather_pages(v_pool, pages, page_size)
+    return ref_int_decode_attention(q8, k8, v8, plan, valid_len, out_bits,
+                                    requant=requant, b_vec=b_vec)
+
+
+def ref_apply_wo(o8, wo_w8, wo_bias32, wo_b_vec, wo_spec):
+    """The unfolded o-projection a folded decode launch must match:
+    int8 attention output ``(B, Sq, H, D)`` × ``wo_w8 (H·D, N)`` with
+    bias and the wo :class:`RequantSpec` epilogue → ``(B, Sq, N)``.
+    Exactly ``models.intlayers.int_linear``'s math on the ref backend."""
+    from repro.core.dyadic import apply_dyadic_perchannel
+    from repro.ops.spec import PER_TENSOR
+    b, sq = o8.shape[0], o8.shape[1]
+    x8 = o8.astype(jnp.int8).reshape(b * sq, -1)
+    acc = jnp.dot(x8, wo_w8, preferred_element_type=jnp.int32)
+    if wo_bias32 is not None:
+        acc = acc + wo_bias32[None, :]
+    if wo_spec.is_raw:
+        return acc.reshape(b, sq, -1)
+    if wo_spec.kind == PER_TENSOR:
+        out = apply_dyadic(acc, wo_spec.dn)
+    else:
+        if wo_b_vec is None:
+            raise ValueError("per-channel wo_spec needs the wo_b_vec "
+                             "multiplier vector")
+        out = apply_dyadic_perchannel(acc, jnp.asarray(wo_b_vec, jnp.int32),
+                                      wo_spec.c, wo_spec.pre, axis=-1)
+    out = clip_to_bits(out, wo_spec.out_bits)
+    out = out.astype(jnp.int8) if wo_spec.out_bits <= 8 else out
+    return out.reshape(b, sq, -1)
+
+
 def apply_attn_requant(acc, requant, b_vec=None):
     """Apply a RequantSpec epilogue to the (B, Sq, H, D) int32 P·V
     accumulator — the exact rounding the fused kernel replicates.  The

@@ -36,6 +36,19 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--cache-mode", default="paged",
+                    choices=["paged", "contiguous"],
+                    help="KV layout: paged pool (memory O(live tokens)) "
+                         "or one contiguous slab per lane")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per physical KV page (paged mode)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="physical pool size incl. the null page "
+                         "(default: fully provisioned; smaller values "
+                         "undersubscribe the pool)")
+    ap.add_argument("--no-fold-wo", action="store_true",
+                    help="keep the o-projection requant outside the "
+                         "decode epilogue (numerics identical)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--backend", default=None,
                     help="registered op backend (default: REPRO_BACKEND "
@@ -62,8 +75,12 @@ def main():
           f"({n_int8/2**20:.0f} MiB vs {n_int8*2/2**20:.0f} MiB bf16)")
 
     eng = ServingEngine(qp, plans, cfg, batch_size=args.batch,
-                        cache_len=args.cache_len, ops=ops)
-    print(f"engine: {eng.describe()}")
+                        cache_len=args.cache_len, ops=ops,
+                        cache_mode=args.cache_mode,
+                        page_size=args.page_size,
+                        num_pages=args.num_pages,
+                        fold_wo=not args.no_fold_wo)
+    print(f"engine: {eng.describe_str()}")
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,
                     prompt=list(rng.integers(1, cfg.vocab, 4)),

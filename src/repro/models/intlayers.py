@@ -170,21 +170,39 @@ def int_attn_fwd(qp, x8, plans: qplans.AttnPlan, cfg: ArchConfig,
 
 def int_attn_decode(qp, x8, cache, pos, plans: qplans.AttnPlan,
                     cfg: ArchConfig, rope_tab=None, window: int = 0,
-                    ops=None):
-    """One-token decode.  x8: (B,1,D); cache: {"k8","v8"} (B,L,Hkv,hd).
+                    ops=None, pages=None, page_size: int = 0,
+                    max_len: int = 0, fold_wo: bool = False):
+    """One-token decode.  x8: (B,1,D); cache: {"k8","v8"}.
 
-    ``pos``: (B,) current position (tokens written at cache[:, pos]).
-    Returns (out32, new_cache).
+    ``pos``: (B,) current position (tokens written at logical slot
+    ``pos``, or ``pos % window`` for sliding-window caches).  Returns
+    (out32, new_cache).
+
+    Cache layouts: contiguous ``(B, L, Hkv, hd)`` by default; with
+    ``pages`` (int32 ``(B, max_pages)`` page table) the cache is a
+    physical page pool ``(num_pages, page_size, Hkv, hd)`` and the
+    logical slot resolves to ``(pages[b, slot // page_size],
+    slot % page_size)`` — unmapped lanes write into the reserved null
+    page 0, whose contents are never valid (repro.serving.kvcache).
+    ``max_len`` bounds the logical occupancy under paging (defaults to
+    the page-table span).
 
     The ragged-cache attention dispatches through the configured
     backend's ``int_decode_attention`` (per-slot ``valid_len`` masking;
     ``pallas_fused`` runs it as one kernel launch skipping dead cache
-    blocks) — the backend owns GQA head-repeat, so the KV cache is
-    handed over in its compact (B, L, Hkv, hd) form.
+    blocks, translating paged blocks through the scalar-prefetched
+    table) — the backend owns GQA head-repeat, so the KV cache is
+    handed over in its compact Hkv form.  With ``fold_wo`` the output
+    projection's per-channel requant rides in the decode epilogue
+    (``wo=``/``wo_spec=`` operands; bit-exact vs the unfolded path).
     """
     ops = resolve_ops(ops, cfg)
     b, _, d = x8.shape
-    L = cache["k8"].shape[1]
+    paged = pages is not None
+    if paged:
+        L = max_len or pages.shape[1] * page_size
+    else:
+        L = cache["k8"].shape[1]
     q8 = int_linear(x8, qp["wq"], plans.qkv, ops) \
         .reshape(b, 1, cfg.n_heads, cfg.hd)
     k8 = int_linear(x8, qp["wk"], plans.qkv, ops) \
@@ -198,16 +216,34 @@ def int_attn_decode(qp, x8, cache, pos, plans: qplans.AttnPlan,
         slot = pos % window
     else:
         slot = pos
-    bidx = jnp.arange(b)
-    k_cache = cache["k8"].at[bidx, slot].set(k8[:, 0])
-    v_cache = cache["v8"].at[bidx, slot].set(v8[:, 0])
-    valid = jnp.minimum(pos + 1, L) if window > 0 else pos + 1
-    o8 = ops.int_decode_attention(
-        q8, k_cache, v_cache, plans.attn, valid,
-        requant=RequantSpec.per_tensor(plans.attn.dn_out))
-    o8 = o8.astype(jnp.int8)
-    out32 = int_linear(o8.reshape(b, 1, cfg.n_heads * cfg.hd), qp["wo"],
-                       plans.out, ops)
+    if paged:
+        pages = jnp.asarray(pages, jnp.int32)
+        bidx = jnp.arange(b)
+        page = pages[bidx, slot // page_size]
+        off = slot % page_size
+        k_cache = cache["k8"].at[page, off].set(k8[:, 0])
+        v_cache = cache["v8"].at[page, off].set(v8[:, 0])
+    else:
+        bidx = jnp.arange(b)
+        k_cache = cache["k8"].at[bidx, slot].set(k8[:, 0])
+        v_cache = cache["v8"].at[bidx, slot].set(v8[:, 0])
+    valid = jnp.minimum(pos + 1, L) if (window > 0 or paged) else pos + 1
+    kw = {}
+    if paged:
+        kw.update(pages=pages, page_size=page_size)
+    if fold_wo:
+        out32 = ops.int_decode_attention(
+            q8, k_cache, v_cache, plans.attn, valid,
+            requant=RequantSpec.per_tensor(plans.attn.dn_out),
+            wo=QuantLinearParams.of(qp["wo"]),
+            wo_spec=RequantSpec.for_linear(plans.out), **kw)
+    else:
+        o8 = ops.int_decode_attention(
+            q8, k_cache, v_cache, plans.attn, valid,
+            requant=RequantSpec.per_tensor(plans.attn.dn_out), **kw)
+        o8 = o8.astype(jnp.int8)
+        out32 = int_linear(o8.reshape(b, 1, cfg.n_heads * cfg.hd),
+                           qp["wo"], plans.out, ops)
     return out32, {"k8": k_cache, "v8": v_cache}
 
 

@@ -161,8 +161,16 @@ def _int_encoder(qparams, src_embeds, plans, cfg: ArchConfig, ops):
 
 def init_decode_cache(cfg: ArchConfig, batch: int, cache_len: int,
                       memory8=None, qparams=None, plans=None,
-                      ops=None):
-    """Per-sublayer-position stacked caches (scan-compatible)."""
+                      ops=None, layout=None):
+    """Per-sublayer-position stacked caches (scan-compatible).
+
+    ``layout``: an optional ``repro.serving.kvcache.CacheLayout`` — the
+    attention K/V become physical *page pools* ``(ng, num_pages,
+    page_size, Hkv, hd)`` addressed through a page table instead of
+    per-lane contiguous buffers; every other cache kind (Mamba state,
+    cross-attention memory) stays lane-indexed.  Pool memory is
+    ``num_pages × page_size`` tokens per sublayer — O(provisioned
+    pages), not O(batch × cache_len)."""
     ops = resolve_ops(ops, cfg)
     gl, ng, kinds = layer_group_spec(cfg)
     L = min(cache_len, cfg.window) if cfg.window > 0 else cache_len
@@ -170,8 +178,11 @@ def init_decode_cache(cfg: ArchConfig, batch: int, cache_len: int,
     for j, (mix, ff, has_cross) in enumerate(kinds):
         c: Dict[str, Any] = {}
         if mix == "attn":
-            c["k8"] = jnp.zeros((ng, batch, L, cfg.n_kv_heads, cfg.hd),
-                                jnp.int8)
+            kv_shape = (ng, batch, L, cfg.n_kv_heads, cfg.hd) \
+                if layout is None else \
+                (ng, layout.num_pages, layout.page_size,
+                 cfg.n_kv_heads, cfg.hd)
+            c["k8"] = jnp.zeros(kv_shape, jnp.int8)
             c["v8"] = jnp.zeros_like(c["k8"])
         elif mix == "ssm":
             st = il.init_int_mamba_state(cfg, batch)
@@ -197,14 +208,18 @@ def init_decode_cache(cfg: ArchConfig, batch: int, cache_len: int,
 
 
 def _int_sublayer_decode(qp, cache, x32, plans, cfg: ArchConfig, kind,
-                         rope_tab, pos, ops):
+                         rope_tab, pos, ops, pages=None,
+                         page_size: int = 0, max_len: int = 0,
+                         fold_wo: bool = False):
     mix, ff, has_cross = kind
     new_cache = dict(cache)
     h8 = il.int_norm(qp["norm1"], x32, plans.norm, ops)
     if mix == "attn":
         a32, kv = il.int_attn_decode(qp["attn"], h8, cache, pos,
                                      plans.attn, cfg, rope_tab,
-                                     window=cfg.window, ops=ops)
+                                     window=cfg.window, ops=ops,
+                                     pages=pages, page_size=page_size,
+                                     max_len=max_len, fold_wo=fold_wo)
         new_cache.update(kv)
     elif mix == "cross":
         a32 = _cross_decode(qp["attn"], h8, cache, plans, cfg, pos, ops)
@@ -249,11 +264,19 @@ def _cross_decode(qp, h8, cache, plans, cfg, pos, ops):
 
 
 def int_decode_step(qparams, caches, tokens, pos, plans, cfg: ArchConfig,
-                    rope_tab=None, ops=None):
+                    rope_tab=None, ops=None, pages=None,
+                    page_size: int = 0, max_len: int = 0,
+                    fold_wo: bool = False):
     """tokens: (B,) int32; pos: (B,) int32.  Returns (logits, caches).
 
     One scan over layer groups; inside the body the ``gl`` sublayers run in
-    architectural order (same traversal as prefill)."""
+    architectural order (same traversal as prefill).
+
+    ``pages``/``page_size``/``max_len``: the paged KV-cache operands
+    (page table int32 (B, max_pages); see ``init_decode_cache(layout=)``
+    and repro.serving.kvcache).  ``fold_wo`` folds each attention
+    sublayer's o-projection requant into the decode epilogue
+    (bit-exact either way)."""
     ops = resolve_ops(ops, cfg)
     gl, ng, kinds = layer_group_spec(cfg)
     x32 = embed_int(qparams, tokens[:, None], plans, cfg)
@@ -264,7 +287,10 @@ def int_decode_step(qparams, caches, tokens, pos, plans, cfg: ArchConfig,
         for j, kind in enumerate(kinds):
             x32, nc = _int_sublayer_decode(qp_group[j], cache_group[j],
                                            x32, plans, cfg, kind, rope_tab,
-                                           pos, ops)
+                                           pos, ops, pages=pages,
+                                           page_size=page_size,
+                                           max_len=max_len,
+                                           fold_wo=fold_wo)
             new_group.append(nc)
         return x32, tuple(new_group)
 

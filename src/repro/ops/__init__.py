@@ -10,7 +10,10 @@ Attention, Decode Attention, Softmax, GELU, LayerNorm):
     ``get_backend``), the ``REPRO_BACKEND`` env override and the
     :func:`use_backend` context;
   * :class:`OpSet` — the handle models take once at construction
-    (default backend + per-op overrides).
+    (default backend + per-op overrides).  Its ``int_decode_attention``
+    negotiates the optional decode capabilities (``paged_decode`` /
+    ``decode_wo_fold``), lowering the page-table and folded-wo operands
+    exactly for backends without them (see ``repro.ops.paged``).
 
 See docs/OPS_API.md for the full API (the old ``repro.kernels.ops``
 string-dispatch wrappers are gone; the migration table lives there).

@@ -9,7 +9,12 @@ one-pass online kernel (±LSB).  ``int_decode_attention`` routes to
 ``kernels.int_decode_attention`` — the same fused datapath for the
 serving hot path (Sq ≤ 8 queries over a ragged KV cache, per-slot
 ``valid_len`` as a scalar-prefetch operand, dead blocks skipped) —
-bit-exact against ``kernels.ref.ref_int_decode_attention``.
+bit-exact against ``kernels.ref.ref_int_decode_attention``.  The
+backend additionally advertises the two optional decode capabilities
+(docs/KERNELS.md): ``paged_decode`` (the page table rides as a second
+scalar-prefetch operand and KV blocks translate through it in the index
+map) and ``decode_wo_fold`` (the o-projection + its per-channel requant
+run as the launch's epilogue).
 
 Shapes the kernel can't tile fall back to the existing two-pass path
 with identical numerics:
@@ -30,6 +35,7 @@ from repro.core.softmax import MAX_ROWSUM_LEN as MAX_SKV
 from repro.kernels import ref as _ref
 from repro.ops import spec as _spec
 from repro.ops.backends.pallas import PallasBackend, _fit_block
+from repro.ops.paged import gather_pages as _gather
 
 # NOTE: the fused kernel modules (kernels.int_attention_fused /
 # kernels.int_decode_attention) are imported lazily inside the methods:
@@ -42,6 +48,8 @@ from repro.ops.backends.pallas import PallasBackend, _fit_block
 class PallasFusedBackend(PallasBackend):
     fused_attention = True
     fused_decode = True       # single-launch valid_len-masked decode kernel
+    paged_decode = True       # consumes page-table KV pools directly
+    decode_wo_fold = True     # folds the o-projection into the launch
 
     def __init__(self, name: str = "pallas_fused", interpret=None,
                  blocks=None, min_block: int = 16):
@@ -72,22 +80,56 @@ class PallasFusedBackend(PallasBackend):
 
     def int_decode_attention(self, q8, k8_cache, v8_cache, plan, valid_len,
                              out_bits: int = 8, requant=None, b_vec=None,
-                             **opts):
+                             pages=None, page_size: int = 0, wo=None,
+                             wo_spec=None, **opts):
         from repro.kernels.int_decode_attention import \
             int_decode_attention_fused
         opts = self._opts("int_decode_attention", opts)
         if requant is None:
             requant = _spec.RequantSpec.per_tensor(plan.dn_out, out_bits)
-        sq, L, d = q8.shape[1], k8_cache.shape[1], q8.shape[3]
-        bkv = _fit_block(opts.pop("bkv", 128), L)
-        if not self._can_tile_decode(sq, L, d, bkv):
-            return _ref.ref_int_decode_attention(
+        sq, d = q8.shape[1], q8.shape[3]
+        paged = pages is not None
+        # under paging the KV block must tile a physical page (the index
+        # map translates whole sub-blocks through the table); otherwise
+        # it tiles the contiguous cache length
+        blk_dim = page_size if paged else k8_cache.shape[1]
+        L = pages.shape[1] * page_size if paged else k8_cache.shape[1]
+        bkv = _fit_block(opts.pop("bkv", 128), blk_dim)
+        can = self._can_tile_decode(sq, L, d, bkv)
+        if wo is not None:
+            wo = _spec.QuantLinearParams.of(wo)
+            if wo_spec is None:
+                raise ValueError("folded wo projection needs wo_spec")
+            # the folded projection feeds the attention tile to an int8
+            # MXU contraction — a non-int8 epilogue can't fold, in the
+            # kernel or in the fallback composition (which would wrap)
+            if requant.is_raw or requant.out_bits > 8:
+                raise ValueError("wo folding needs an int8 attention "
+                                 f"epilogue, got {requant}")
+        if not can:
+            # exact fallback: gather pages (if paged) + full-matrix
+            # oracle + unfolded o-projection
+            if paged:
+                k8_cache = _gather(k8_cache, pages, page_size)
+                v8_cache = _gather(v8_cache, pages, page_size)
+            o = _ref.ref_int_decode_attention(
                 q8, k8_cache, v8_cache, plan, valid_len,
                 requant=requant, b_vec=b_vec)
+            if wo is None:
+                return o
+            return _ref.ref_apply_wo(o, wo.w8, wo.bias32, wo.b_mult,
+                                     wo_spec)
+        kw = {}
+        if paged:
+            kw.update(pages=pages, page_size=page_size)
+        if wo is not None:
+            kw.update(wo_w8=wo.w8, wo_bias32=wo.bias32, wo_b_vec=wo.b_mult,
+                      wo_spec=wo_spec)
         return int_decode_attention_fused(q8, k8_cache, v8_cache, plan,
                                           valid_len, requant=requant,
                                           b_vec=b_vec, bkv=bkv,
-                                          interpret=self._interp(), **opts)
+                                          interpret=self._interp(),
+                                          **kw, **opts)
 
     def _can_tile_decode(self, sq: int, L: int, d: int, bkv: int) -> bool:
         from repro.kernels.int_decode_attention import MAX_SQ

@@ -1,0 +1,35 @@
+"""Page-table array utilities for the paged decode-attention operand.
+
+The paged KV layout hands ``int_decode_attention`` a physical pool
+``(num_pages, page_size, Hkv, D)`` plus a per-slot page table
+``pages: int32[B, max_pages]`` mapping logical block ``j`` of slot ``b``
+to physical page ``pages[b, j]``.  Backends that advertise the
+``paged_decode`` capability consume the table directly (the
+``pallas_fused`` kernel translates block indices through it in the
+scalar-prefetch index map); for every other backend the dispatch layer
+lowers the operand with :func:`gather_pages` — an exact gather into the
+contiguous ``(B, max_pages·page_size, Hkv, D)`` layout the existing
+contract already covers, so paged and contiguous decode are
+bit-identical by construction.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gather_pages(pool, pages, page_size: int):
+    """Gather a paged pool into the contiguous per-slot cache layout.
+
+    ``pool``: ``(num_pages, page_size, ...)``; ``pages``: ``(B,
+    max_pages) int32``.  Returns ``(B, max_pages·page_size, ...)`` —
+    slot ``b``'s logical positions ``[j·page_size, (j+1)·page_size)``
+    are page ``pages[b, j]``.  Unmapped blocks point at the null page 0
+    whose (stale) contents sit past ``valid_len`` and are masked.
+    """
+    if pool.shape[1] != page_size:
+        raise ValueError(f"pool page dim {pool.shape[1]} != page_size "
+                         f"{page_size}")
+    pages = jnp.asarray(pages, jnp.int32)
+    b, m = pages.shape
+    flat = jnp.take(pool, pages.reshape(-1), axis=0)
+    return flat.reshape(b, m * page_size, *pool.shape[2:])

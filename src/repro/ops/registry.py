@@ -47,6 +47,21 @@ class Backend(Protocol):
     occupancy (see the "Decode kernel contract" section there); an
     optional ``fused_decode`` flag (default False) advertises a
     single-launch kernel for it — the numerics are identical either way.
+
+    Two further *optional* decode capabilities, negotiated by
+    :meth:`OpSet.int_decode_attention` so plain backends never see the
+    operands:
+
+      * ``paged_decode`` — the backend consumes the paged KV layout
+        directly (``pages: int32[B, max_pages]`` page table +
+        ``page_size``, K/V as physical ``(num_pages, page_size, Hkv,
+        D)`` pools).  Without the flag the dispatch layer gathers the
+        pages into the contiguous layout first (bit-identical).
+      * ``decode_wo_fold`` — the backend folds the output projection
+        (``wo=`` a QuantLinearParams, ``wo_spec=`` its RequantSpec)
+        into the decode launch, returning ``(B, Sq, N)``.  Without the
+        flag the dispatch layer composes the backend's decode attention
+        with its ``int8_matmul`` (bit-identical).
     """
 
     name: str
@@ -202,10 +217,64 @@ class OpSet:
             out_bits=out_bits, **opts)
 
     def int_decode_attention(self, q8, k8_cache, v8_cache, plan, valid_len,
-                             out_bits: int = 8, **opts):
-        return self.backend_for("int_decode_attention").int_decode_attention(
-            q8, k8_cache, v8_cache, plan, valid_len, out_bits=out_bits,
-            **opts)
+                             out_bits: int = 8, pages=None,
+                             page_size: int = 0, wo=None, wo_spec=None,
+                             **opts):
+        """Decode attention with capability negotiation.
+
+        ``pages``/``page_size`` select the paged KV layout (k8/v8 are
+        physical page pools); ``wo``/``wo_spec`` ask for the folded
+        output projection.  Backends advertising ``paged_decode`` /
+        ``decode_wo_fold`` get the operands verbatim; for the rest this
+        method lowers them exactly — gather-into-contiguous for pages,
+        decode-then-``int8_matmul`` for the fold — so callers get
+        identical integers from every backend.
+        """
+        be = self.backend_for("int_decode_attention")
+        kw = {}
+        if pages is not None:
+            if getattr(be, "paged_decode", False):
+                kw.update(pages=pages, page_size=page_size)
+            else:
+                from repro.ops.paged import gather_pages
+                k8_cache = gather_pages(k8_cache, pages, page_size)
+                v8_cache = gather_pages(v8_cache, pages, page_size)
+        if wo is None:
+            return be.int_decode_attention(q8, k8_cache, v8_cache, plan,
+                                           valid_len, out_bits=out_bits,
+                                           **kw, **opts)
+        from repro.ops.spec import QuantLinearParams
+        wo = QuantLinearParams.of(wo)
+        if wo_spec is None:
+            raise ValueError("folded wo projection needs wo_spec (the "
+                             "o-projection's RequantSpec)")
+        rq = opts.get("requant")
+        # the effective attention epilogue must clip to int8 — it feeds
+        # the int8 wo contraction (a wider epilogue would silently wrap
+        # in the lowering's astype below)
+        if rq is not None and (rq.is_raw or rq.out_bits > 8):
+            raise ValueError("wo folding needs an int8 attention "
+                             f"epilogue, got {rq}")
+        if rq is None and out_bits > 8:
+            raise ValueError("wo folding needs an int8 attention "
+                             f"epilogue, got out_bits={out_bits}")
+        if getattr(be, "decode_wo_fold", False):
+            return be.int_decode_attention(q8, k8_cache, v8_cache, plan,
+                                           valid_len, out_bits=out_bits,
+                                           wo=wo, wo_spec=wo_spec,
+                                           **kw, **opts)
+        # exact unfolded composition through the backend's own matmul
+        import jax.numpy as jnp
+        o8 = be.int_decode_attention(q8, k8_cache, v8_cache, plan,
+                                     valid_len, out_bits=out_bits,
+                                     **kw, **opts)
+        b, sq = o8.shape[0], o8.shape[1]
+        x8 = o8.astype(jnp.int8).reshape(b * sq, -1)
+        acc = be.int8_matmul(x8, wo.w8, wo_spec, bias32=wo.bias32,
+                             b_vec=wo.b_mult)
+        if not wo_spec.is_raw and wo_spec.out_bits <= 8:
+            acc = acc.astype(jnp.int8)     # match the folded kernel's dtype
+        return acc.reshape(b, sq, -1)
 
 
 # ------------------------------------------------------------ resolution --

@@ -1,3 +1,8 @@
 from repro.serving.engine import ServingEngine, Request
+from repro.serving.kvcache import (BlockAllocator, CacheLayout, NULL_PAGE,
+                                   PagedKVCache, PagePoolExhausted,
+                                   PageTable, Session)
 
-__all__ = ["ServingEngine", "Request"]
+__all__ = ["ServingEngine", "Request", "BlockAllocator", "CacheLayout",
+           "NULL_PAGE", "PagedKVCache", "PagePoolExhausted", "PageTable",
+           "Session"]

@@ -1,17 +1,33 @@
-"""Batched integer serving engine.
+"""Batched integer serving engine over a paged KV cache.
 
 The serving counterpart of the ASIC's control unit (§III-J): admits
-requests into fixed batch slots, runs the INT8 prefill/decode datapath
+requests into fixed batch *lanes*, runs the INT8 prefill/decode datapath
 (int8 KV caches = the paper's quantization applied to the cache), and
-retires finished sequences — a continuous-batching-lite scheduler suitable
-for the fixed-shape XLA world.  Slots fill raggedly (each has its own
-``pos``), so every decode step is a batched ragged-cache attention: it
-dispatches through the configured backend's ``int_decode_attention``,
-which on ``pallas_fused`` is one valid_len-masked kernel launch that
-skips dead cache blocks instead of computing over the full ``cache_len``.
+retires finished sequences — a continuous-batching-lite scheduler
+suitable for the fixed-shape XLA world.
 
-Slots are recycled between requests without recompiling: every shape
-(batch, cache length) is fixed at engine construction.
+Cache layouts (``cache_mode``):
+
+  * ``"paged"`` (default) — K/V live in a physical page pool addressed
+    through a per-lane page table (``repro.serving.kvcache``).  A
+    *session* owns its page list; lanes are just decode positions, so
+    cache memory is O(live tokens), pages recycle through a ref-counted
+    allocator without zeroing (``valid_len`` masking makes stale
+    contents unobservable), and a session can be **preempted** (pages
+    kept, lane freed) and later resumed bit-exactly.  The page table
+    rides into the decode kernel as a scalar-prefetch operand next to
+    ``valid_len``; backends without the ``paged_decode`` capability get
+    an exact gather-into-contiguous lowering (repro.ops dispatch).
+  * ``"contiguous"`` — the PR 3 layout: one ``cache_len`` slab per lane.
+
+Every decode step dispatches through the configured backend's
+``int_decode_attention`` — on ``pallas_fused`` one valid_len-masked
+kernel launch that skips dead cache blocks — and, with ``fold_wo``
+(default), folds each attention sublayer's output-projection per-channel
+requant into that launch's epilogue (bit-exact vs the unfolded path).
+
+Shapes (batch lanes, page pool, logical cache length) are fixed at
+engine construction, so lanes and pages recycle without recompiling.
 """
 from __future__ import annotations
 
@@ -26,20 +42,23 @@ import numpy as np
 from repro.models import intlayers as il
 from repro.models import inttransformer as it
 from repro.models.common import ArchConfig
+from repro.models.transformer import layer_group_spec
 from repro.ops import OP_NAMES, resolve_ops
 from repro.quant import plans as qplans
+from repro.serving.kvcache import (CacheLayout, PagePoolExhausted,
+                                   PagedKVCache, Session)
 
 # Process-level cache of compiled decode steps, keyed by everything the
-# traced closure captures (cfg, plans, shapes, the resolved backend per
-# op).  Two engines with the same key share ONE executable, so (a)
-# engine construction stops paying an XLA recompile and (b) identical
-# request streams produce identical tokens across engine instances —
-# separately compiled executables of the same program are not guaranteed
-# to agree to the last integer on every input (XLA CPU compile variance),
-# which shows up as cross-engine token divergence in parity tests.
-# Bounded LRU (insertion order): a process sweeping many distinct
-# (shape, plan) combinations evicts the oldest executable instead of
-# pinning one per combination forever.
+# traced closure captures (cfg, plans, shapes, cache geometry, the
+# resolved backend per op).  Two engines with the same key share ONE
+# executable, so (a) engine construction stops paying an XLA recompile
+# and (b) identical request streams produce identical tokens across
+# engine instances — separately compiled executables of the same program
+# are not guaranteed to agree to the last integer on every input (XLA
+# CPU compile variance), which shows up as cross-engine token divergence
+# in parity tests.  Bounded LRU (insertion order): a process sweeping
+# many distinct (shape, plan) combinations evicts the oldest executable
+# instead of pinning one per combination forever.
 _DECODE_STEP_CACHE: Dict[tuple, Callable] = {}
 _DECODE_STEP_CACHE_MAX = 8
 
@@ -57,17 +76,23 @@ class Request:
 class ServingEngine:
     def __init__(self, qparams, plans: qplans.LayerPlans, cfg: ArchConfig,
                  batch_size: int = 8, cache_len: int = 512,
-                 ops=None, seed: int = 0, backend=None):
+                 ops=None, seed: int = 0, backend=None,
+                 cache_mode: str = "paged", page_size: int = 16,
+                 num_pages: Optional[int] = None, fold_wo: bool = True):
         if backend is not None:
             warnings.warn("ServingEngine(backend=...) is deprecated; pass "
                           "ops= (an OpSet or backend name)",
                           DeprecationWarning, stacklevel=2)
             ops = backend if ops is None else ops
+        if cache_mode not in ("paged", "contiguous"):
+            raise ValueError(f"cache_mode must be 'paged' or 'contiguous',"
+                             f" got {cache_mode!r}")
         self.cfg = cfg
         self.plans = plans
         self.qparams = qparams
         self.batch = batch_size
         self.cache_len = cache_len
+        self.fold_wo = fold_wo
         self.ops = resolve_ops(ops, cfg)
         # whether prefill/cross attention runs as one fused kernel launch
         # (pallas / pallas_fused) or the two-pass oracle path (ref)
@@ -79,47 +104,72 @@ class ServingEngine:
         # the full-matrix oracle; either way the step dispatches through
         # the backend — there is no hardcoded oracle call on the decode
         # path (models.intlayers.int_attn_decode)
-        self.decode_fused = getattr(
-            self.ops.backend_for("int_decode_attention"), "fused_decode",
-            False)
+        decode_be = self.ops.backend_for("int_decode_attention")
+        self.decode_fused = getattr(decode_be, "fused_decode", False)
+        self.decode_paged_native = getattr(decode_be, "paged_decode", False)
         self.rng = np.random.default_rng(seed)
         self.rope_tab = il.build_rope_table(cache_len + 1, cfg.hd,
                                             cfg.rope_theta) \
             if cfg.pos == "rope" else None
-        self.caches = it.init_decode_cache(cfg, batch_size, cache_len)
+        # logical per-session cache length (the attention window bounds
+        # it, mirroring init_decode_cache)
+        self.L = min(cache_len, cfg.window) if cfg.window > 0 else cache_len
+        gl, ng, kinds = layer_group_spec(cfg)
+        self._has_ssm = any(k[0] == "ssm" for k in kinds)
+        self.paged = cache_mode == "paged"
+        if self.paged:
+            self.layout = CacheLayout.fit(batch_size, self.L, page_size,
+                                          num_pages)
+            self.kv = PagedKVCache(self.layout)
+            self.caches = it.init_decode_cache(cfg, batch_size, cache_len,
+                                               layout=self.layout)
+        else:
+            self.layout = None
+            self.kv = None
+            self.caches = it.init_decode_cache(cfg, batch_size, cache_len)
         self.pos = np.zeros(batch_size, np.int32)
-        self.slots: List[Optional[Request]] = [None] * batch_size
-        self.queue: List[Request] = []
+        self.slots: List[Optional[Session]] = [None] * batch_size
+        self.queue: List[Session] = []
+        self._finished: List[Request] = []
+        self._uid = 0
         self._decode = self._shared_decode_step()
 
-    def _decode_impl(self, qparams, caches, tokens, pos):
-        return it.int_decode_step(qparams, caches, tokens, pos,
-                                  self.plans, self.cfg, self.rope_tab,
-                                  ops=self.ops)
+    # ------------------------------------------------------ compiled step --
 
     def _shared_decode_step(self) -> Callable:
         """The jitted decode step, shared across same-shaped engines via
         ``_DECODE_STEP_CACHE`` (falls back to a private jit when the key
         is unhashable, e.g. exotic plan objects).
 
-        The cached callable closes over (plans, cfg, rope_tab, ops) only
-        — never ``self`` — so a retired engine's weights, caches and
-        request slots are not pinned by the process-global cache."""
+        The callable closes over (plans, cfg, rope_tab, ops, cache
+        geometry) only — never ``self`` — so a retired engine's weights,
+        caches and sessions are not pinned by the process-global cache.
+        The key carries the page-pool shape: engines over
+        differently-provisioned pools must not share an executable."""
+        plans, cfg, rope_tab, ops = (self.plans, self.cfg,
+                                     self.rope_tab, self.ops)
+        page_size = self.layout.page_size if self.paged else 0
+        max_len = self.L if self.paged else 0
+        fold_wo = self.fold_wo
+
+        def step(qparams, caches, tokens, pos, pages=None):
+            return it.int_decode_step(qparams, caches, tokens, pos,
+                                      plans, cfg, rope_tab, ops=ops,
+                                      pages=pages, page_size=page_size,
+                                      max_len=max_len, fold_wo=fold_wo)
+
+        geometry = ("paged", self.layout.page_size, self.layout.num_pages,
+                    self.layout.max_pages, self.L) if self.paged \
+            else ("contiguous",)
         try:
             key = (self.cfg, self.plans, self.batch, self.cache_len,
+                   geometry, self.fold_wo,
                    tuple(id(self.ops.backend_for(op)) for op in OP_NAMES))
             hash(key)
         except TypeError:
-            return jax.jit(self._decode_impl)
+            return jax.jit(step)            # private: key can't be shared
         fn = _DECODE_STEP_CACHE.pop(key, None)
         if fn is None:
-            plans, cfg, rope_tab, ops = (self.plans, self.cfg,
-                                         self.rope_tab, self.ops)
-
-            def step(qparams, caches, tokens, pos):
-                return it.int_decode_step(qparams, caches, tokens, pos,
-                                          plans, cfg, rope_tab, ops=ops)
-
             fn = jax.jit(step)
         _DECODE_STEP_CACHE[key] = fn            # (re-)insert most recent
         while len(_DECODE_STEP_CACHE) > _DECODE_STEP_CACHE_MAX:
@@ -128,31 +178,169 @@ class ServingEngine:
 
     # ------------------------------------------------------ scheduling ---
 
-    def submit(self, req: Request):
-        self.queue.append(req)
+    def submit(self, req: Request) -> Session:
+        """Queue a request; returns the Session that owns its cache
+        pages for the rest of its life (evict/preempt take Sessions)."""
+        if not req.prompt:
+            raise ValueError("empty prompt: a request needs at least one "
+                             "token")
+        if self.cfg.window == 0 and len(req.prompt) > self.L:
+            # without a sliding window there is nowhere for positions
+            # >= L to go: prefill would write past the cache (paged:
+            # past the page table) and silently corrupt live positions
+            raise ValueError(
+                f"prompt of {len(req.prompt)} tokens exceeds the "
+                f"cache_len={self.L} logical cache; raise cache_len or "
+                "use a sliding-window arch")
+        sess = Session(uid=self._uid, request=req)
+        self._uid += 1
+        self.queue.append(sess)
+        return sess
 
     def _admit(self):
         for slot in range(self.batch):
             if self.slots[slot] is None and self.queue:
-                req = self.queue.pop(0)
-                self.slots[slot] = req
-                self._prefill_slot(slot, req)
+                sess = self.queue[0]
+                if sess.state == "preempted":
+                    self.queue.pop(0)
+                    self._rebind(sess, slot)
+                    continue
+                if self.paged and not self._reserve_prefill(sess):
+                    break           # pool pressure: retry next step
+                self.queue.pop(0)
+                self._bind_new(sess, slot)
 
-    def _prefill_slot(self, slot: int, req: Request):
+    def _reserve_prefill(self, sess: Session) -> bool:
+        """Reserve the pages the prompt prefill will write, so admission
+        is all-or-nothing (no half-prefetched session stuck on a lane).
+        Returns False under transient pool pressure; raises
+        :class:`PagePoolExhausted` when the prompt can never fit."""
+        n_pre = min(len(sess.request.prompt) - 1, self.L)
+        blocks = -(-n_pre // self.layout.page_size) if n_pre > 0 else 0
+        if blocks > self.layout.num_pages - 1:
+            raise PagePoolExhausted(
+                f"prompt needs {blocks} pages, pool only has "
+                f"{self.layout.num_pages - 1}")
+        acquired = []
+        try:
+            while len(sess.pages) < blocks:
+                page = self.kv.allocator.alloc()
+                sess.pages.append(page)
+                acquired.append(page)
+        except PagePoolExhausted:
+            for page in acquired:
+                self.kv.allocator.release(page)
+                sess.pages.remove(page)
+            return False
+        return True
+
+    def _bind_new(self, sess: Session, slot: int):
+        self.slots[slot] = sess
+        self.pos[slot] = 0
+        sess.pos = 0
+        if self.paged:
+            self.kv.bind(sess, slot)
+        else:
+            sess.slot = slot
+            sess.state = "active"
+        self._reset_slot_cache(slot)
+        self._prefill(slot, sess)
+
+    def _rebind(self, sess: Session, slot: int):
+        """Resume a preempted session: reattach its page-table row and
+        position — its K/V pages were never touched, so decode continues
+        bit-exactly where it stopped."""
+        self.slots[slot] = sess
+        self.pos[slot] = sess.pos
+        self.kv.bind(sess, slot)
+
+    def _prefill(self, slot: int, sess: Session):
         """Prefill by streaming prompt tokens through decode (slot-local);
         keeps every shape static."""
-        self.pos[slot] = 0
-        self._reset_slot_cache(slot)
-        for t in req.prompt[:-1]:
+        for t in sess.request.prompt[:-1]:
             self._step_one(slot, t)
-        req._last_token = req.prompt[-1]
+        sess.last_token = sess.request.prompt[-1]
 
     def _reset_slot_cache(self, slot: int):
-        def zero_slot(leaf):
-            if leaf.ndim >= 2 and leaf.shape[1] == self.batch:
-                return leaf.at[:, slot].set(0)
-            return leaf
-        self.caches = jax.tree.map(zero_slot, self.caches)
+        """Zero a recycled lane's lane-indexed cache state (Mamba SSD
+        state, conv tails, cross memory).  Paged attention pools are
+        *not* lane-indexed and are never zeroed — ``valid_len`` masking
+        makes stale page contents unobservable (the bit-exact-reuse
+        invariant of repro.serving.kvcache)."""
+        new_caches = []
+        for c in self.caches:
+            nc = dict(c)
+            for key, leaf in c.items():
+                if self.paged and key in ("k8", "v8"):
+                    continue
+                if leaf.ndim >= 2 and leaf.shape[1] == self.batch:
+                    nc[key] = leaf.at[:, slot].set(0)
+            new_caches.append(nc)
+        self.caches = new_caches
+
+    # --------------------------------------------------- paged bookkeeping
+
+    def _ensure_write_pages(self):
+        """Before a decode step, make the page under every live lane's
+        write position resident (append-only allocation; raises
+        :class:`PagePoolExhausted` when the pool is out)."""
+        if not self.paged:
+            return
+        for slot, sess in enumerate(self.slots):
+            if sess is None:
+                continue
+            p = int(self.pos[slot])
+            wslot = p % self.cfg.window if self.cfg.window > 0 else p
+            self.kv.ensure(sess, min(wslot, self.L - 1))
+
+    def evict(self, sess: Session):
+        """Cancel a session: free its lane and release every page it
+        owns (they return to the allocator at refcount zero)."""
+        if sess in self.queue:
+            self.queue.remove(sess)
+        if sess.slot is not None:
+            self.pos[sess.slot] = 0
+            self.slots[sess.slot] = None
+        if self.paged:
+            self.kv.release(sess)
+        else:
+            sess.slot = None
+            sess.state = "done"
+
+    def preempt(self, sess: Session):
+        """Take a live session off its lane but keep its pages: it goes
+        back to the queue head and resumes bit-exactly (same physical
+        K/V) when a lane frees up.  Paged mode only — the contiguous
+        layout ties cache contents to the lane."""
+        if not self.paged:
+            raise ValueError("preempt needs cache_mode='paged' (the "
+                             "contiguous layout ties K/V to the lane)")
+        if self._has_ssm:
+            raise ValueError("preempt is unsupported for SSM/hybrid "
+                             "archs: Mamba state is lane-indexed")
+        if sess.state != "active" or sess.slot is None:
+            raise ValueError(f"cannot preempt session in state "
+                             f"{sess.state!r}")
+        slot = sess.slot
+        sess.pos = int(self.pos[slot])
+        self.kv.unbind(sess)
+        self.slots[slot] = None
+        self.pos[slot] = 0
+        self.queue.insert(0, sess)
+
+    def _retire(self, slot: int):
+        sess = self.slots[slot]
+        sess.request.done = True
+        self.slots[slot] = None
+        self.pos[slot] = 0
+        if self.paged:
+            self.kv.release(sess)
+        else:
+            sess.slot = None
+            sess.state = "done"
+        self._finished.append(sess.request)
+
+    # ---------------------------------------------------------- decode ---
 
     def _snap_pos(self):
         """Snapshot ``self.pos`` for a decode call.
@@ -162,38 +350,49 @@ class ServingEngine:
         ``self.pos`` in place (``+= 1``), racing the executing step and
         intermittently decoding at the wrong position.  An explicit copy
         makes the hand-off a snapshot.  (This was a real, observed ~1/10
-        token-stream flake on CPU.)
+        token-stream flake on CPU.)  The page table gets the same
+        treatment in ``_snap_pages``.
         """
         return jnp.asarray(self.pos.copy())
+
+    def _snap_pages(self):
+        return jnp.asarray(self.kv.page_table.snapshot())
+
+    def _run_decode(self, toks):
+        if self.paged:
+            return self._decode(self.qparams, self.caches,
+                                jnp.asarray(toks), self._snap_pos(),
+                                self._snap_pages())
+        return self._decode(self.qparams, self.caches, jnp.asarray(toks),
+                            self._snap_pos())
 
     def _step_one(self, slot: int, token: int):
         toks = np.zeros(self.batch, np.int32)
         toks[slot] = token
-        logits, self.caches = self._decode(self.qparams, self.caches,
-                                           jnp.asarray(toks),
-                                           self._snap_pos())
+        self._ensure_write_pages()
+        logits, self.caches = self._run_decode(toks)
         self.pos[slot] += 1
+        self.slots[slot].pos = int(self.pos[slot])
         return np.asarray(logits[slot])
 
-    # ---------------------------------------------------------- decode ---
-
     def step(self) -> int:
-        """One engine step: admit + one batched decode for live slots.
-        Returns the number of live requests."""
+        """One engine step: admit + one batched decode for live lanes.
+        Returns the number of live sessions."""
         self._admit()
-        live = [i for i, r in enumerate(self.slots) if r is not None]
+        live = [i for i, s in enumerate(self.slots) if s is not None]
         if not live:
             return 0
         toks = np.zeros(self.batch, np.int32)
         for i in live:
-            toks[i] = self.slots[i]._last_token
-        logits, self.caches = self._decode(self.qparams, self.caches,
-                                           jnp.asarray(toks),
-                                           self._snap_pos())
+            toks[i] = self.slots[i].last_token
+        self._ensure_write_pages()
+        logits, self.caches = self._run_decode(toks)
         logits = np.asarray(logits)
         for i in live:
-            req = self.slots[i]
+            sess = self.slots[i]
+            req = sess.request
             self.pos[i] += 1
+            sess.pos = int(self.pos[i])
             row = logits[i][:self.cfg.vocab]
             if req.temperature <= 0:
                 nxt = int(np.argmax(row))
@@ -202,25 +401,60 @@ class ServingEngine:
                 p /= p.sum()
                 nxt = int(self.rng.choice(len(p), p=p))
             req.out_tokens.append(nxt)
-            req._last_token = nxt
+            sess.last_token = nxt
             if len(req.out_tokens) >= req.max_new_tokens \
                     or self.pos[i] >= self.cache_len - 1:
-                req.done = True
-                self.slots[i] = None
-                self.pos[i] = 0
+                self._retire(i)
         return len(live)
 
-    def describe(self) -> str:
-        """One-line engine signature for drivers/logs."""
-        return (f"ops={self.ops.name} "
-                f"attn={'fused' if self.attn_fused else 'two-pass'} "
-                f"decode={'fused' if self.decode_fused else 'oracle'} "
-                f"batch={self.batch} cache_len={self.cache_len}")
+    # ------------------------------------------------------ introspection --
+
+    def describe(self) -> dict:
+        """Structured engine signature: backend ids, decode mode, cache
+        geometry and live page-pool stats.  ``describe_str()`` derives
+        the one-line log form from this dict."""
+        if self.paged:
+            cache = dict(mode="paged", **self.kv.stats())
+            cache["live_tokens"] = int(sum(
+                s.live_tokens for s in self.slots if s is not None)
+                + sum(s.live_tokens for s in self.queue))
+        else:
+            cache = {"mode": "contiguous"}
+        cache["kv_bytes"] = int(sum(
+            c[key].size * c[key].dtype.itemsize
+            for c in self.caches for key in ("k8", "v8") if key in c))
+        return {
+            "ops": self.ops.name,
+            "backends": {op: self.ops.backend_for(op).name
+                         for op in OP_NAMES},
+            "attn": "fused" if self.attn_fused else "two-pass",
+            "decode": "fused" if self.decode_fused else "oracle",
+            "fold_wo": self.fold_wo,
+            "batch": self.batch,
+            "cache_len": self.cache_len,
+            "cache": cache,
+        }
+
+    def describe_str(self) -> str:
+        """One-line engine signature for drivers/logs, derived from
+        :meth:`describe`."""
+        d = self.describe()
+        c = d["cache"]
+        if c["mode"] == "paged":
+            cache = (f"paged[{c['page_size']}tok x {c['num_pages']}pg, "
+                     f"{c['pages_used']}/{c['num_pages'] - 1} used]")
+        else:
+            cache = "contiguous"
+        return (f"ops={d['ops']} attn={d['attn']} decode={d['decode']} "
+                f"fold_wo={str(d['fold_wo']).lower()} cache={cache} "
+                f"batch={d['batch']} cache_len={d['cache_len']}")
 
     def run_until_done(self, max_steps: int = 10000) -> List[Request]:
-        finished: List[Request] = []
+        """Step until queue and lanes drain; returns the requests that
+        retired since the last call (completion order)."""
         for _ in range(max_steps):
             if not self.queue and all(s is None for s in self.slots):
                 break
             self.step()
+        finished, self._finished = self._finished, []
         return finished

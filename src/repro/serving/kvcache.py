@@ -1,0 +1,298 @@
+"""Typed paged KV-cache layer: layouts, page tables, block allocator.
+
+The serving engine's cache abstraction (the "block-sparse paged KV
+cache" the ROADMAP queued on top of PR 3's valid_len machinery).  A
+contiguous per-slot cache spends ``num_slots × max_len`` tokens of HBM
+whether slots are full or empty; a *paged* cache keeps one physical pool
+of fixed-size pages and gives each live session only the pages its
+tokens occupy — memory scales with **live tokens**, not provisioned
+capacity.  The pieces:
+
+  * :class:`CacheLayout`   — the frozen geometry: batch lanes, logical
+    per-session length, page size, physical pool size;
+  * :class:`BlockAllocator`— ref-counted free-list over physical pages
+    (alloc / retain / release); exhaustion raises the typed
+    :class:`PagePoolExhausted`;
+  * :class:`PageTable`     — the ``int32[num_slots, max_pages]`` logical
+    block → physical page map that rides into the decode kernel as a
+    scalar-prefetch operand (next to ``valid_len``);
+  * :class:`Session`       — a request's cache identity: the page list
+    it *owns* (survives lane preemption) plus its decode position;
+  * :class:`PagedKVCache`  — the host-side controller tying the three
+    together for the engine (bind / ensure / unbind / release).
+
+Invariants (normative — the kernel and the allocator both rely on them):
+
+  * **Page 0 is the null page.**  It is never allocated.  Page-table
+    entries for unmapped logical blocks stay 0, so dead lanes write
+    their (masked, discarded) K/V into page 0 and the kernel's
+    dead-block DMA clamp always lands on a resident page.
+  * Pages are written append-only per session and are **never zeroed on
+    reuse**: ``valid_len`` masking makes stale contents unobservable, so
+    an evict → re-admit cycle reuses freed pages bit-exactly.
+  * A page's refcount is the number of sessions holding it; it returns
+    to the free list exactly when the count reaches zero.  Live lanes
+    never share a page (sharing only arises for preempted sessions,
+    which hold their pages without occupying a lane).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+NULL_PAGE = 0
+
+
+class PagePoolExhausted(RuntimeError):
+    """No free physical pages: the pool is smaller than the live token
+    working set.  Evict or preempt a session, or provision more pages
+    (``CacheLayout.num_pages``)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheLayout:
+    """Frozen geometry of a paged KV pool.
+
+    ``num_slots`` — batch lanes the engine decodes in lock-step;
+    ``max_len``   — logical cache length per session (the engine's
+                    ``cache_len``, or the attention window when smaller);
+    ``page_size`` — tokens per physical page;
+    ``num_pages`` — physical pool size *including* the reserved null
+                    page 0 (so ``num_pages - 1`` pages are allocatable).
+    """
+
+    num_slots: int
+    max_len: int
+    page_size: int
+    num_pages: int
+
+    def __post_init__(self):
+        if self.num_slots < 1:
+            raise ValueError(f"num_slots must be >= 1, got {self.num_slots}")
+        if self.max_len < 1:
+            raise ValueError(f"max_len must be >= 1, got {self.max_len}")
+        if self.page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {self.page_size}")
+        if self.num_pages < 2:
+            raise ValueError("num_pages must be >= 2 (page 0 is the "
+                             f"reserved null page), got {self.num_pages}")
+
+    @property
+    def max_pages(self) -> int:
+        """Pages needed to map one full-length session (page-table width)."""
+        return -(-self.max_len // self.page_size)
+
+    @property
+    def logical_len(self) -> int:
+        """The kernel-visible logical cache length, ``max_pages ×
+        page_size`` (≥ ``max_len``; the tail past ``max_len`` is never
+        valid)."""
+        return self.max_pages * self.page_size
+
+    @property
+    def capacity_tokens(self) -> int:
+        """Tokens the allocatable pool can hold (null page excluded)."""
+        return (self.num_pages - 1) * self.page_size
+
+    @classmethod
+    def fit(cls, num_slots: int, max_len: int, page_size: int = 16,
+            num_pages: Optional[int] = None) -> "CacheLayout":
+        """Layout for ``num_slots`` lanes of ``max_len`` tokens.  Without
+        an explicit ``num_pages`` the pool is fully provisioned (every
+        lane can reach ``max_len`` simultaneously) — undersubscribe it to
+        make memory O(live tokens)."""
+        max_pages = -(-max_len // page_size)
+        if num_pages is None:
+            num_pages = num_slots * max_pages + 1
+        return cls(num_slots, max_len, page_size, num_pages)
+
+
+class BlockAllocator:
+    """Ref-counted free-list over the physical pages of a pool.
+
+    LIFO free list: the page freed last is handed out first, so an
+    evict → re-admit cycle touches the smallest possible page set (and
+    the bit-exact-reuse property is exercised constantly, not rarely).
+    """
+
+    def __init__(self, num_pages: int):
+        if num_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is reserved)")
+        self.num_pages = num_pages
+        self.refcount = np.zeros(num_pages, np.int32)
+        self.refcount[NULL_PAGE] = 1          # pinned forever
+        self._free: List[int] = list(range(num_pages - 1, NULL_PAGE, -1))
+
+    # ------------------------------------------------------------ alloc --
+
+    def alloc(self) -> int:
+        """Hand out a free page at refcount 1, or raise
+        :class:`PagePoolExhausted`."""
+        if not self._free:
+            raise PagePoolExhausted(
+                f"page pool exhausted: all {self.num_pages - 1} "
+                "allocatable pages are held by live or preempted "
+                "sessions (evict one, or provision a larger "
+                "CacheLayout.num_pages)")
+        page = self._free.pop()
+        self.refcount[page] = 1
+        return page
+
+    def retain(self, page: int):
+        """Add a reference to an allocated page."""
+        if page == NULL_PAGE or not 0 <= page < self.num_pages:
+            raise ValueError(f"cannot retain page {page}")
+        if self.refcount[page] <= 0:
+            raise ValueError(f"retain of unallocated page {page}")
+        self.refcount[page] += 1
+
+    def release(self, page: int):
+        """Drop a reference; the page returns to the free list at zero."""
+        if page == NULL_PAGE or not 0 <= page < self.num_pages:
+            raise ValueError(f"cannot release page {page}")
+        if self.refcount[page] <= 0:
+            raise ValueError(f"release of unallocated page {page}")
+        self.refcount[page] -= 1
+        if self.refcount[page] == 0:
+            self._free.append(page)
+
+    # ------------------------------------------------------------- stats --
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.num_pages - 1 - len(self._free)
+
+    def check(self):
+        """Invariant sweep (tests call this after every schedule step):
+        free list and refcounts partition the allocatable pages."""
+        free = set(self._free)
+        assert len(free) == len(self._free), "duplicate page on free list"
+        assert NULL_PAGE not in free, "null page leaked onto the free list"
+        for p in range(1, self.num_pages):
+            held = self.refcount[p] > 0
+            assert held != (p in free), \
+                f"page {p}: refcount {self.refcount[p]} vs free-list " \
+                f"membership {p in free}"
+        assert self.refcount[NULL_PAGE] == 1, "null page refcount moved"
+
+
+class PageTable:
+    """The device-facing logical-block → physical-page map.
+
+    One int32 row per batch lane, ``max_pages`` wide, default-filled
+    with the null page.  ``snapshot()`` hands the decode step a *copy*
+    (same aliasing rule as the engine's ``pos`` snapshot: jnp.asarray
+    may zero-copy a numpy buffer while dispatch is still async)."""
+
+    def __init__(self, layout: CacheLayout):
+        self.layout = layout
+        self.table = np.full((layout.num_slots, layout.max_pages),
+                             NULL_PAGE, np.int32)
+
+    def set_row(self, slot: int, pages: List[int]):
+        if len(pages) > self.layout.max_pages:
+            raise ValueError(f"{len(pages)} pages > max_pages="
+                             f"{self.layout.max_pages}")
+        self.table[slot] = NULL_PAGE
+        self.table[slot, :len(pages)] = pages
+
+    def clear_row(self, slot: int):
+        self.table[slot] = NULL_PAGE
+
+    def snapshot(self) -> np.ndarray:
+        return self.table.copy()
+
+
+@dataclasses.dataclass
+class Session:
+    """A request's cache identity: the pages it owns and where it is.
+
+    Sessions — not lanes — own pages: a preempted session keeps its
+    ``pages`` (and ``pos``/``last_token``) while freeing its lane, so a
+    later resume continues bit-exactly from the same physical cache."""
+
+    uid: int
+    request: object = None
+    state: str = "queued"          # queued | active | preempted | done
+    slot: Optional[int] = None     # lane while active, else None
+    pages: List[int] = dataclasses.field(default_factory=list)
+    pos: int = 0
+    last_token: Optional[int] = None
+
+    @property
+    def live_tokens(self) -> int:
+        return self.pos
+
+
+class PagedKVCache:
+    """Host-side paged-cache controller for the serving engine.
+
+    Owns the allocator and the page table; the engine owns the device
+    pools (they live in the model cache pytree) and the lane scheduling.
+    """
+
+    def __init__(self, layout: CacheLayout):
+        self.layout = layout
+        self.allocator = BlockAllocator(layout.num_pages)
+        self.page_table = PageTable(layout)
+
+    # ---------------------------------------------------------- binding --
+
+    def bind(self, session: Session, slot: int):
+        """Attach a session to a lane, restoring its page-table row
+        (empty for new sessions, its owned pages for resumed ones)."""
+        session.slot = slot
+        session.state = "active"
+        self.page_table.set_row(slot, session.pages)
+
+    def unbind(self, session: Session):
+        """Free the lane but keep the pages (preemption)."""
+        if session.slot is not None:
+            self.page_table.clear_row(session.slot)
+        session.slot = None
+        session.state = "preempted"
+
+    def release(self, session: Session):
+        """Drop every page the session owns (retire / cancel)."""
+        if session.slot is not None:
+            self.page_table.clear_row(session.slot)
+        for page in session.pages:
+            self.allocator.release(page)
+        session.pages = []
+        session.slot = None
+        session.state = "done"
+
+    def ensure(self, session: Session, write_pos: int):
+        """Make the page backing logical position ``write_pos`` resident
+        before the decode step writes there.  Pages map append-only, so
+        this allocates at most the next sequential block; raises
+        :class:`PagePoolExhausted` when the pool is out."""
+        blk = write_pos // self.layout.page_size
+        if blk >= self.layout.max_pages:
+            raise ValueError(f"write_pos {write_pos} past max_len "
+                             f"{self.layout.max_len}")
+        while len(session.pages) <= blk:
+            page = self.allocator.alloc()
+            session.pages.append(page)
+            if session.slot is not None:
+                self.page_table.table[session.slot,
+                                      len(session.pages) - 1] = page
+        return session.pages[blk]
+
+    # ------------------------------------------------------------- stats --
+
+    def stats(self) -> dict:
+        a = self.allocator
+        return {
+            "page_size": self.layout.page_size,
+            "num_pages": self.layout.num_pages,
+            "pages_used": a.used_pages,
+            "pages_free": a.free_pages,
+            "capacity_tokens": self.layout.capacity_tokens,
+        }

@@ -1,0 +1,173 @@
+"""Paged KV-cache layer: layout, allocator and page-table invariants.
+
+Deterministic edge cases for ``repro.serving.kvcache`` — typed pool
+exhaustion, ref-counted release/reuse, zero-length sessions, the null
+page 0 reservation — plus a hypothesis property sweep over random
+admit/evict/preempt schedules asserting the allocator's partition
+invariant after every operation (importorskip'd like the decode props
+suite).  Engine-level paged-decode parity lives in
+``test_paged_decode.py``.
+"""
+import pytest
+
+from repro.serving.kvcache import (BlockAllocator, CacheLayout, NULL_PAGE,
+                                   PagedKVCache, PagePoolExhausted,
+                                   PageTable, Session)
+
+
+# ----------------------------------------------------------- layout ------
+
+def test_layout_geometry():
+    lo = CacheLayout(num_slots=2, max_len=60, page_size=16, num_pages=9)
+    assert lo.max_pages == 4                    # ceil(60 / 16)
+    assert lo.logical_len == 64                 # kernel-visible length
+    assert lo.capacity_tokens == 8 * 16         # null page excluded
+
+
+def test_layout_fit_full_provisioning():
+    lo = CacheLayout.fit(num_slots=4, max_len=64, page_size=16)
+    # every lane can reach max_len simultaneously, +1 for the null page
+    assert lo.num_pages == 4 * 4 + 1
+    assert CacheLayout.fit(4, 64, 16, num_pages=6).num_pages == 6
+
+
+def test_layout_validation():
+    with pytest.raises(ValueError, match="num_pages"):
+        CacheLayout(1, 16, 16, 1)               # no room for the null page
+    with pytest.raises(ValueError, match="page_size"):
+        CacheLayout(1, 16, 0, 4)
+
+
+# -------------------------------------------------------- allocator ------
+
+def test_alloc_never_hands_out_null_page():
+    a = BlockAllocator(num_pages=5)
+    got = {a.alloc() for _ in range(4)}
+    assert NULL_PAGE not in got and got == {1, 2, 3, 4}
+
+
+def test_exhaustion_raises_typed_error():
+    a = BlockAllocator(num_pages=3)
+    a.alloc(), a.alloc()
+    with pytest.raises(PagePoolExhausted, match="exhausted"):
+        a.alloc()
+    # PagePoolExhausted is a RuntimeError so generic handlers still work
+    assert issubclass(PagePoolExhausted, RuntimeError)
+
+
+def test_release_returns_page_and_lifo_reuse():
+    """Evict -> re-admit reuses the just-freed page (LIFO free list):
+    the smallest possible physical page set is touched, and the engine's
+    bit-exact-reuse property is exercised on every recycle."""
+    a = BlockAllocator(num_pages=4)
+    p1, p2, p3 = a.alloc(), a.alloc(), a.alloc()
+    a.release(p2)
+    assert a.alloc() == p2
+    a.check()
+
+
+def test_refcount_shared_page():
+    a = BlockAllocator(num_pages=3)
+    p = a.alloc()
+    a.retain(p)                                 # second holder
+    a.release(p)
+    assert a.free_pages == 1                    # still held once
+    a.release(p)
+    assert a.free_pages == 2
+    a.check()
+
+
+def test_refcount_misuse_raises():
+    a = BlockAllocator(num_pages=3)
+    with pytest.raises(ValueError):
+        a.release(1)                            # never allocated
+    with pytest.raises(ValueError):
+        a.retain(NULL_PAGE)
+    p = a.alloc()
+    a.release(p)
+    with pytest.raises(ValueError):
+        a.release(p)                            # double free
+
+
+# ------------------------------------------------------- page table ------
+
+def test_page_table_rows_default_to_null_page():
+    lo = CacheLayout(2, 64, 16, 9)
+    t = PageTable(lo)
+    assert (t.table == NULL_PAGE).all()
+    t.set_row(1, [3, 7])
+    assert t.table[1].tolist() == [3, 7, 0, 0]
+    t.clear_row(1)
+    assert (t.table == NULL_PAGE).all()
+    with pytest.raises(ValueError, match="max_pages"):
+        t.set_row(0, [1, 2, 3, 4, 5])
+
+
+def test_page_table_snapshot_is_a_copy():
+    """The decode step must see a snapshot: jnp.asarray may zero-copy a
+    numpy buffer while dispatch is still async (same aliasing hazard as
+    the engine's pos array)."""
+    t = PageTable(CacheLayout(1, 32, 16, 5))
+    snap = t.snapshot()
+    t.set_row(0, [2])
+    assert snap[0, 0] == NULL_PAGE and t.table[0, 0] == 2
+
+
+# ---------------------------------------------- controller / sessions ----
+
+def test_zero_length_session_holds_no_pages():
+    kv = PagedKVCache(CacheLayout(2, 64, 16, 9))
+    s = Session(uid=0)
+    kv.bind(s, 0)
+    assert s.pages == [] and s.live_tokens == 0
+    kv.release(s)                               # releasing nothing is fine
+    assert kv.allocator.free_pages == 8
+    kv.allocator.check()
+
+
+def test_ensure_is_append_only_and_reuse_is_bitwise():
+    kv = PagedKVCache(CacheLayout(1, 64, 16, 9))
+    s = Session(uid=0)
+    kv.bind(s, 0)
+    kv.ensure(s, 0)
+    kv.ensure(s, 17)                            # needs block 1 -> 2 pages
+    assert len(s.pages) == 2
+    assert kv.page_table.table[0, :2].tolist() == s.pages
+    first_pages = list(s.pages)
+    kv.release(s)
+    # re-admitted session gets the same (LIFO) physical pages back —
+    # nothing was zeroed in between, so reuse is bit-exact by definition
+    s2 = Session(uid=1)
+    kv.bind(s2, 0)
+    kv.ensure(s2, 17)
+    assert sorted(s2.pages) == sorted(first_pages)
+    kv.allocator.check()
+
+
+def test_ensure_past_max_len_raises():
+    kv = PagedKVCache(CacheLayout(1, 32, 16, 9))
+    s = Session(uid=0)
+    kv.bind(s, 0)
+    with pytest.raises(ValueError, match="max_len"):
+        kv.ensure(s, 32)
+
+
+def test_preempted_session_keeps_pages_without_a_lane():
+    kv = PagedKVCache(CacheLayout(2, 64, 16, 9))
+    s = Session(uid=0)
+    kv.bind(s, 1)
+    kv.ensure(s, 20)
+    held = list(s.pages)
+    kv.unbind(s)
+    assert s.state == "preempted" and s.slot is None
+    assert (kv.page_table.table[1] == NULL_PAGE).all()
+    assert kv.allocator.free_pages == 8 - len(held)   # still owned
+    kv.bind(s, 0)                                     # resume on a new lane
+    assert kv.page_table.table[0, :len(held)].tolist() == held
+    kv.allocator.check()
+
+
+# The hypothesis property sweep over random admit/evict/preempt
+# schedules lives in test_kvcache_props.py (importorskip'd, like the
+# decode props suite) so these deterministic cases run without the
+# optional dependency.

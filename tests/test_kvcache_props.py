@@ -1,0 +1,73 @@
+"""Property-based schedule sweep for the paged KV-cache allocator.
+
+Hypothesis drives random admit/grow/evict/preempt/resume interleavings
+against ``repro.serving.kvcache`` and asserts, after *every* operation:
+the allocator's partition invariant (free list and refcounts partition
+the allocatable pages, the null page never moves), no page leaked, no
+page owned by two live sessions, and every page-table row consistent
+with its session's page list.  Deterministic edge cases live in
+``test_kvcache.py``; this module needs the optional ``hypothesis`` dev
+dependency.
+"""
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis "
+                           "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.kvcache import (CacheLayout, NULL_PAGE, PagedKVCache,
+                                   PagePoolExhausted, Session)
+
+
+@given(st.lists(st.tuples(st.sampled_from(["admit", "grow", "evict",
+                                           "preempt", "resume"]),
+                          st.integers(0, 5)),
+                max_size=60),
+       st.integers(2, 12), st.integers(1, 3))
+@settings(max_examples=40, deadline=None)
+def test_random_schedules_preserve_allocator_invariants(schedule,
+                                                        num_pages,
+                                                        num_slots):
+    layout = CacheLayout(num_slots, 64, 16, num_pages)
+    kv = PagedKVCache(layout)
+    sessions = {}
+    lanes = {}
+
+    for op, sid in schedule:
+        s = sessions.get(sid)
+        try:
+            if op == "admit" and (s is None or s.state == "done"):
+                free = [ln for ln in range(num_slots) if ln not in lanes]
+                if free:
+                    s = Session(uid=sid)
+                    sessions[sid] = s
+                    lanes[free[0]] = sid
+                    kv.bind(s, free[0])
+            elif op == "grow" and s is not None and s.state == "active":
+                kv.ensure(s, min(len(s.pages) * 16, 63))
+            elif op == "evict" and s is not None and s.state != "done":
+                if s.slot is not None:
+                    lanes.pop(s.slot, None)
+                kv.release(s)
+            elif op == "preempt" and s is not None and s.state == "active":
+                lanes.pop(s.slot, None)
+                kv.unbind(s)
+            elif op == "resume" and s is not None \
+                    and s.state == "preempted":
+                free = [ln for ln in range(num_slots) if ln not in lanes]
+                if free:
+                    lanes[free[0]] = sid
+                    kv.bind(s, free[0])
+        except PagePoolExhausted:
+            pass                                 # legal under pressure
+        kv.allocator.check()
+        # no page owned by two non-done sessions (live lanes never share)
+        owned = [p for t in sessions.values() if t.state != "done"
+                 for p in t.pages]
+        assert len(owned) == len(set(owned))
+        # page-table rows only reference pages their session owns
+        for lane, sid2 in lanes.items():
+            row = kv.page_table.table[lane]
+            live = [p for p in row if p != NULL_PAGE]
+            assert live == sessions[sid2].pages[:len(live)]

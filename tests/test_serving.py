@@ -26,7 +26,8 @@ def test_engine_generates(engine_setup):
             for i in range(3)]
     for r in reqs:
         eng.submit(r)
-    eng.run_until_done()
+    finished = eng.run_until_done()
+    assert sorted(r.uid for r in finished) == [r.uid for r in reqs]
     for r in reqs:
         assert r.done and len(r.out_tokens) == 5
         assert all(0 <= t < cfg.vocab for t in r.out_tokens)
@@ -79,6 +80,44 @@ def test_engine_fused_decode_token_parity_across_slot_recycling(
     eng_fused, toks_fused = _drive(engine_setup, "pallas_fused", prompts)
     assert not eng_ref.decode_fused and eng_fused.decode_fused
     assert toks_fused == toks_ref
+
+
+def test_describe_is_structured_with_derived_string(engine_setup):
+    """describe() returns the structured dict (backend ids, decode mode,
+    page-pool stats); describe_str() is derived from it — drivers print
+    the string, tooling consumes the dict (no more string matching)."""
+    from repro.ops import OP_NAMES
+
+    cfg, qp, plans = engine_setup
+    eng = ServingEngine(qp, plans, cfg, batch_size=2, cache_len=64,
+                        ops="ref")
+    d = eng.describe()
+    assert d["ops"] == "ref" and d["decode"] == "oracle"
+    assert set(d["backends"]) == set(OP_NAMES)
+    assert all(name == "ref" for name in d["backends"].values())
+    assert d["cache"]["mode"] == "paged"
+    for key in ("page_size", "num_pages", "pages_used", "pages_free",
+                "kv_bytes", "live_tokens"):
+        assert key in d["cache"], key
+    # the dict is the source of truth; the one-liner derives from it
+    s = eng.describe_str()
+    assert "ops=ref" in s and "decode=oracle" in s and "paged" in s
+    # pool stats are live: admitting a request consumes pages
+    eng.submit(Request(uid=0, prompt=[1, 2, 3], max_new_tokens=2))
+    eng.step()
+    assert eng.describe()["cache"]["pages_used"] > 0
+    eng.run_until_done()
+    assert eng.describe()["cache"]["pages_used"] == 0
+
+    cont = ServingEngine(qp, plans, cfg, batch_size=2, cache_len=64,
+                         ops="ref", cache_mode="contiguous")
+    dc = cont.describe()
+    assert dc["cache"]["mode"] == "contiguous"
+    # the paged pool is provisioned lane-for-lane by default (plus the
+    # null page), so it spends no less than the contiguous layout;
+    # undersubscribing num_pages is where the O(live tokens) saving
+    # comes from (see test_paged_decode)
+    assert dc["cache"]["kv_bytes"] <= d["cache"]["kv_bytes"]
 
 
 def test_engine_decode_dispatches_through_backend(engine_setup):
