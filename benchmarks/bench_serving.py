@@ -1,18 +1,26 @@
-"""Paged vs contiguous serving decode: tokens/s and cache bytes.
+"""Serving engine benchmark: decode + prefill throughput, TTFT, prefix
+reuse, across cache layouts and prefill modes.
 
-Drives the same request schedule through two `ServingEngine`
-configurations — the contiguous per-lane cache and the paged pool
-(undersubscribed, so cache memory is O(live tokens)) — asserting
-bit-identical token streams as a by-product, and reports decode
-throughput plus the KV bytes each layout provisions.
+Drives the same request schedule through three `ServingEngine`
+configurations — the contiguous per-lane cache (token-streaming
+prefill), the paged pool with streaming prefill, and the paged pool
+with the **chunked batched prefill** pipeline (+ cross-session prefix
+sharing) — asserting bit-identical token streams as a by-product, and
+reports:
+
+  * decode throughput (tokens/s) and provisioned KV bytes (as before);
+  * **prefill throughput** (prompt tokens/s) and **time-to-first-token**
+    measured on a dedicated long-prompt request, after a warmup pass so
+    XLA compile time is excluded;
+  * the **prefix-hit rate** of the shared-prefix schedule on the
+    chunked config (sessions re-using previously prefilled pages).
 
 Besides the usual CSV rows this module writes the machine-readable
-``benchmarks/BENCH_serving.json`` (schema: ``{"configs": {name:
-{"tokens_per_s", "kv_bytes", "pages", "tokens"}}, "parity": bool}``) —
-the artifact the bench-smoke CI job uploads, so the serving perf
-trajectory is tracked per commit.  On CPU both paths run through
-XLA/interpret so the ratio mostly documents overhead; on TPU the same
-harness times compiled kernels and the bytes column is what matters.
+``benchmarks/BENCH_serving.json`` (see ``benchmarks/check_bench_json.py``
+for the schema, which the bench-smoke CI job enforces) — the artifact CI
+uploads, so the serving perf trajectory is tracked per commit.  On CPU
+all paths run through XLA/interpret so the ratios mostly document
+overhead; on TPU the same harness times compiled kernels.
 """
 import json
 import os
@@ -36,23 +44,65 @@ def _build(quick: bool):
     return cfg, qp, plans
 
 
-def _serve(cfg, qp, plans, n_req: int, max_new: int, **engine_kw):
+def _prompts(cfg, quick: bool):
     import numpy as np
-    from repro.serving import Request, ServingEngine
-
-    eng = ServingEngine(qp, plans, cfg, batch_size=2, cache_len=64,
-                        ops="ref", **engine_kw)
     rng = np.random.default_rng(0)
-    reqs = [Request(uid=i, prompt=list(rng.integers(1, cfg.vocab, 3)),
-                    max_new_tokens=max_new) for i in range(n_req)]
-    for r in reqs:
-        eng.submit(r)
-    t0 = time.perf_counter()
-    eng.run_until_done()
-    dt = time.perf_counter() - t0
+    # 24-token prompts: 2 pages each on the default 16-token pages, so
+    # two lanes + copy-on-write headroom fit the undersubscribed pool
+    n_req, plen = (4, 24) if quick else (6, 24)
+    shared = list(rng.integers(1, cfg.vocab, plen))
+    prompts = [shared]
+    # half the schedule shares the first prompt's prefix (last token
+    # differs), the rest are disjoint — exercises the prefix table and
+    # copy-on-write on the chunked config
+    for i in range(1, n_req):
+        if i % 2:
+            prompts.append(shared[:-1] + [int(1 + i)])
+        else:
+            prompts.append(list(rng.integers(1, cfg.vocab, plen)))
+    return prompts
+
+
+def _engine(cfg, qp, plans, **engine_kw):
+    from repro.serving import ServingEngine
+    return ServingEngine(qp, plans, cfg, batch_size=2, cache_len=64,
+                         ops="ref", **engine_kw)
+
+
+def _serve(cfg, qp, plans, prompts, max_new: int, **engine_kw):
+    from repro.serving import Request
+
+    def run():
+        eng = _engine(cfg, qp, plans, **engine_kw)
+        reqs = [Request(uid=i, prompt=list(p), max_new_tokens=max_new)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            eng.submit(r)
+        t0 = time.perf_counter()
+        eng.run_until_done()
+        return eng, reqs, time.perf_counter() - t0
+
+    run()                                   # warmup: compile both steps
+    eng, reqs, dt = run()
     toks = [r.out_tokens for r in reqs]
     n_tok = sum(len(t) for t in toks)
+
+    # TTFT + prefill throughput on a dedicated long-prompt request
+    # (warm executables): step until the first output token lands
+    from repro.serving import Request as Rq
+    eng2 = _engine(cfg, qp, plans, **engine_kw)
+    probe = Rq(uid=99, prompt=list(prompts[0]), max_new_tokens=2)
+    eng2.submit(probe)
+    t0 = time.perf_counter()
+    while not probe.out_tokens:
+        eng2.step()
+    ttft = time.perf_counter() - t0
+    n_pre = len(probe.prompt) - 1
+
     stats = eng.describe()["cache"]
+    prefill = eng.describe()["prefill"]
+    px = stats.get("prefix")
+    queries = (px["hits"] + px["misses"]) if px else 0
     return {
         "tokens": n_tok,
         "tokens_per_s": round(n_tok / dt, 2),
@@ -60,22 +110,33 @@ def _serve(cfg, qp, plans, n_req: int, max_new: int, **engine_kw):
         "pages": {k: stats[k] for k in ("page_size", "num_pages")
                   if k in stats},
         "mode": stats["mode"],
+        "prefill": {
+            "mode": prefill["mode"],
+            "chunk": prefill["chunk"],
+            "ttft_s": round(ttft, 4),
+            "tokens_per_s": round(n_pre / ttft, 2),
+        },
+        "prefix_hit_rate": round(px["hits"] / queries, 3)
+        if queries else None,
     }, toks
 
 
 def run(quick: bool = False):
     cfg, qp, plans = _build(quick)
-    n_req, max_new = (3, 4) if quick else (6, 8)
+    prompts = _prompts(cfg, quick)
+    max_new = 4 if quick else 8
     configs = {}
-    contiguous, toks_c = _serve(cfg, qp, plans, n_req, max_new,
-                                cache_mode="contiguous")
-    configs["contiguous"] = contiguous
+    configs["contiguous"], toks_c = _serve(
+        cfg, qp, plans, prompts, max_new, cache_mode="contiguous")
     # undersubscribed pool: far less than batch x cache_len provisioned
-    paged, toks_p = _serve(cfg, qp, plans, n_req, max_new,
-                           cache_mode="paged", page_size=16, num_pages=5)
-    configs["paged"] = paged
-    parity = toks_p == toks_c
-    assert parity, "paged tokens diverged from contiguous"
+    pool = dict(cache_mode="paged", page_size=16, num_pages=7)
+    configs["paged_streaming"], toks_s = _serve(
+        cfg, qp, plans, prompts, max_new, prefill_chunk=0,
+        prefix_cache=False, **pool)
+    configs["paged_chunked"], toks_p = _serve(
+        cfg, qp, plans, prompts, max_new, **pool)
+    parity = toks_p == toks_c and toks_s == toks_c
+    assert parity, "paged/chunked tokens diverged from contiguous"
 
     with open(JSON_PATH, "w") as f:
         json.dump({"configs": configs, "parity": parity,
@@ -87,9 +148,24 @@ def run(quick: bool = False):
                      "parity verified"))
         rows.append((f"serving_kv_bytes[{name}]", c["kv_bytes"],
                      f"mode={c['mode']}"))
-    saved = 100.0 * (1 - paged["kv_bytes"] / contiguous["kv_bytes"])
+        rows.append((f"serving_prefill_tokens_per_s[{name}]",
+                     c["prefill"]["tokens_per_s"],
+                     f"prefill={c['prefill']['mode']}"))
+        rows.append((f"serving_ttft_s[{name}]", c["prefill"]["ttft_s"],
+                     "time to first token, warm"))
+    saved = 100.0 * (1 - configs["paged_chunked"]["kv_bytes"]
+                     / configs["contiguous"]["kv_bytes"])
     rows.append(("serving_kv_bytes_saved_pct", round(saved, 1),
                  f"paged pool undersubscribed; JSON at {JSON_PATH}"))
+    hit = configs["paged_chunked"]["prefix_hit_rate"]
+    if hit is not None:
+        rows.append(("serving_prefix_hit_rate", hit,
+                     "shared-prefix schedule, chunked config"))
+    speedup = (configs["paged_chunked"]["prefill"]["tokens_per_s"]
+               / max(configs["paged_streaming"]["prefill"]["tokens_per_s"],
+                     1e-9))
+    rows.append(("serving_chunked_prefill_speedup", round(speedup, 2),
+                 "chunked vs token-streaming prefill tokens/s"))
     return rows
 
 

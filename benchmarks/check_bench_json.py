@@ -1,0 +1,120 @@
+"""Schema sanity check for the machine-readable ``BENCH_*.json`` files.
+
+CI's bench-smoke job runs this right after ``run.py --quick``: the
+benchmark JSON artifacts are consumed by tooling tracking the perf
+trajectory per commit, so a bench refactor that silently changes or
+drops a field should fail the build, not the downstream dashboards.
+
+The validator is a ~30-line structural checker (no external jsonschema
+dependency): a schema is a dict mapping field name -> type | nested
+schema | tuple of allowed types; ``...`` as a dict key validates every
+value of an open-ended mapping against one sub-schema.  Unknown extra
+fields are allowed (benches may grow columns), missing or mistyped
+required fields are errors.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+NUM = (int, float)
+
+SERVING_CONFIG = {
+    "tokens": int,
+    "tokens_per_s": NUM,
+    "kv_bytes": int,
+    "pages": dict,
+    "mode": str,
+    "prefill": {
+        "mode": str,
+        "chunk": int,
+        "ttft_s": NUM,
+        "tokens_per_s": NUM,
+    },
+    "prefix_hit_rate": (int, float, type(None)),
+}
+
+SCHEMAS = {
+    "BENCH_serving.json": {
+        "configs": {...: SERVING_CONFIG},
+        "parity": bool,
+        "arch": str,
+        "quick": bool,
+    },
+}
+
+
+def _check(value, schema, path: str, errors: list):
+    if isinstance(schema, dict):
+        if not isinstance(value, dict):
+            errors.append(f"{path}: expected object, got "
+                          f"{type(value).__name__}")
+            return
+        if ... in schema:
+            for key, sub in value.items():
+                _check(sub, schema[...], f"{path}.{key}", errors)
+            return
+        for key, sub in schema.items():
+            if key not in value:
+                errors.append(f"{path}.{key}: missing")
+            else:
+                _check(value[key], sub, f"{path}.{key}", errors)
+        return
+    if isinstance(schema, tuple):
+        if not isinstance(value, schema) or isinstance(value, bool) \
+                and bool not in schema:
+            errors.append(f"{path}: expected one of "
+                          f"{[t.__name__ for t in schema]}, got "
+                          f"{type(value).__name__}")
+        return
+    if schema is bool:
+        if not isinstance(value, bool):
+            errors.append(f"{path}: expected bool, got "
+                          f"{type(value).__name__}")
+        return
+    if not isinstance(value, schema) or isinstance(value, bool):
+        errors.append(f"{path}: expected {schema.__name__}, got "
+                      f"{type(value).__name__}")
+
+
+def check_file(path: str) -> list:
+    """Validate one BENCH_*.json; returns a list of error strings."""
+    name = os.path.basename(path)
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{name}: unreadable ({e})"]
+    errors: list = []
+    if not isinstance(data, dict):
+        return [f"{name}: top level must be an object"]
+    schema = SCHEMAS.get(name)
+    if schema is not None:
+        _check(data, schema, name, errors)
+    return errors
+
+
+def main(argv=None) -> int:
+    paths = (argv or sys.argv[1:]) \
+        or sorted(glob.glob(os.path.join(HERE, "BENCH_*.json")))
+    if not paths:
+        print("check_bench_json: no BENCH_*.json files found",
+              file=sys.stderr)
+        return 1
+    failed = False
+    for path in paths:
+        errors = check_file(path)
+        status = "FAIL" if errors else "ok"
+        print(f"{os.path.basename(path)}: {status}")
+        for err in errors:
+            failed = True
+            print(f"  {err}", file=sys.stderr)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

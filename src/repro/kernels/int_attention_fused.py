@@ -253,3 +253,251 @@ def int_attention_fused(q8, k8, v8, plan: IAttnPlan, requant=None,
                         pltpu.VMEM((bq, d), jnp.int32)],
         interpret=interpret,
     )(*args)
+
+
+# ===================================================== paged prefill =======
+#
+# The chunked-prefill variant of the kernel above: C chunk queries per
+# slot (the serving engine's prompt chunk) against a *paged* KV cache —
+# history plus the chunk itself, already scattered into the physical
+# pools through the page table (``repro.ops.paged.scatter_chunk``).
+# Two scalar-prefetch operands steer the launch, exactly as in the
+# decode kernel (``int_decode_attention.py``):
+#
+#   pos_end : int32 (B,)          = base_pos + C, the logical occupancy
+#                                   after the chunk (the decode kernel's
+#                                   ``valid_len``);
+#   pages   : int32 (B, max_pages) logical block -> physical page.
+#
+# Masking is the decode kernel's stepped occupancy mask with Sq = C:
+# chunk row ``i`` (global position ``pos_end - C + i``) sees cache
+# positions ``< pos_end - C + i + 1`` — which *is* causal attention over
+# history + chunk.  Unlike the decode kernel (Sq <= 8 rows in scratch for
+# the whole launch) the chunk is tiled over query blocks like prefill,
+# so C is bounded by VMEM tiling only, not by MAX_SQ.
+#
+# The folded wo projection (``wo_w8=``) mirrors the decode kernel's:
+# query blocks sit *outside* the head grid dimension so the per-q-block
+# ``(bq, N)`` VMEM accumulator sums that block's o-projection across the
+# heads before the last head applies bias + the wo RequantSpec.
+
+
+def _paged_prefill_kernel(*refs, plan: IAttnPlan, requant: RequantSpec,
+                          has_bvec: bool, n_kv: int, c: int, bq: int,
+                          bkv: int, fold: bool, wo_spec,
+                          wo_has_bias: bool, wo_has_bvec: bool,
+                          n_heads: int):
+    refs = list(refs)
+    vl_ref = refs.pop(0)
+    refs.pop(0)                     # page table: read by index maps only
+    q_ref, k_ref, v_ref = refs.pop(0), refs.pop(0), refs.pop(0)
+    b_ref = refs.pop(0) if has_bvec else None
+    wo_ref = wob_ref = wobv_ref = None
+    if fold:
+        wo_ref = refs.pop(0)
+        if wo_has_bias:
+            wob_ref = refs.pop(0)
+        if wo_has_bvec:
+            wobv_ref = refs.pop(0)
+    o_ref = refs.pop(0)
+    m_ref, s_ref, acc_ref = refs.pop(0), refs.pop(0), refs.pop(0)
+    attn_out = refs.pop(0) if fold else o_ref
+    wacc_ref = refs.pop(0) if fold else None
+
+    bi = pl.program_id(0)
+    q_blk = pl.program_id(1)
+    head = pl.program_id(2)
+    phase = pl.program_id(3)
+    kv_step = pl.program_id(4)
+    vl = vl_ref[bi]
+    base = vl - c                       # chunk's first global position
+
+    q8 = q_ref[0, :, 0, :]              # (bq, d) int8
+    k8 = k_ref[0, :, 0, :]              # (bkv, d) int8
+    v8 = v_ref[0, :, 0, :]
+
+    # causal-over-history mask: chunk row i at global position base +
+    # q_blk*bq + i sees logical cache positions <= its own.  ki is the
+    # *logical* position — the index map already translated the block
+    # through the page table, the mask math is unchanged.
+    qpos = base + q_blk * bq \
+        + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+    ki = kv_step * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    live = ki <= qpos
+
+    # a KV block whose first position is past this query block's last
+    # row is entirely dead (upper triangle / beyond occupancy: qpos is
+    # always <= vl - 1, so the causal bound subsumes the vl bound)
+    blk_live = kv_step * bkv <= base + q_blk * bq + bq - 1
+
+    _streaming_attn_body(phase, kv_step, n_kv, q8, k8, v8, live, blk_live,
+                         attn_out, m_ref, s_ref, acc_ref, b_ref,
+                         plan=plan, requant=requant)
+
+    if fold:
+        @pl.when((phase == 2) & (kv_step == n_kv - 1))
+        def _wo_accumulate():
+            o8 = attn_out[0, :, 0, :]
+            part = jax.lax.dot_general(o8, wo_ref[...],
+                                       (((1,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.int32)
+            prev = jnp.where(head == 0, jnp.zeros_like(part),
+                             wacc_ref[...])
+            wacc_ref[...] = prev + part
+
+        @pl.when((phase == 2) & (kv_step == n_kv - 1)
+                 & (head == n_heads - 1))
+        def _wo_epilogue():
+            acc = wacc_ref[...]
+            if wo_has_bias:
+                acc = acc + wob_ref[0, :][None, :]
+            b_row = None if wobv_ref is None \
+                else wobv_ref[0, :].astype(jnp.int32)[None, :]
+            o_ref[0, :, :] = _requant_tile(acc, wo_spec,
+                                           b_row).astype(o_ref.dtype)
+
+
+def int_paged_prefill_fused(q8, k_pool, v_pool, plan: IAttnPlan, pos_end,
+                            pages, page_size: int, requant=None,
+                            b_vec=None, bq: int = 128, bkv: int = 128,
+                            out_bits: int = 8, interpret: bool = True,
+                            wo_w8=None, wo_bias32=None, wo_b_vec=None,
+                            wo_spec=None):
+    """q8: (B, C, H, D) int8 chunk queries; k_pool/v_pool: physical
+    ``(num_pages, page_size, Hkv, D)`` int8 pools *already containing
+    the chunk's K/V* (``repro.ops.paged.scatter_chunk``); ``pos_end``:
+    (B,) int32 logical occupancy after the chunk (``base_pos + C``);
+    ``pages``: int32 (B, max_pages) page table.
+
+    ``requant``/``b_vec``: the attention epilogue, exactly as
+    :func:`int_attention_fused`.  ``wo_w8`` (+ ``wo_bias32`` /
+    ``wo_b_vec`` / ``wo_spec``): fold the o-projection into the launch,
+    exactly as the decode kernel — the attention epilogue must clip to
+    ≤ 8 bits, and the return becomes ``(B, C, N)``.
+
+    Returns (B, C, H, D) — or (B, C, N) folded.  Bit-exact against
+    ``kernels.ref.ref_int_paged_prefill``'s attention output for the
+    same (post-scatter) pools.
+    """
+    b, c, h, d = q8.shape
+    ps, hkv = k_pool.shape[1], k_pool.shape[2]
+    assert page_size == ps, (page_size, ps)
+    pages = jnp.asarray(pages, jnp.int32)
+    assert pages.ndim == 2 and pages.shape[0] == b, pages.shape
+    L = pages.shape[1] * ps
+    assert h % hkv == 0, (h, hkv)
+    assert L <= MAX_SKV, \
+        f"row-sum int32 budget: logical cache <= {MAX_SKV} (got {L}); " \
+        "use the two-pass path (see module docstring)"
+    group = h // hkv
+    bq = min(bq, c)
+    assert c % bq == 0, (c, bq)
+    bkv = min(bkv, ps)
+    assert ps % bkv == 0, (ps, bkv)
+    sub = ps // bkv                     # KV sub-blocks per physical page
+    n_kv = L // bkv
+    pos_end = jnp.asarray(pos_end, jnp.int32)
+
+    requant, has_bvec, b2, out_dtype = _epilogue_setup(
+        requant, plan, out_bits, b_vec, h, d)
+
+    fold = wo_w8 is not None
+    wo_has_bias = wo_has_bvec = False
+    if fold:
+        assert wo_spec is not None, "folded wo projection needs wo_spec"
+        assert not requant.is_raw and requant.out_bits <= 8, \
+            "wo folding needs an int8 attention epilogue"
+        wo_w8 = jnp.asarray(wo_w8)
+        n_out = wo_w8.shape[-1]
+        assert wo_w8.shape == (h * d, n_out), (wo_w8.shape, h, d)
+        wo_has_bias = wo_bias32 is not None
+        wo_has_bvec = wo_spec.kind == PER_CHANNEL
+        if wo_has_bvec and wo_b_vec is None:
+            raise ValueError("per-channel wo_spec needs the wo_b_vec "
+                             "multiplier vector")
+        out_dtype = jnp.int8 if (not wo_spec.is_raw
+                                 and wo_spec.out_bits <= 8) else jnp.int32
+
+    kernel = functools.partial(
+        _paged_prefill_kernel, plan=plan, requant=requant,
+        has_bvec=has_bvec, n_kv=n_kv, c=c, bq=bq, bkv=bkv,
+        fold=fold, wo_spec=wo_spec, wo_has_bias=wo_has_bias,
+        wo_has_bvec=wo_has_bvec, n_heads=h)
+
+    def _kv_block(ki, vl):
+        # clamp dead blocks to the slot's last live one before table
+        # translation, exactly as the decode kernel (unmapped entries
+        # hold the resident null page anyway; the clamp keeps the DMA
+        # on this lane's own pages)
+        last = jnp.maximum(pl.cdiv(vl, bkv) - 1, 0)
+        return jnp.minimum(ki, last)
+
+    # index maps: grid is (b, q_blk, head, phase, kv) — query blocks sit
+    # OUTSIDE the head dim so the folded-wo accumulator for one query
+    # block sweeps all heads consecutively (decode kernel: Sq <= 8 in
+    # scratch needs no q dim at all); scalar-prefetch refs (pos_end,
+    # pages) arrive as trailing args.
+    def q_map(bi, qi, hi, ph, ki, vl, pt):
+        return (bi, qi, hi, 0)
+
+    def kv_map(bi, qi, hi, ph, ki, vl, pt):
+        kc = _kv_block(ki, vl[bi])
+        return (pt[bi, kc // sub], kc % sub, hi // group, 0)
+
+    def head_row_map(bi, qi, hi, ph, ki, vl, pt):
+        return (hi, 0)
+
+    def one_row_map(bi, qi, hi, ph, ki, vl, pt):
+        return (0, 0)
+
+    def out_map(bi, qi, hi, ph, ki, vl, pt):
+        return (bi, qi, 0) if fold else (bi, qi, hi, 0)
+
+    kv_blk = (1, bkv, 1, d)
+    in_specs = [
+        pl.BlockSpec((1, bq, 1, d), q_map),
+        pl.BlockSpec(kv_blk, kv_map),
+        pl.BlockSpec(kv_blk, kv_map),
+    ]
+    args = [q8, k_pool, v_pool]
+    if has_bvec:
+        in_specs.append(pl.BlockSpec((1, d), head_row_map))
+        args.append(b2)
+    if fold:
+        in_specs.append(pl.BlockSpec((d, n_out), head_row_map))
+        args.append(wo_w8)
+        if wo_has_bias:
+            in_specs.append(pl.BlockSpec((1, n_out), one_row_map))
+            args.append(jnp.asarray(wo_bias32, jnp.int32).reshape(1, n_out))
+        if wo_has_bvec:
+            in_specs.append(pl.BlockSpec((1, n_out), one_row_map))
+            args.append(jnp.asarray(wo_b_vec, jnp.int32).reshape(1, n_out))
+
+    from jax.experimental.pallas import tpu as pltpu
+    scratch = [pltpu.VMEM((bq, 1), jnp.int32),
+               pltpu.VMEM((bq, 1), jnp.int32),
+               pltpu.VMEM((bq, d), jnp.int32)]
+    if fold:
+        # per-head attention tile (int8: asserted above) + the (bq, N)
+        # o-projection accumulator carried across the head grid dim
+        scratch += [pltpu.VMEM((1, bq, 1, d), jnp.int8),
+                    pltpu.VMEM((bq, n_out), jnp.int32)]
+        out_specs = pl.BlockSpec((1, bq, n_out), out_map)
+        out_shape = jax.ShapeDtypeStruct((b, c, n_out), out_dtype)
+    else:
+        out_specs = pl.BlockSpec((1, bq, 1, d), out_map)
+        out_shape = jax.ShapeDtypeStruct((b, c, h, d), out_dtype)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, c // bq, h, 3, n_kv),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=scratch,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(pos_end, pages, *args)

@@ -127,6 +127,41 @@ def ref_int_paged_decode_attention(q8, k_pool, v_pool, plan, valid_len,
                                     requant=requant, b_vec=b_vec)
 
 
+def ref_int_paged_prefill(q8, k8_new, v8_new, k_pool, v_pool, plan,
+                          base_pos, pages, page_size: int,
+                          out_bits: int = 8, requant=None, b_vec=None,
+                          wo_w8=None, wo_bias32=None, wo_b_vec=None,
+                          wo_spec=None):
+    """Oracle for the chunked paged-prefill op: scatter the chunk's new
+    K/V through the page table, gather the updated pools into the
+    contiguous layout, and run the stepped-mask decode oracle with
+    ``valid_len = base_pos + C`` — chunk row ``i`` (global position
+    ``base_pos[b] + i``) then attends to exactly the positions
+    ``≤ base_pos[b] + i``, the causal-over-history mask of chunked
+    prefill.  Paged prefill is *defined* as bit-identical to this
+    composition.
+
+    ``q8``/``k8_new``/``v8_new``: ``(B, C, H|Hkv, D)`` int8 chunk
+    projections (RoPE already applied); pools ``(num_pages, page_size,
+    Hkv, D)``; ``base_pos (B,) int32``; ``wo_*``: the optional folded
+    o-projection, exactly as :func:`ref_apply_wo`.  Returns
+    ``(o, k_pool, v_pool)`` — the chunk attention output plus the
+    updated pools.
+    """
+    from repro.ops.paged import gather_pages, scatter_chunk
+    c = q8.shape[1]
+    k_pool = scatter_chunk(k_pool, k8_new, base_pos, pages, page_size)
+    v_pool = scatter_chunk(v_pool, v8_new, base_pos, pages, page_size)
+    kc = gather_pages(k_pool, pages, page_size)
+    vc = gather_pages(v_pool, pages, page_size)
+    vl = jnp.asarray(base_pos, jnp.int32) + c
+    o = ref_int_decode_attention(q8, kc, vc, plan, vl, out_bits,
+                                 requant=requant, b_vec=b_vec)
+    if wo_w8 is not None:
+        o = ref_apply_wo(o, wo_w8, wo_bias32, wo_b_vec, wo_spec)
+    return o, k_pool, v_pool
+
+
 def ref_apply_wo(o8, wo_w8, wo_bias32, wo_b_vec, wo_spec):
     """The unfolded o-projection a folded decode launch must match:
     int8 attention output ``(B, Sq, H, D)`` × ``wo_w8 (H·D, N)`` with

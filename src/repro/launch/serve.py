@@ -48,7 +48,20 @@ def main():
                          "undersubscribe the pool)")
     ap.add_argument("--no-fold-wo", action="store_true",
                     help="keep the o-projection requant outside the "
-                         "decode epilogue (numerics identical)")
+                         "decode/prefill epilogues (numerics identical)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="prompt tokens per batched prefill launch "
+                         "(paged mode; must divide or be a multiple of "
+                         "--page-size; 0 = token-streaming prefill; "
+                         "default: auto ~32 on eligible archs)")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="max prompt tokens prefilled per engine step, "
+                         "so decoding sessions keep emitting a token "
+                         "every step (default: unbounded)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable cross-session prompt-prefix sharing "
+                         "(shared prefixes otherwise map the same "
+                         "physical KV pages)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--backend", default=None,
                     help="registered op backend (default: REPRO_BACKEND "
@@ -60,6 +73,19 @@ def main():
     # resolve up front: a typo'd --backend should fail before the
     # (slow) quantization pass, not after
     ops = rops.resolve_ops(args.backend, cfg)
+    # ... and reject incoherent prefill flags just as early, with a
+    # typed error instead of a kernel-shape failure deep in a launch
+    if args.prefill_chunk is not None and args.prefill_chunk > 0:
+        if args.cache_mode != "paged":
+            ap.error("--prefill-chunk needs --cache-mode paged (chunked "
+                     "prefill writes K/V through the page table)")
+        if args.prefill_chunk % args.page_size \
+                and args.page_size % args.prefill_chunk:
+            ap.error(f"--prefill-chunk {args.prefill_chunk} must divide "
+                     f"or be a multiple of --page-size {args.page_size} "
+                     "so chunk writes tile physical pages")
+    if args.prefill_budget is not None and args.prefill_budget < 1:
+        ap.error("--prefill-budget must be >= 1 token/step")
     if args.reduced:
         cfg = M.reduce_config(cfg, dtype="float32", vocab=1024)
     params = tf.init_params(jax.random.key(0), cfg)
@@ -79,7 +105,10 @@ def main():
                         cache_mode=args.cache_mode,
                         page_size=args.page_size,
                         num_pages=args.num_pages,
-                        fold_wo=not args.no_fold_wo)
+                        fold_wo=not args.no_fold_wo,
+                        prefill_chunk=args.prefill_chunk,
+                        prefill_budget=args.prefill_budget,
+                        prefix_cache=not args.no_prefix_cache)
     print(f"engine: {eng.describe_str()}")
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,
@@ -99,6 +128,10 @@ def main():
     print(f"served {len(reqs)} requests / {n_tok} tokens in {steps} "
           f"batched steps, {dt:.1f}s ({n_tok/dt:.1f} tok/s, int8 KV "
           f"cache)")
+    px = eng.describe()["cache"].get("prefix")
+    if px:
+        print(f"prefix cache: {px['hits']} hits / {px['misses']} misses, "
+              f"{px['tokens_reused']} prompt tokens reused")
     for r in reqs[:4]:
         print(f"  req {r.uid}: {r.prompt} -> {r.out_tokens[:10]}...")
 

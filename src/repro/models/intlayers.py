@@ -247,6 +247,59 @@ def int_attn_decode(qp, x8, cache, pos, plans: qplans.AttnPlan,
     return out32, {"k8": k_cache, "v8": v_cache}
 
 
+def int_attn_prefill_chunk(qp, x8, cache, base_pos, plans: qplans.AttnPlan,
+                           cfg: ArchConfig, rope_tab=None, ops=None,
+                           pages=None, page_size: int = 0,
+                           fold_wo: bool = False):
+    """Chunked prefill attention over a *paged* KV cache.
+
+    x8: (B, C, D) — one prompt chunk per lane, covering that lane's
+    logical positions ``[base_pos[b], base_pos[b] + C)``; cache:
+    ``{"k8", "v8"}`` physical page pools ``(num_pages, page_size, Hkv,
+    hd)``; ``pages``: int32 (B, max_pages) page table.  The op writes
+    the chunk's K/V through the table and runs causal attention over
+    history + chunk (``ops.int_paged_prefill`` — one fused kernel launch
+    on ``pallas_fused``, exact scatter/gather lowering elsewhere).
+    Returns (out32 (B, C, D) at s_res, new_cache).
+
+    Full (non-windowed) causal attention only — the rolling
+    sliding-window buffer interleaves writes and reads token-by-token,
+    which a batched chunk write cannot reproduce (the serving engine
+    keeps token streaming for ``cfg.window > 0``).  Bit-exact against
+    streaming the same tokens through :func:`int_attn_decode` one at a
+    time.  With ``fold_wo`` the o-projection's per-channel requant rides
+    in the prefill launch's epilogue (``prefill_wo_fold``).
+    """
+    assert cfg.window == 0, "chunked prefill needs full causal attention"
+    ops = resolve_ops(ops, cfg)
+    b, c, d = x8.shape
+    q8 = int_linear(x8, qp["wq"], plans.qkv, ops) \
+        .reshape(b, c, cfg.n_heads, cfg.hd)
+    k8 = int_linear(x8, qp["wk"], plans.qkv, ops) \
+        .reshape(b, c, cfg.n_kv_heads, cfg.hd)
+    v8 = int_linear(x8, qp["wv"], plans.qkv, ops) \
+        .reshape(b, c, cfg.n_kv_heads, cfg.hd)
+    if rope_tab is not None:
+        positions = base_pos[:, None] + jnp.arange(c, dtype=jnp.int32)
+        q8 = apply_int_rope(q8, positions, rope_tab)
+        k8 = apply_int_rope(k8, positions, rope_tab)
+    requant = RequantSpec.per_tensor(plans.attn.dn_out)
+    if fold_wo:
+        out32, k_pool, v_pool = ops.int_paged_prefill(
+            q8, k8, v8, cache["k8"], cache["v8"], plans.attn, base_pos,
+            pages, page_size, requant=requant,
+            wo=QuantLinearParams.of(qp["wo"]),
+            wo_spec=RequantSpec.for_linear(plans.out))
+    else:
+        o8, k_pool, v_pool = ops.int_paged_prefill(
+            q8, k8, v8, cache["k8"], cache["v8"], plans.attn, base_pos,
+            pages, page_size, requant=requant)
+        o8 = o8.astype(jnp.int8)
+        out32 = int_linear(o8.reshape(b, c, cfg.n_heads * cfg.hd),
+                           qp["wo"], plans.out, ops)
+    return out32, {"k8": k_pool, "v8": v_pool}
+
+
 # --------------------------------------------------------------- ffn ------
 
 def int_ffn_fwd(qp, x8, plans: qplans.FfnPlan, cfg: ArchConfig,

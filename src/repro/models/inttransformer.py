@@ -300,6 +300,75 @@ def int_decode_step(qparams, caches, tokens, pos, plans, cfg: ArchConfig,
     return logits, list(new_caches)
 
 
+def chunked_prefill_supported(cfg: ArchConfig) -> bool:
+    """Whether :func:`int_prefill_chunk_step` serves this arch: full
+    (non-windowed) causal attention + dense FFN sublayers only.  Sliding
+    windows interleave rolling-buffer writes and reads token-by-token
+    (a batched chunk write would clobber positions earlier chunk rows
+    still need), SSM state updates are inherently sequential per lane,
+    MoE capacity-based routing drops tokens per *group* (so chunked
+    grouping would diverge from token streaming), and cross-attention
+    archs carry lane-indexed memory — all of those keep the engine's
+    token-streaming prefill."""
+    _, _, kinds = layer_group_spec(cfg)
+    return cfg.window == 0 and all(kind == ("attn", "ffn", False)
+                                   for kind in kinds)
+
+
+def int_prefill_chunk_step(qparams, caches, tokens, base_pos, plans,
+                           cfg: ArchConfig, rope_tab=None, ops=None,
+                           pages=None, page_size: int = 0,
+                           fold_wo: bool = False):
+    """One chunked-prefill step: advance every prefilling lane by one
+    C-token prompt chunk, writing K/V straight into the paged pools.
+
+    ``tokens``: (B, C) int32 chunk tokens (pad lanes/positions with 0 —
+    their writes land on pages the table routes to the reserved null
+    page, or on positions a later decode step overwrites before
+    ``valid_len`` ever marks them live); ``base_pos``: (B,) int32 first
+    logical position of each lane's chunk; ``pages``: the *prefill view*
+    of the page table — rows of lanes not being prefilled must be
+    nulled, so their (discarded) chunk writes cannot touch live pages.
+
+    Returns the new caches only — chunked prefill fills the cache, it
+    does not sample (the engine feeds the prompt's last token through
+    the decode step, exactly as the token-streaming path).  Bit-exact
+    against streaming the same tokens through :func:`int_decode_step`
+    one at a time (same ops, same epilogues, row-independent integer
+    math).  Supported archs: :func:`chunked_prefill_supported`.
+    """
+    ops = resolve_ops(ops, cfg)
+    if not chunked_prefill_supported(cfg):
+        raise ValueError(f"chunked prefill unsupported for arch "
+                         f"{cfg.name!r} (needs window == 0 and "
+                         "attention+ffn sublayers only)")
+    gl, ng, kinds = layer_group_spec(cfg)
+    x32 = embed_int(qparams, tokens, plans, cfg)
+
+    def body(x32, xs):
+        qp_group, cache_group = xs
+        new_group = []
+        for j in range(len(kinds)):
+            qp, cache = qp_group[j], cache_group[j]
+            new_cache = dict(cache)
+            h8 = il.int_norm(qp["norm1"], x32, plans.norm, ops)
+            a32, kv = il.int_attn_prefill_chunk(
+                qp["attn"], h8, cache, base_pos, plans.attn, cfg,
+                rope_tab, ops=ops, pages=pages, page_size=page_size,
+                fold_wo=fold_wo)
+            new_cache.update(kv)
+            x32 = _residual_add(x32, a32, cfg)
+            h8 = il.int_norm(qp["norm2"], x32, plans.norm, ops)
+            f32 = il.int_ffn_fwd(qp["ffn"], h8, plans.ffn, cfg, ops)
+            x32 = _residual_add(x32, f32, cfg)
+            new_group.append(new_cache)
+        return x32, tuple(new_group)
+
+    _, new_caches = jax.lax.scan(
+        body, x32, (tuple(qparams["layers"]), tuple(caches)))
+    return list(new_caches)
+
+
 def build_cache_from_prefill(qparams, batch, plans, cfg, ops,
                              cache_len):
     """Serving-engine helper: run prefill token-by-token into the decode

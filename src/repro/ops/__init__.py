@@ -12,8 +12,10 @@ Attention, Decode Attention, Softmax, GELU, LayerNorm):
   * :class:`OpSet` — the handle models take once at construction
     (default backend + per-op overrides).  Its ``int_decode_attention``
     negotiates the optional decode capabilities (``paged_decode`` /
-    ``decode_wo_fold``), lowering the page-table and folded-wo operands
-    exactly for backends without them (see ``repro.ops.paged``).
+    ``decode_wo_fold``), and ``int_paged_prefill`` the chunked-prefill
+    ones (``paged_prefill`` / ``prefill_wo_fold``) — lowering the
+    page-table, chunk-scatter and folded-wo operands exactly for
+    backends without them (see ``repro.ops.paged``).
 
 See docs/OPS_API.md for the full API (the old ``repro.kernels.ops``
 string-dispatch wrappers are gone; the migration table lives there).
@@ -24,7 +26,8 @@ from repro.ops.registry import (Backend, OpSet, available_backends,
                                 current_opset, get_backend,
                                 register_backend, resolve_ops,
                                 unregister_backend, use_backend,
-                                DEFAULT_BACKEND, ENV_VAR, OP_NAMES)
+                                DEFAULT_BACKEND, ENV_VAR, OP_NAMES,
+                                REQUIRED_OPS)
 from repro.ops.spec import (PER_CHANNEL, PER_TENSOR, RAW,
                             QuantLinearParams, RequantSpec)
 
@@ -33,9 +36,9 @@ __all__ = [
     "available_backends", "current_opset", "get_backend",
     "register_backend", "resolve_ops", "unregister_backend",
     "use_backend", "DEFAULT_BACKEND", "ENV_VAR", "OP_NAMES",
-    "PER_CHANNEL", "PER_TENSOR", "RAW",
+    "REQUIRED_OPS", "PER_CHANNEL", "PER_TENSOR", "RAW",
     "int8_matmul", "int_softmax", "int_gelu", "int_layernorm",
-    "int_attention", "int_decode_attention",
+    "int_attention", "int_decode_attention", "int_paged_prefill",
 ]
 
 
@@ -101,3 +104,11 @@ def int_decode_attention(q8, k8_cache, v8_cache, plan, valid_len,
                          out_bits: int = 8, *, ops=None, **opts):
     return resolve_ops(ops).int_decode_attention(
         q8, k8_cache, v8_cache, plan, valid_len, out_bits=out_bits, **opts)
+
+
+def int_paged_prefill(q8, k8_new, v8_new, k_pool, v_pool, plan, base_pos,
+                      pages, page_size: int, out_bits: int = 8, *,
+                      ops=None, **opts):
+    return resolve_ops(ops).int_paged_prefill(
+        q8, k8_new, v8_new, k_pool, v_pool, plan, base_pos, pages,
+        page_size, out_bits=out_bits, **opts)

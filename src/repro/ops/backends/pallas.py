@@ -34,10 +34,13 @@ def _fit_block(blk: int, dim: int) -> int:
 class PallasBackend:
     fused_attention = True
     fused_decode = False      # no ragged-cache decode kernel (see below)
-    # no paged/wo-fold decode capabilities either: OpSet lowers both
-    # operands exactly before dispatching here (docs/KERNELS.md)
+    # no paged/wo-fold decode or chunked-prefill capabilities either:
+    # OpSet lowers the operands exactly before dispatching here
+    # (docs/KERNELS.md)
     paged_decode = False
     decode_wo_fold = False
+    paged_prefill = False
+    prefill_wo_fold = False
 
     def __init__(self, name: str = "pallas",
                  interpret: Optional[bool] = None,

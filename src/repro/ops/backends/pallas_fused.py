@@ -50,6 +50,8 @@ class PallasFusedBackend(PallasBackend):
     fused_decode = True       # single-launch valid_len-masked decode kernel
     paged_decode = True       # consumes page-table KV pools directly
     decode_wo_fold = True     # folds the o-projection into the launch
+    paged_prefill = True      # chunked prefill straight over the page table
+    prefill_wo_fold = True    # ... with the o-projection folded in too
 
     def __init__(self, name: str = "pallas_fused", interpret=None,
                  blocks=None, min_block: int = 16):
@@ -130,6 +132,71 @@ class PallasFusedBackend(PallasBackend):
                                           b_vec=b_vec, bkv=bkv,
                                           interpret=self._interp(),
                                           **kw, **opts)
+
+    # ---------------------------------------------------- paged prefill --
+
+    def int_paged_prefill(self, q8, k8_new, v8_new, k_pool, v_pool, plan,
+                          base_pos, pages, page_size: int,
+                          out_bits: int = 8, requant=None, b_vec=None,
+                          wo=None, wo_spec=None, **opts):
+        """Chunked paged prefill: scatter the chunk's K/V through the
+        page table (``repro.ops.paged.scatter_chunk`` — shared with the
+        oracle, so every path writes identical pool bytes), then run the
+        fused prefill attention kernel reading K/V through the
+        scalar-prefetched table (``kernels.int_attention_fused.
+        int_paged_prefill_fused``).  Untileable shapes gather + take the
+        stepped-mask decode oracle with identical numerics."""
+        from repro.kernels.int_attention_fused import \
+            int_paged_prefill_fused
+        from repro.ops.paged import scatter_chunk
+        import jax.numpy as jnp
+        opts = self._opts("int_paged_prefill", opts)
+        if requant is None:
+            requant = _spec.RequantSpec.per_tensor(plan.dn_out, out_bits)
+        c, d = q8.shape[1], q8.shape[3]
+        pages = jnp.asarray(pages, jnp.int32)
+        L = pages.shape[1] * page_size
+        if wo is not None:
+            wo = _spec.QuantLinearParams.of(wo)
+            if wo_spec is None:
+                raise ValueError("folded wo projection needs wo_spec")
+            if requant.is_raw or requant.out_bits > 8:
+                raise ValueError("wo folding needs an int8 attention "
+                                 f"epilogue, got {requant}")
+        k_pool = scatter_chunk(k_pool, k8_new, base_pos, pages, page_size)
+        v_pool = scatter_chunk(v_pool, v8_new, base_pos, pages, page_size)
+        pos_end = jnp.asarray(base_pos, jnp.int32) + c
+        bq = _fit_block(opts.pop("bq", 128), c)
+        bkv = _fit_block(opts.pop("bkv", 128), page_size)
+        if not self._can_tile_prefill(L, d, bq, bkv):
+            # exact fallback: gather the (post-scatter) pools + the
+            # stepped-mask oracle + unfolded o-projection
+            kc = _gather(k_pool, pages, page_size)
+            vc = _gather(v_pool, pages, page_size)
+            o = _ref.ref_int_decode_attention(q8, kc, vc, plan, pos_end,
+                                              requant=requant, b_vec=b_vec)
+            if wo is not None:
+                o = _ref.ref_apply_wo(o, wo.w8, wo.bias32, wo.b_mult,
+                                      wo_spec)
+            return o, k_pool, v_pool
+        kw = {}
+        if wo is not None:
+            kw.update(wo_w8=wo.w8, wo_bias32=wo.bias32, wo_b_vec=wo.b_mult,
+                      wo_spec=wo_spec)
+        o = int_paged_prefill_fused(q8, k_pool, v_pool, plan, pos_end,
+                                    pages, page_size, requant=requant,
+                                    b_vec=b_vec, bq=bq, bkv=bkv,
+                                    interpret=self._interp(), **kw, **opts)
+        return o, k_pool, v_pool
+
+    def _can_tile_prefill(self, L: int, d: int, bq: int, bkv: int) -> bool:
+        if L > MAX_SKV:
+            return False          # exact row sum leaves the int32 budget
+        if bq < self.min_block or bkv < self.min_block:
+            return False          # tiny chunk / page: oracle wins
+        if d % 2:
+            return False          # odd head dims: lane-hostile, oracle wins
+        return True
 
     def _can_tile_decode(self, sq: int, L: int, d: int, bkv: int) -> bool:
         from repro.kernels.int_decode_attention import MAX_SQ

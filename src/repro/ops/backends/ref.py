@@ -15,10 +15,13 @@ class RefBackend:
     name = "ref"
     fused_attention = False   # full-matrix oracle, not an online kernel
     fused_decode = False      # decode runs the full-matrix oracle too
-    # no paged/wo-fold decode capabilities: OpSet lowers both operands
-    # (gather-into-contiguous / unfolded matmul) before dispatching here
+    # no paged/wo-fold decode or chunked-prefill capabilities: OpSet
+    # lowers all four operands (gather-into-contiguous / unfolded
+    # matmul / chunk scatter+gather) before dispatching here
     paged_decode = False
     decode_wo_fold = False
+    paged_prefill = False
+    prefill_wo_fold = False
 
     def int8_matmul(self, x8, w8, spec, *, bias32=None, b_vec=None, **opts):
         if spec.is_raw:

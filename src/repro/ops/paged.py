@@ -1,16 +1,20 @@
-"""Page-table array utilities for the paged decode-attention operand.
+"""Page-table array utilities for the paged attention operands.
 
-The paged KV layout hands ``int_decode_attention`` a physical pool
-``(num_pages, page_size, Hkv, D)`` plus a per-slot page table
-``pages: int32[B, max_pages]`` mapping logical block ``j`` of slot ``b``
-to physical page ``pages[b, j]``.  Backends that advertise the
-``paged_decode`` capability consume the table directly (the
-``pallas_fused`` kernel translates block indices through it in the
-scalar-prefetch index map); for every other backend the dispatch layer
-lowers the operand with :func:`gather_pages` — an exact gather into the
-contiguous ``(B, max_pages·page_size, Hkv, D)`` layout the existing
-contract already covers, so paged and contiguous decode are
-bit-identical by construction.
+The paged KV layout hands ``int_decode_attention`` (and the chunked
+``int_paged_prefill``) a physical pool ``(num_pages, page_size, Hkv,
+D)`` plus a per-slot page table ``pages: int32[B, max_pages]`` mapping
+logical block ``j`` of slot ``b`` to physical page ``pages[b, j]``.
+Backends that advertise the ``paged_decode`` / ``paged_prefill``
+capabilities consume the table directly (the ``pallas_fused`` kernels
+translate block indices through it in the scalar-prefetch index map);
+for every other backend the dispatch layer lowers the operand with
+:func:`gather_pages` — an exact gather into the contiguous ``(B,
+max_pages·page_size, Hkv, D)`` layout the existing contract already
+covers, so paged and contiguous attention are bit-identical by
+construction.  :func:`scatter_chunk` is the write-side twin: it lands a
+prefill chunk's new K/V in the physical pages a lane's table row maps —
+shared by the lowering, the oracle and the fused backend, so every path
+writes identical pool bytes.
 """
 from __future__ import annotations
 
@@ -33,3 +37,35 @@ def gather_pages(pool, pages, page_size: int):
     b, m = pages.shape
     flat = jnp.take(pool, pages.reshape(-1), axis=0)
     return flat.reshape(b, m * page_size, *pool.shape[2:])
+
+
+def scatter_chunk(pool, chunk, base_pos, pages, page_size: int):
+    """Write a prefill chunk's K/V through the page table.
+
+    ``pool``: ``(num_pages, page_size, ...)``; ``chunk``: ``(B, C, ...)``
+    new values for slot ``b``'s logical positions ``[base_pos[b],
+    base_pos[b] + C)``; ``pages``: ``(B, max_pages) int32``.  Returns
+    the updated pool: position ``p = base_pos[b] + j`` lands at
+    ``(pages[b, p // page_size], p % page_size)``.
+
+    Positions at or past the table span (``max_pages · page_size`` — a
+    padded chunk tail) and positions of lanes whose table row is unmapped
+    are routed to the reserved null page 0, whose contents are never
+    valid (``repro.serving.kvcache``): a chunk write can therefore never
+    corrupt a live position it does not own.  Overlapping null-page
+    writes from several lanes are fine for the same reason — nothing
+    observable reads them.
+    """
+    if pool.shape[1] != page_size:
+        raise ValueError(f"pool page dim {pool.shape[1]} != page_size "
+                         f"{page_size}")
+    pages = jnp.asarray(pages, jnp.int32)
+    base_pos = jnp.asarray(base_pos, jnp.int32)
+    b, m = pages.shape
+    c = chunk.shape[1]
+    pos = base_pos[:, None] + jnp.arange(c, dtype=jnp.int32)[None]  # (B,C)
+    blk = jnp.minimum(pos // page_size, m - 1)
+    page = jnp.take_along_axis(pages, blk, axis=1)            # (B, C)
+    page = jnp.where(pos < m * page_size, page, 0)            # pad -> null
+    off = pos % page_size
+    return pool.at[page, off].set(chunk)

@@ -26,8 +26,14 @@ from typing import Any, Callable, Dict, Optional, Protocol, Union, \
 ENV_VAR = "REPRO_BACKEND"
 DEFAULT_BACKEND = "ref"
 
-OP_NAMES = ("int8_matmul", "int_softmax", "int_gelu", "int_layernorm",
-            "int_attention", "int_decode_attention")
+# the six methods every backend MUST implement
+REQUIRED_OPS = ("int8_matmul", "int_softmax", "int_gelu", "int_layernorm",
+                "int_attention", "int_decode_attention")
+# ... plus ops that are pure capabilities: a backend advertising the
+# matching flag implements them natively, everyone else is served by an
+# exact lowering in OpSet (so OP_NAMES is what dispatch/overrides/
+# describe() route on, REQUIRED_OPS is what the protocol demands)
+OP_NAMES = REQUIRED_OPS + ("int_paged_prefill",)
 
 
 @runtime_checkable
@@ -62,6 +68,22 @@ class Backend(Protocol):
         into the decode launch, returning ``(B, Sq, N)``.  Without the
         flag the dispatch layer composes the backend's decode attention
         with its ``int8_matmul`` (bit-identical).
+
+    A third pair of optional capabilities serves the *chunked prefill*
+    path (:meth:`OpSet.int_paged_prefill` — scatter a prompt chunk's
+    K/V through the page table, then attend causally over history +
+    chunk):
+
+      * ``paged_prefill`` — the backend implements
+        ``int_paged_prefill`` natively (the fused prefill attention
+        kernel reading K/V through the page-table scalar-prefetch
+        operand).  Without the flag the dispatch layer lowers exactly:
+        ``scatter_chunk`` + ``gather_pages`` + the backend's own
+        ``int_decode_attention`` with ``valid_len = base_pos + C``
+        (whose stepped mask *is* the chunked causal mask).
+      * ``prefill_wo_fold`` — the backend folds the o-projection into
+        the prefill launch's epilogue, mirroring ``decode_wo_fold``.
+        Without it, decode-then-``int8_matmul`` (bit-identical).
     """
 
     name: str
@@ -85,14 +107,16 @@ class Backend(Protocol):
 
 
 def _is_backend(obj) -> bool:
-    """A backend *instance*: the six ops plus name/fused_attention.
+    """A backend *instance*: the six required ops plus
+    name/fused_attention (capability ops like ``int_paged_prefill`` are
+    optional — OpSet lowers them for backends without the flag).
 
     Classes are excluded — a registered class is a factory, and calling
     its unbound methods would misbind ``self``.
     """
     if isinstance(obj, type):
         return False
-    return (all(callable(getattr(obj, op, None)) for op in OP_NAMES)
+    return (all(callable(getattr(obj, op, None)) for op in REQUIRED_OPS)
             and isinstance(getattr(obj, "name", None), str)
             and hasattr(obj, "fused_attention"))
 
@@ -243,21 +267,7 @@ class OpSet:
             return be.int_decode_attention(q8, k8_cache, v8_cache, plan,
                                            valid_len, out_bits=out_bits,
                                            **kw, **opts)
-        from repro.ops.spec import QuantLinearParams
-        wo = QuantLinearParams.of(wo)
-        if wo_spec is None:
-            raise ValueError("folded wo projection needs wo_spec (the "
-                             "o-projection's RequantSpec)")
-        rq = opts.get("requant")
-        # the effective attention epilogue must clip to int8 — it feeds
-        # the int8 wo contraction (a wider epilogue would silently wrap
-        # in the lowering's astype below)
-        if rq is not None and (rq.is_raw or rq.out_bits > 8):
-            raise ValueError("wo folding needs an int8 attention "
-                             f"epilogue, got {rq}")
-        if rq is None and out_bits > 8:
-            raise ValueError("wo folding needs an int8 attention "
-                             f"epilogue, got out_bits={out_bits}")
+        wo = _validate_wo(wo, wo_spec, opts.get("requant"), out_bits)
         if getattr(be, "decode_wo_fold", False):
             return be.int_decode_attention(q8, k8_cache, v8_cache, plan,
                                            valid_len, out_bits=out_bits,
@@ -275,6 +285,86 @@ class OpSet:
         if not wo_spec.is_raw and wo_spec.out_bits <= 8:
             acc = acc.astype(jnp.int8)     # match the folded kernel's dtype
         return acc.reshape(b, sq, -1)
+
+    def int_paged_prefill(self, q8, k8_new, v8_new, k_pool, v_pool, plan,
+                          base_pos, pages, page_size: int,
+                          out_bits: int = 8, wo=None, wo_spec=None,
+                          **opts):
+        """Chunked paged prefill with capability negotiation.
+
+        Scatter the chunk's new K/V (``k8_new``/``v8_new``: ``(B, C,
+        Hkv, D)`` int8, RoPE applied) into the physical pools through
+        the page table, then run the chunk queries ``q8 (B, C, H, D)``
+        against history + chunk under the causal-over-history mask —
+        chunk row ``i`` of slot ``b`` sees positions ``≤ base_pos[b] +
+        i``.  Returns ``(o, k_pool, v_pool)``.
+
+        Backends advertising ``paged_prefill`` get the operands verbatim
+        (the fused prefill kernel reads K/V through the scalar-prefetched
+        table; ``prefill_wo_fold`` additionally folds ``wo=``/``wo_spec=``
+        into the launch).  For the rest this method lowers exactly —
+        ``scatter_chunk`` + ``gather_pages`` + the stepped-mask
+        :meth:`int_decode_attention` with ``valid_len = base_pos + C``
+        (which also negotiates the wo fold) — so callers get identical
+        integers from every backend.  Oracle:
+        ``kernels.ref.ref_int_paged_prefill``.
+        """
+        be = self.backend_for("int_paged_prefill")
+        if wo is not None:
+            wo = _validate_wo(wo, wo_spec, opts.get("requant"), out_bits)
+        if getattr(be, "paged_prefill", False):
+            kw = {}
+            if wo is not None and getattr(be, "prefill_wo_fold", False):
+                kw.update(wo=wo, wo_spec=wo_spec)
+                wo = None
+            o, k_pool, v_pool = be.int_paged_prefill(
+                q8, k8_new, v8_new, k_pool, v_pool, plan, base_pos,
+                pages, page_size, out_bits=out_bits, **kw, **opts)
+            if wo is None:
+                return o, k_pool, v_pool
+            # fold requested but the backend only does paged prefill:
+            # exact unfolded composition through its own matmul
+            import jax.numpy as jnp
+            b, c = o.shape[0], o.shape[1]
+            x8 = o.astype(jnp.int8).reshape(b * c, -1)
+            acc = be.int8_matmul(x8, wo.w8, wo_spec, bias32=wo.bias32,
+                                 b_vec=wo.b_mult)
+            if not wo_spec.is_raw and wo_spec.out_bits <= 8:
+                acc = acc.astype(jnp.int8)
+            return acc.reshape(b, c, -1), k_pool, v_pool
+        from repro.ops.paged import gather_pages, scatter_chunk
+        import jax.numpy as jnp
+        c = q8.shape[1]
+        k_pool = scatter_chunk(k_pool, k8_new, base_pos, pages, page_size)
+        v_pool = scatter_chunk(v_pool, v8_new, base_pos, pages, page_size)
+        kc = gather_pages(k_pool, pages, page_size)
+        vc = gather_pages(v_pool, pages, page_size)
+        vl = jnp.asarray(base_pos, jnp.int32) + c
+        o = self.int_decode_attention(q8, kc, vc, plan, vl,
+                                      out_bits=out_bits, wo=wo,
+                                      wo_spec=wo_spec, **opts)
+        return o, k_pool, v_pool
+
+
+def _validate_wo(wo, wo_spec, requant, out_bits: int):
+    """Shared wo-fold operand validation (decode and paged prefill):
+    normalizes ``wo`` to QuantLinearParams and rejects epilogues the
+    int8 fold/lowering would silently wrap on."""
+    from repro.ops.spec import QuantLinearParams
+    wo = QuantLinearParams.of(wo)
+    if wo_spec is None:
+        raise ValueError("folded wo projection needs wo_spec (the "
+                         "o-projection's RequantSpec)")
+    # the effective attention epilogue must clip to int8 — it feeds
+    # the int8 wo contraction (a wider epilogue would silently wrap
+    # in the lowering's astype)
+    if requant is not None and (requant.is_raw or requant.out_bits > 8):
+        raise ValueError("wo folding needs an int8 attention "
+                         f"epilogue, got {requant}")
+    if requant is None and out_bits > 8:
+        raise ValueError("wo folding needs an int8 attention "
+                         f"epilogue, got out_bits={out_bits}")
+    return wo
 
 
 # ------------------------------------------------------------ resolution --

@@ -1,8 +1,9 @@
 from repro.serving.engine import ServingEngine, Request
 from repro.serving.kvcache import (BlockAllocator, CacheLayout, NULL_PAGE,
                                    PagedKVCache, PagePoolExhausted,
-                                   PageTable, Session)
+                                   PageTable, PrefixEntry, PrefixIndex,
+                                   Session)
 
 __all__ = ["ServingEngine", "Request", "BlockAllocator", "CacheLayout",
            "NULL_PAGE", "PagedKVCache", "PagePoolExhausted", "PageTable",
-           "Session"]
+           "PrefixEntry", "PrefixIndex", "Session"]

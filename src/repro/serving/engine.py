@@ -1,10 +1,34 @@
 """Batched integer serving engine over a paged KV cache.
 
-The serving counterpart of the ASIC's control unit (§III-J): admits
-requests into fixed batch *lanes*, runs the INT8 prefill/decode datapath
-(int8 KV caches = the paper's quantization applied to the cache), and
-retires finished sequences — a continuous-batching-lite scheduler
-suitable for the fixed-shape XLA world.
+The serving counterpart of the ASIC's control unit (§III-J): a
+continuous-batching scheduler that admits requests into fixed batch
+*lanes*, runs the INT8 prefill/decode datapath (int8 KV caches = the
+paper's quantization applied to the cache), and retires finished
+sequences — all in the fixed-shape XLA world.
+
+Prefill (``prefill_chunk``):
+
+  * **chunked** (default on paged, full-causal, attention+ffn archs) —
+    prompts advance ``prefill_chunk`` tokens at a time through ONE
+    batched launch of the fused prefill attention kernel, writing K/V
+    straight into physical pages through the page table
+    (``models.inttransformer.int_prefill_chunk_step`` →
+    ``ops.int_paged_prefill``).  A prefill queue interleaves with decode
+    steps: ``prefill_budget`` caps the prompt tokens advanced per engine
+    step, so decoding sessions keep emitting a token every step while
+    long prompts stream in.  Bit-exact against token streaming.
+  * **streaming** — the PR 4 path: prompt tokens one at a time through
+    the decode step (sliding-window / SSM / MoE / cross archs, and the
+    contiguous layout).
+
+Prefix sharing (``prefix_cache``): prompts hash into a per-engine
+:class:`~repro.serving.kvcache.PrefixIndex` keyed by token prefixes —
+a session whose prompt starts with a previously prefilled prefix maps
+the *same physical pages* (allocator refcounts) and skips recomputing
+them; the first write into a shared page copy-on-writes it, so sharers
+can never corrupt each other and shared-prefix sessions produce token
+streams identical to unshared ones.  Under pool pressure the allocator
+reclaims cached prefix pages LRU-first.
 
 Cache layouts (``cache_mode``):
 
@@ -14,24 +38,29 @@ Cache layouts (``cache_mode``):
     cache memory is O(live tokens), pages recycle through a ref-counted
     allocator without zeroing (``valid_len`` masking makes stale
     contents unobservable), and a session can be **preempted** (pages
-    kept, lane freed) and later resumed bit-exactly.  The page table
-    rides into the decode kernel as a scalar-prefetch operand next to
-    ``valid_len``; backends without the ``paged_decode`` capability get
-    an exact gather-into-contiguous lowering (repro.ops dispatch).
+    kept, lane freed — mid-prefill included) and later resumed
+    bit-exactly.  The page table rides into the decode and prefill
+    kernels as a scalar-prefetch operand next to ``valid_len``; backends
+    without the ``paged_decode`` / ``paged_prefill`` capabilities get
+    exact gather/scatter lowerings (repro.ops dispatch).
   * ``"contiguous"`` — the PR 3 layout: one ``cache_len`` slab per lane.
 
 Every decode step dispatches through the configured backend's
 ``int_decode_attention`` — on ``pallas_fused`` one valid_len-masked
 kernel launch that skips dead cache blocks — and, with ``fold_wo``
 (default), folds each attention sublayer's output-projection per-channel
-requant into that launch's epilogue (bit-exact vs the unfolded path).
+requant into that launch's epilogue (``decode_wo_fold``; the chunked
+prefill launch folds it too via ``prefill_wo_fold``) — bit-exact vs the
+unfolded path.
 
-Shapes (batch lanes, page pool, logical cache length) are fixed at
-engine construction, so lanes and pages recycle without recompiling.
+Shapes (batch lanes, page pool, logical cache length, prefill chunk) are
+fixed at engine construction, so lanes and pages recycle without
+recompiling.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import warnings
 from typing import Callable, Dict, List, Optional
 
@@ -45,22 +74,38 @@ from repro.models.common import ArchConfig
 from repro.models.transformer import layer_group_spec
 from repro.ops import OP_NAMES, resolve_ops
 from repro.quant import plans as qplans
-from repro.serving.kvcache import (CacheLayout, PagePoolExhausted,
-                                   PagedKVCache, Session)
+from repro.serving.kvcache import (NULL_PAGE, CacheLayout,
+                                   PagePoolExhausted, PagedKVCache,
+                                   PrefixIndex, Session)
 
-# Process-level cache of compiled decode steps, keyed by everything the
-# traced closure captures (cfg, plans, shapes, cache geometry, the
-# resolved backend per op).  Two engines with the same key share ONE
-# executable, so (a) engine construction stops paying an XLA recompile
-# and (b) identical request streams produce identical tokens across
-# engine instances — separately compiled executables of the same program
-# are not guaranteed to agree to the last integer on every input (XLA
-# CPU compile variance), which shows up as cross-engine token divergence
-# in parity tests.  Bounded LRU (insertion order): a process sweeping
-# many distinct (shape, plan) combinations evicts the oldest executable
-# instead of pinning one per combination forever.
-_DECODE_STEP_CACHE: Dict[tuple, Callable] = {}
-_DECODE_STEP_CACHE_MAX = 8
+# Process-level cache of compiled engine steps (decode and chunked
+# prefill), keyed by everything the traced closure captures (cfg, plans,
+# shapes, cache geometry, chunk size, the resolved backend per op).  Two
+# engines with the same key share ONE executable, so (a) engine
+# construction stops paying an XLA recompile and (b) identical request
+# streams produce identical tokens across engine instances — separately
+# compiled executables of the same program are not guaranteed to agree
+# to the last integer on every input (XLA CPU compile variance), which
+# shows up as cross-engine token divergence in parity tests.  Bounded
+# LRU (insertion order): a process sweeping many distinct (shape, plan)
+# combinations evicts the oldest executable instead of pinning one per
+# combination forever.
+_STEP_CACHE: Dict[tuple, Callable] = {}
+_STEP_CACHE_MAX = 16
+
+
+def _cached_step(key, build: Callable[[], Callable]) -> Callable:
+    try:
+        hash(key)
+    except TypeError:
+        return build()              # private: key can't be shared
+    fn = _STEP_CACHE.pop(key, None)
+    if fn is None:
+        fn = build()
+    _STEP_CACHE[key] = fn           # (re-)insert most recent
+    while len(_STEP_CACHE) > _STEP_CACHE_MAX:
+        _STEP_CACHE.pop(next(iter(_STEP_CACHE)))
+    return fn
 
 
 @dataclasses.dataclass
@@ -78,7 +123,10 @@ class ServingEngine:
                  batch_size: int = 8, cache_len: int = 512,
                  ops=None, seed: int = 0, backend=None,
                  cache_mode: str = "paged", page_size: int = 16,
-                 num_pages: Optional[int] = None, fold_wo: bool = True):
+                 num_pages: Optional[int] = None, fold_wo: bool = True,
+                 prefill_chunk: Optional[int] = None,
+                 prefill_budget: Optional[int] = None,
+                 prefix_cache: bool = True):
         if backend is not None:
             warnings.warn("ServingEngine(backend=...) is deprecated; pass "
                           "ops= (an OpSet or backend name)",
@@ -87,6 +135,9 @@ class ServingEngine:
         if cache_mode not in ("paged", "contiguous"):
             raise ValueError(f"cache_mode must be 'paged' or 'contiguous',"
                              f" got {cache_mode!r}")
+        if prefill_budget is not None and prefill_budget < 1:
+            raise ValueError(f"prefill_budget must be >= 1 token/step, "
+                             f"got {prefill_budget}")
         self.cfg = cfg
         self.plans = plans
         self.qparams = qparams
@@ -107,6 +158,9 @@ class ServingEngine:
         decode_be = self.ops.backend_for("int_decode_attention")
         self.decode_fused = getattr(decode_be, "fused_decode", False)
         self.decode_paged_native = getattr(decode_be, "paged_decode", False)
+        self.prefill_paged_native = getattr(
+            self.ops.backend_for("int_paged_prefill"), "paged_prefill",
+            False)
         self.rng = np.random.default_rng(seed)
         self.rope_tab = il.build_rope_table(cache_len + 1, cfg.hd,
                                             cfg.rope_theta) \
@@ -127,19 +181,77 @@ class ServingEngine:
             self.layout = None
             self.kv = None
             self.caches = it.init_decode_cache(cfg, batch_size, cache_len)
+        self.prefill_chunk = self._resolve_prefill_chunk(prefill_chunk)
+        self._use_chunked = self.prefill_chunk > 0
+        self.prefill_budget = prefill_budget
+        self._chunkable = self.paged and it.chunked_prefill_supported(cfg)
+        if self._chunkable and prefix_cache:
+            self.prefix: Optional[PrefixIndex] = PrefixIndex(
+                self.kv.allocator, self.layout.page_size)
+            # pool pressure reclaims cached-but-unreferenced prefix
+            # pages before any allocation fails
+            self.kv.allocator.reclaim = self._reclaim_prefix
+        else:
+            self.prefix = None
+        self._cow_copies = 0
         self.pos = np.zeros(batch_size, np.int32)
         self.slots: List[Optional[Session]] = [None] * batch_size
         self.queue: List[Session] = []
         self._finished: List[Request] = []
         self._uid = 0
         self._decode = self._shared_decode_step()
+        self._prefill_step = self._shared_prefill_step() \
+            if self._use_chunked else None
+
+    def _resolve_prefill_chunk(self, prefill_chunk: Optional[int]) -> int:
+        """Validate/auto-size the prefill chunk.  0 disables chunked
+        prefill (token streaming); None auto-sizes it for eligible
+        engines.  Typed errors here, not kernel-shape failures later."""
+        chunkable = self.paged and it.chunked_prefill_supported(self.cfg)
+        if prefill_chunk is None:
+            if not chunkable:
+                return 0
+            ps = self.layout.page_size
+            # ~32-token chunks, page-compatible by construction
+            return min(ps * max(1, 32 // ps), self.layout.logical_len)
+        if prefill_chunk == 0:
+            return 0
+        if prefill_chunk < 0:
+            raise ValueError(f"prefill_chunk must be >= 0, got "
+                             f"{prefill_chunk}")
+        if not self.paged:
+            raise ValueError("prefill_chunk needs cache_mode='paged' "
+                             "(chunked prefill writes K/V through the "
+                             "page table)")
+        if not chunkable:
+            raise ValueError(
+                f"chunked prefill is unsupported for arch "
+                f"{self.cfg.name!r}: it needs window == 0 and "
+                "attention+ffn sublayers only (sliding-window, SSM, MoE "
+                "and cross-attention archs keep token-streaming "
+                "prefill); pass prefill_chunk=0")
+        ps = self.layout.page_size
+        if prefill_chunk % ps and ps % prefill_chunk:
+            raise ValueError(
+                f"prefill_chunk={prefill_chunk} must divide or be a "
+                f"multiple of page_size={ps} so chunk writes tile "
+                "physical pages")
+        return min(prefill_chunk, self.layout.logical_len)
 
     # ------------------------------------------------------ compiled step --
 
+    def _step_key(self, tag: str, *extra) -> tuple:
+        geometry = ("paged", self.layout.page_size, self.layout.num_pages,
+                    self.layout.max_pages, self.L) if self.paged \
+            else ("contiguous",)
+        return (tag, self.cfg, self.plans, self.batch, self.cache_len,
+                geometry, self.fold_wo, *extra,
+                tuple(id(self.ops.backend_for(op)) for op in OP_NAMES))
+
     def _shared_decode_step(self) -> Callable:
         """The jitted decode step, shared across same-shaped engines via
-        ``_DECODE_STEP_CACHE`` (falls back to a private jit when the key
-        is unhashable, e.g. exotic plan objects).
+        ``_STEP_CACHE`` (falls back to a private jit when the key is
+        unhashable, e.g. exotic plan objects).
 
         The callable closes over (plans, cfg, rope_tab, ops, cache
         geometry) only — never ``self`` — so a retired engine's weights,
@@ -158,23 +270,28 @@ class ServingEngine:
                                       pages=pages, page_size=page_size,
                                       max_len=max_len, fold_wo=fold_wo)
 
-        geometry = ("paged", self.layout.page_size, self.layout.num_pages,
-                    self.layout.max_pages, self.L) if self.paged \
-            else ("contiguous",)
-        try:
-            key = (self.cfg, self.plans, self.batch, self.cache_len,
-                   geometry, self.fold_wo,
-                   tuple(id(self.ops.backend_for(op)) for op in OP_NAMES))
-            hash(key)
-        except TypeError:
-            return jax.jit(step)            # private: key can't be shared
-        fn = _DECODE_STEP_CACHE.pop(key, None)
-        if fn is None:
-            fn = jax.jit(step)
-        _DECODE_STEP_CACHE[key] = fn            # (re-)insert most recent
-        while len(_DECODE_STEP_CACHE) > _DECODE_STEP_CACHE_MAX:
-            _DECODE_STEP_CACHE.pop(next(iter(_DECODE_STEP_CACHE)))
-        return fn
+        return _cached_step(self._step_key("decode"),
+                            lambda: jax.jit(step))
+
+    def _shared_prefill_step(self) -> Callable:
+        """The jitted chunked-prefill step (tokens (B, C), base_pos (B,),
+        prefill-view page table) -> new caches; cached exactly like the
+        decode step, with the chunk size in the key."""
+        plans, cfg, rope_tab, ops = (self.plans, self.cfg,
+                                     self.rope_tab, self.ops)
+        page_size = self.layout.page_size
+        fold_wo = self.fold_wo
+
+        def step(qparams, caches, tokens, base_pos, pages):
+            return it.int_prefill_chunk_step(qparams, caches, tokens,
+                                             base_pos, plans, cfg,
+                                             rope_tab, ops=ops,
+                                             pages=pages,
+                                             page_size=page_size,
+                                             fold_wo=fold_wo)
+
+        return _cached_step(self._step_key("prefill", self.prefill_chunk),
+                            lambda: jax.jit(step))
 
     # ------------------------------------------------------ scheduling ---
 
@@ -205,61 +322,201 @@ class ServingEngine:
                     self.queue.pop(0)
                     self._rebind(sess, slot)
                     continue
-                if self.paged and not self._reserve_prefill(sess):
+                if not self._try_bind_new(sess, slot):
                     break           # pool pressure: retry next step
-                self.queue.pop(0)
-                self._bind_new(sess, slot)
 
-    def _reserve_prefill(self, sess: Session) -> bool:
-        """Reserve the pages the prompt prefill will write, so admission
-        is all-or-nothing (no half-prefetched session stuck on a lane).
-        Returns False under transient pool pressure; raises
-        :class:`PagePoolExhausted` when the prompt can never fit."""
-        n_pre = min(len(sess.request.prompt) - 1, self.L)
-        blocks = -(-n_pre // self.layout.page_size) if n_pre > 0 else 0
-        if blocks > self.layout.num_pages - 1:
-            raise PagePoolExhausted(
-                f"prompt needs {blocks} pages, pool only has "
-                f"{self.layout.num_pages - 1}")
-        acquired = []
-        try:
-            while len(sess.pages) < blocks:
-                page = self.kv.allocator.alloc()
-                sess.pages.append(page)
-                acquired.append(page)
-        except PagePoolExhausted:
-            for page in acquired:
-                self.kv.allocator.release(page)
-                sess.pages.remove(page)
-            return False
-        return True
+    @staticmethod
+    def _n_pre(sess: Session) -> int:
+        return len(sess.request.prompt) - 1
 
-    def _bind_new(self, sess: Session, slot: int):
+    def _try_bind_new(self, sess: Session, slot: int) -> bool:
+        """Admit a queued session: longest-prefix lookup, all-or-nothing
+        page reservation for the rest of the prompt, lane binding.
+        Returns False under transient pool pressure (session stays
+        queued); raises :class:`PagePoolExhausted` when the prompt can
+        never fit."""
+        n_pre = self._n_pre(sess)
+        shared: List[int] = []
+        if self.prefix is not None and n_pre > 0:
+            hit = self.prefix.lookup(sess.request.prompt, n_pre)
+            if hit is not None:
+                shared = list(hit.pages)    # retained for this session
+                sess.prefill_pos = hit.count
+        if self.paged:
+            try:
+                reserved = self._reserve_prefill(sess, n_pre, shared)
+            except PagePoolExhausted:
+                # the never-fits raise must not leak the refcounts the
+                # prefix lookup retained (the caller may keep stepping)
+                for page in shared:
+                    self.kv.allocator.release(page)
+                sess.prefill_pos = 0
+                raise
+            if not reserved:
+                for page in shared:
+                    self.kv.allocator.release(page)
+                sess.prefill_pos = 0
+                return False
+        self.queue.pop(0)
         self.slots[slot] = sess
-        self.pos[slot] = 0
-        sess.pos = 0
+        self.pos[slot] = sess.prefill_pos
+        sess.pos = sess.prefill_pos
         if self.paged:
             self.kv.bind(sess, slot)
         else:
             sess.slot = slot
-            sess.state = "active"
+        sess.state = "prefilling"
         self._reset_slot_cache(slot)
-        self._prefill(slot, sess)
+        if sess.prefill_pos >= n_pre:
+            # nothing to prefill (single-token prompt or a full prefix
+            # hit): straight to decode
+            self._finish_prefill(slot, sess)
+        return True
+
+    def _reserve_prefill(self, sess: Session, n_pre: int,
+                         shared: List[int]) -> bool:
+        """Reserve the pages the prompt prefill will write, so admission
+        is all-or-nothing (no half-prefilled session stuck on a lane);
+        ``shared`` prefix pages already cover ``sess.prefill_pos``
+        tokens.  Chunk padding past the prompt needs no pages — the
+        scatter routes writes through unmapped table entries to the
+        null page.  Returns False under transient pool pressure; raises
+        :class:`PagePoolExhausted` when the prompt can never fit."""
+        span = min(n_pre, self.L)
+        blocks = -(-span // self.layout.page_size) if span > 0 else 0
+        need = blocks - len(shared)
+        # never-fits is judged on TOTAL blocks, shared pages included —
+        # they are pool pages too, so a prompt whose block count exceeds
+        # the pool can never fit no matter how much of it is cached
+        if blocks > self.layout.num_pages - 1:
+            raise PagePoolExhausted(
+                f"prompt needs {blocks} pages, pool only has "
+                f"{self.layout.num_pages - 1}")
+        acquired: List[int] = []
+        try:
+            while len(acquired) < need:
+                acquired.append(self.kv.allocator.alloc())
+        except PagePoolExhausted:
+            for page in acquired:
+                self.kv.allocator.release(page)
+            return False
+        sess.pages = shared + acquired
+        return True
 
     def _rebind(self, sess: Session, slot: int):
         """Resume a preempted session: reattach its page-table row and
-        position — its K/V pages were never touched, so decode continues
+        position — its K/V pages were never touched, so decode (or the
+        remaining prefill, for mid-prefill preemption) continues
         bit-exactly where it stopped."""
         self.slots[slot] = sess
         self.pos[slot] = sess.pos
         self.kv.bind(sess, slot)
+        if sess.last_token is None:
+            sess.state = "prefilling"   # preempted mid-prefill
 
-    def _prefill(self, slot: int, sess: Session):
-        """Prefill by streaming prompt tokens through decode (slot-local);
-        keeps every shape static."""
-        for t in sess.request.prompt[:-1]:
-            self._step_one(slot, t)
+    def _finish_prefill(self, slot: int, sess: Session):
+        n_pre = self._n_pre(sess)
+        sess.prefill_pos = n_pre
+        sess.state = "active"
+        self.pos[slot] = n_pre
+        sess.pos = n_pre
         sess.last_token = sess.request.prompt[-1]
+        if self.prefix is not None and n_pre > 0:
+            self.prefix.register(sess.request.prompt, n_pre, sess.pages)
+
+    # --------------------------------------------------------- prefill ---
+
+    def _advance_prefill(self):
+        """Advance prefilling lanes, at most ``prefill_budget`` prompt
+        tokens per engine step (None = finish them all, the
+        pre-scheduler semantics; the cap is chunk-granular — one chunk
+        minimum per step so the scheduler always progresses).  Chunked
+        engines batch the included lanes into one fused-kernel launch
+        per round; streaming engines feed tokens through the decode
+        step."""
+        budget = math.inf if self.prefill_budget is None \
+            else self.prefill_budget
+        while budget > 0:
+            lanes = [i for i, s in enumerate(self.slots)
+                     if s is not None and s.state == "prefilling"]
+            if not lanes:
+                return
+            if self._use_chunked:
+                budget -= self._prefill_chunk_round(lanes, budget)
+            else:
+                budget -= self._prefill_stream_round(lanes, budget)
+
+    def _prefill_stream_round(self, lanes: List[int], budget) -> int:
+        """Token-streaming prefill through the decode step (slot-local;
+        keeps every shape static)."""
+        spent = 0
+        for i in lanes:
+            sess = self.slots[i]
+            prompt = sess.request.prompt
+            n_pre = self._n_pre(sess)
+            while sess.prefill_pos < n_pre and spent < budget:
+                self._step_one(i, prompt[sess.prefill_pos])
+                sess.prefill_pos += 1
+                spent += 1
+            if sess.prefill_pos >= n_pre:
+                self._finish_prefill(i, sess)
+        return max(spent, 1)
+
+    def _prefill_chunk_round(self, lanes: List[int], budget) -> int:
+        """One batched chunk round through a single fused-prefill
+        launch.  Lanes are included while the remaining ``budget``
+        allows (chunk granularity, one lane minimum so the scheduler
+        always progresses); the rest wait for the next engine step.
+        Returns the real prompt tokens advanced (pad tokens are free —
+        their K/V writes land on positions decode overwrites before
+        ``valid_len`` marks them live, or on the null page)."""
+        C = self.prefill_chunk
+        ps = self.layout.page_size
+        logical = self.layout.logical_len
+        toks = np.zeros((self.batch, C), np.int32)
+        base = np.zeros(self.batch, np.int32)
+        spent = 0
+        included: List[int] = []
+        for i in lanes:
+            if included and spent >= budget:
+                break               # chunk-granularity budget cap
+            sess = self.slots[i]
+            prompt = sess.request.prompt
+            b0 = sess.prefill_pos
+            base[i] = b0
+            real = min(C, self._n_pre(sess) - b0)
+            toks[i, :real] = prompt[b0:b0 + real]
+            spent += real
+            included.append(i)
+            # copy-on-write any shared (prefix-index / multi-session)
+            # page this chunk will write into — only the partially
+            # filled page at an unaligned prefix boundary can be shared
+            blk_hi = (min(b0 + C, logical) - 1) // ps
+            for blk in range(b0 // ps, min(blk_hi + 1, len(sess.pages))):
+                if self.kv.allocator.refcount[sess.pages[blk]] > 1:
+                    self._cow(sess, blk)
+        lanes = included
+        # the prefill *view* of the page table: rows of lanes not in
+        # this round (idle, decoding, or budgeted out) are nulled, so
+        # their (discarded) chunk writes land on the null page instead
+        # of live pages
+        view = self.kv.page_table.snapshot()
+        for slot in range(self.batch):
+            if slot not in lanes:
+                view[slot] = NULL_PAGE
+        self.caches = self._prefill_step(self.qparams, self.caches,
+                                         jnp.asarray(toks),
+                                         jnp.asarray(base),
+                                         jnp.asarray(view))
+        for i in lanes:
+            sess = self.slots[i]
+            n_pre = self._n_pre(sess)
+            sess.prefill_pos = min(sess.prefill_pos + C, n_pre)
+            self.pos[i] = sess.prefill_pos
+            sess.pos = sess.prefill_pos
+            if sess.prefill_pos >= n_pre:
+                self._finish_prefill(i, sess)
+        return max(spent, 1)
 
     def _reset_slot_cache(self, slot: int):
         """Zero a recycled lane's lane-indexed cache state (Mamba SSD
@@ -280,10 +537,50 @@ class ServingEngine:
 
     # --------------------------------------------------- paged bookkeeping
 
+    def _reclaim_prefix(self):
+        """Allocator pressure hook: evict prefix-index entries LRU-first
+        until a page frees (or the index drains) — cached prefixes cost
+        only otherwise-idle pages."""
+        while self.kv.allocator.free_pages == 0 and self.prefix is not None \
+                and self.prefix.evict_lru():
+            pass
+
+    def _cow(self, sess: Session, blk: int):
+        """Copy-on-write: give ``sess`` a private copy of a shared page
+        before a write lands on it.  Shared pages arise from the prefix
+        index (and sessions sharing a prefix through it); copying before
+        the first divergent write keeps every sharer's — and the cached
+        prefix's — K/V bit-exact."""
+        old = sess.pages[blk]
+        try:
+            new = self.kv.allocator.alloc()
+        except PagePoolExhausted:
+            # the allocator's pressure reclaim may have just evicted the
+            # prefix entries that shared this page — if the session is
+            # now its only holder, write in place instead of copying
+            if self.kv.allocator.refcount[old] == 1:
+                return
+            raise
+        new_caches = []
+        for c in self.caches:
+            nc = dict(c)
+            for key in ("k8", "v8"):
+                if key in c:
+                    nc[key] = c[key].at[:, new].set(c[key][:, old])
+            new_caches.append(nc)
+        self.caches = new_caches
+        self.kv.allocator.release(old)
+        sess.pages[blk] = new
+        if sess.slot is not None:
+            self.kv.page_table.table[sess.slot, blk] = new
+        self._cow_copies += 1
+
     def _ensure_write_pages(self):
         """Before a decode step, make the page under every live lane's
         write position resident (append-only allocation; raises
-        :class:`PagePoolExhausted` when the pool is out)."""
+        :class:`PagePoolExhausted` when the pool is out) and exclusively
+        owned (copy-on-write for pages shared through the prefix
+        index)."""
         if not self.paged:
             return
         for slot, sess in enumerate(self.slots):
@@ -291,11 +588,16 @@ class ServingEngine:
                 continue
             p = int(self.pos[slot])
             wslot = p % self.cfg.window if self.cfg.window > 0 else p
-            self.kv.ensure(sess, min(wslot, self.L - 1))
+            wslot = min(wslot, self.L - 1)
+            self.kv.ensure(sess, wslot)
+            blk = wslot // self.layout.page_size
+            if self.kv.allocator.refcount[sess.pages[blk]] > 1:
+                self._cow(sess, blk)
 
     def evict(self, sess: Session):
         """Cancel a session: free its lane and release every page it
-        owns (they return to the allocator at refcount zero)."""
+        owns (they return to the allocator at refcount zero — pages the
+        prefix index also holds stay cached for future prompts)."""
         if sess in self.queue:
             self.queue.remove(sess)
         if sess.slot is not None:
@@ -310,15 +612,17 @@ class ServingEngine:
     def preempt(self, sess: Session):
         """Take a live session off its lane but keep its pages: it goes
         back to the queue head and resumes bit-exactly (same physical
-        K/V) when a lane frees up.  Paged mode only — the contiguous
-        layout ties cache contents to the lane."""
+        K/V) when a lane frees up — decoding sessions resume decode,
+        mid-prefill sessions resume the prompt at ``prefill_pos``.
+        Paged mode only — the contiguous layout ties cache contents to
+        the lane."""
         if not self.paged:
             raise ValueError("preempt needs cache_mode='paged' (the "
                              "contiguous layout ties K/V to the lane)")
         if self._has_ssm:
             raise ValueError("preempt is unsupported for SSM/hybrid "
                              "archs: Mamba state is lane-indexed")
-        if sess.state != "active" or sess.slot is None:
+        if sess.state not in ("active", "prefilling") or sess.slot is None:
             raise ValueError(f"cannot preempt session in state "
                              f"{sess.state!r}")
         slot = sess.slot
@@ -376,12 +680,16 @@ class ServingEngine:
         return np.asarray(logits[slot])
 
     def step(self) -> int:
-        """One engine step: admit + one batched decode for live lanes.
-        Returns the number of live sessions."""
+        """One engine step: admit, advance prefill (budgeted), and one
+        batched decode for lanes whose prefill is complete.  Returns the
+        number of occupied lanes."""
         self._admit()
-        live = [i for i, s in enumerate(self.slots) if s is not None]
+        self._advance_prefill()
+        occupied = sum(s is not None for s in self.slots)
+        live = [i for i, s in enumerate(self.slots)
+                if s is not None and s.state == "active"]
         if not live:
-            return 0
+            return occupied
         toks = np.zeros(self.batch, np.int32)
         for i in live:
             toks[i] = self.slots[i].last_token
@@ -405,19 +713,25 @@ class ServingEngine:
             if len(req.out_tokens) >= req.max_new_tokens \
                     or self.pos[i] >= self.cache_len - 1:
                 self._retire(i)
-        return len(live)
+        return occupied
 
     # ------------------------------------------------------ introspection --
 
     def describe(self) -> dict:
-        """Structured engine signature: backend ids, decode mode, cache
-        geometry and live page-pool stats.  ``describe_str()`` derives
-        the one-line log form from this dict."""
+        """Structured engine signature: backend ids, decode/prefill
+        modes, cache geometry, live page-pool and prefix-cache stats.
+        ``describe_str()`` derives the one-line log form from this
+        dict."""
         if self.paged:
             cache = dict(mode="paged", **self.kv.stats())
             cache["live_tokens"] = int(sum(
                 s.live_tokens for s in self.slots if s is not None)
                 + sum(s.live_tokens for s in self.queue))
+            cache["shared_pages"] = int(
+                (self.kv.allocator.refcount[1:] > 1).sum())
+            cache["cow_copies"] = self._cow_copies
+            cache["prefix"] = self.prefix.stats() \
+                if self.prefix is not None else None
         else:
             cache = {"mode": "contiguous"}
         cache["kv_bytes"] = int(sum(
@@ -429,6 +743,12 @@ class ServingEngine:
                          for op in OP_NAMES},
             "attn": "fused" if self.attn_fused else "two-pass",
             "decode": "fused" if self.decode_fused else "oracle",
+            "prefill": {
+                "mode": "chunked" if self._use_chunked else "streaming",
+                "chunk": self.prefill_chunk,
+                "budget": self.prefill_budget,
+                "paged_native": self.prefill_paged_native,
+            },
             "fold_wo": self.fold_wo,
             "batch": self.batch,
             "cache_len": self.cache_len,
@@ -445,9 +765,15 @@ class ServingEngine:
                      f"{c['pages_used']}/{c['num_pages'] - 1} used]")
         else:
             cache = "contiguous"
+        pf = d["prefill"]
+        prefill = f"chunked:{pf['chunk']}" if pf["mode"] == "chunked" \
+            else "streaming"
+        if c.get("prefix") is not None:
+            prefill += f"+prefix[{c['prefix']['entries']}]"
         return (f"ops={d['ops']} attn={d['attn']} decode={d['decode']} "
-                f"fold_wo={str(d['fold_wo']).lower()} cache={cache} "
-                f"batch={d['batch']} cache_len={d['cache_len']}")
+                f"prefill={prefill} fold_wo={str(d['fold_wo']).lower()} "
+                f"cache={cache} batch={d['batch']} "
+                f"cache_len={d['cache_len']}")
 
     def run_until_done(self, max_steps: int = 10000) -> List[Request]:
         """Step until queue and lanes drain; returns the requests that

@@ -30,15 +30,18 @@ Invariants (normative — the kernel and the allocator both rely on them):
   * Pages are written append-only per session and are **never zeroed on
     reuse**: ``valid_len`` masking makes stale contents unobservable, so
     an evict → re-admit cycle reuses freed pages bit-exactly.
-  * A page's refcount is the number of sessions holding it; it returns
-    to the free list exactly when the count reaches zero.  Live lanes
-    never share a page (sharing only arises for preempted sessions,
-    which hold their pages without occupying a lane).
+  * A page's refcount is the number of holders — sessions *plus*
+    :class:`PrefixIndex` entries; it returns to the free list exactly
+    when the count reaches zero.  Live lanes never share a page **they
+    write**: read-only prompt-prefix pages may be mapped by several
+    sessions at once (that is the whole point of prefix sharing), and
+    the engine copy-on-writes any page with refcount > 1 before the
+    first write lands on it.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -124,12 +127,19 @@ class BlockAllocator:
         self.refcount = np.zeros(num_pages, np.int32)
         self.refcount[NULL_PAGE] = 1          # pinned forever
         self._free: List[int] = list(range(num_pages - 1, NULL_PAGE, -1))
+        # optional pressure hook: invoked once when alloc() finds the
+        # free list empty, *before* raising — the engine points it at
+        # the prefix-index LRU eviction so cached-but-unreferenced
+        # prefix pages are reclaimed instead of failing the allocation
+        self.reclaim: Optional[Callable[[], None]] = None
 
     # ------------------------------------------------------------ alloc --
 
     def alloc(self) -> int:
         """Hand out a free page at refcount 1, or raise
         :class:`PagePoolExhausted`."""
+        if not self._free and self.reclaim is not None:
+            self.reclaim()
         if not self._free:
             raise PagePoolExhausted(
                 f"page pool exhausted: all {self.num_pages - 1} "
@@ -214,20 +224,137 @@ class Session:
     """A request's cache identity: the pages it owns and where it is.
 
     Sessions — not lanes — own pages: a preempted session keeps its
-    ``pages`` (and ``pos``/``last_token``) while freeing its lane, so a
-    later resume continues bit-exactly from the same physical cache."""
+    ``pages`` (and ``pos``/``prefill_pos``/``last_token``) while
+    freeing its lane, so a later resume continues bit-exactly from the
+    same physical cache — mid-prefill preemption included (the chunked
+    scheduler resumes the prompt at ``prefill_pos``)."""
 
     uid: int
     request: object = None
-    state: str = "queued"          # queued | active | preempted | done
-    slot: Optional[int] = None     # lane while active, else None
+    # queued | prefilling | active | preempted | done
+    state: str = "queued"
+    slot: Optional[int] = None     # lane while on one, else None
     pages: List[int] = dataclasses.field(default_factory=list)
     pos: int = 0
+    prefill_pos: int = 0      # prompt tokens whose K/V are in pages
     last_token: Optional[int] = None
 
     @property
     def live_tokens(self) -> int:
         return self.pos
+
+
+@dataclasses.dataclass
+class PrefixEntry:
+    """One cached prompt prefix: the physical pages holding the K/V of
+    ``tokens`` (positions ``[0, count)``; the last page may be partial —
+    a sharer's first write into it copy-on-writes)."""
+
+    tokens: Tuple[int, ...]
+    pages: Tuple[int, ...]
+    count: int
+    stamp: int = 0                 # LRU clock tick of the last touch
+
+
+class PrefixIndex:
+    """Per-engine cross-session prompt-prefix table.
+
+    Maps token prefixes to the physical pages already holding their K/V,
+    so a session whose prompt starts with a previously-prefilled prefix
+    maps the *same* pages instead of recomputing them.  Correctness rests
+    on full causal attention: K/V at position ``i`` depend only on tokens
+    ``0..i``, so any two prompts sharing their first ``c`` tokens share
+    the first ``c`` positions of K/V bit-for-bit (the engine gates the
+    index to ``window == 0`` attention-only archs accordingly).
+
+    The index holds its **own** refcount on every page an entry maps —
+    entries outlive the sessions that created them, and the pages stay
+    immutable because the engine copy-on-writes any page with
+    refcount > 1 before writing it.  Under pool pressure the allocator's
+    ``reclaim`` hook evicts entries LRU-first, so cached prefixes cost
+    only otherwise-idle pages.
+    """
+
+    def __init__(self, allocator: BlockAllocator, page_size: int):
+        self.allocator = allocator
+        self.page_size = page_size
+        self.entries: Dict[Tuple[int, ...], PrefixEntry] = {}
+        self.clock = 0
+        self.hits = 0
+        self.misses = 0
+        self.tokens_reused = 0
+        self.evictions = 0
+
+    # ----------------------------------------------------------- lookup --
+
+    def lookup(self, prompt, n_pre: int) -> Optional[PrefixEntry]:
+        """Longest registered prefix of ``prompt[:n_pre]``; retains the
+        entry's pages *for the caller* (who must release them if it
+        abandons the admission)."""
+        self.clock += 1
+        lengths = sorted({e.count for e in self.entries.values()
+                          if e.count <= n_pre}, reverse=True)
+        for ln in lengths:
+            entry = self.entries.get(tuple(prompt[:ln]))
+            if entry is not None:
+                entry.stamp = self.clock
+                for page in entry.pages:
+                    self.allocator.retain(page)
+                self.hits += 1
+                self.tokens_reused += entry.count
+                return entry
+        self.misses += 1
+        return None
+
+    def register(self, prompt, n_pre: int, pages: List[int]):
+        """Register a freshly prefilled prompt's prefixes: one entry per
+        full-page boundary plus the (possibly page-unaligned) full
+        ``n_pre`` length, each retaining its pages.  Existing entries are
+        kept (their pages are already immutable)."""
+        ps = self.page_size
+        marks = list(range(ps, n_pre + 1, ps))
+        if n_pre > 0 and (not marks or marks[-1] != n_pre):
+            marks.append(n_pre)
+        for count in marks:
+            key = tuple(prompt[:count])
+            if key in self.entries:
+                self.entries[key].stamp = self.clock
+                continue
+            held = tuple(pages[:-(-count // ps)])
+            for page in held:
+                self.allocator.retain(page)
+            self.clock += 1
+            self.entries[key] = PrefixEntry(key, held, count, self.clock)
+
+    # --------------------------------------------------------- eviction --
+
+    def evict_lru(self) -> bool:
+        """Drop the least-recently-used entry (its pages return to the
+        free list once no session holds them).  Returns False on an
+        empty index."""
+        if not self.entries:
+            return False
+        key = min(self.entries, key=lambda k: self.entries[k].stamp)
+        for page in self.entries[key].pages:
+            self.allocator.release(page)
+        del self.entries[key]
+        self.evictions += 1
+        return True
+
+    def clear(self):
+        while self.evict_lru():
+            pass
+
+    # ------------------------------------------------------------- stats --
+
+    def stats(self) -> dict:
+        return {
+            "entries": len(self.entries),
+            "hits": self.hits,
+            "misses": self.misses,
+            "tokens_reused": self.tokens_reused,
+            "evictions": self.evictions,
+        }
 
 
 class PagedKVCache:

@@ -1,0 +1,161 @@
+"""Property-based schedule sweep for the chunked-prefill scheduler.
+
+Hypothesis drives random submit/step/preempt/evict interleavings —
+prompts drawn from a small pool of shared-prefix stems, engines spanning
+pool sizes, chunk sizes, budgets and prefix-cache on/off — against the
+full ``ServingEngine`` and asserts, after every operation:
+
+  * the allocator's partition invariant (``check()``);
+  * exact refcount accounting: every page's refcount equals the number
+    of session page-lists plus prefix-index entries holding it;
+  * greedy determinism: each retired request's token stream equals the
+    solo reference run of the same prompt (batch independence + chunked
+    prefill + prefix sharing + copy-on-write must not change a single
+    token); partially-generated (evicted) requests match a prefix.
+
+Pool exhaustion mid-schedule is legal under pressure: the sweep evicts
+a random live session and carries on.  Deterministic edge cases live in
+``test_chunked_prefill.py``; this module needs the optional
+``hypothesis`` dev dependency.
+"""
+import collections
+
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis "
+                           "(pip install -r requirements-dev.txt)")
+import jax
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import get_config
+from repro.models import model as M
+from repro.models import transformer as tf
+from repro.quant import convert
+from repro.serving import PagePoolExhausted, Request, ServingEngine
+
+MAX_NEW = 3
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = M.reduce_config(get_config("llama3-8b"), dtype="float32",
+                          vocab=128, num_layers=1)
+    params = tf.init_params(jax.random.key(0), cfg)
+    qp, plans = convert.quantize_params(params, cfg)
+    return cfg, qp, plans, {}               # {} = expected-stream cache
+
+
+def _prompt_pool():
+    rng = np.random.default_rng(3)
+    stem = list(map(int, rng.integers(1, 100, 20)))
+    return [
+        stem,                                # full stem
+        stem[:-1] + [101],                   # shared prefix, diverges
+        stem[:9],                            # shorter shared prefix
+        list(map(int, rng.integers(1, 100, 13))),   # disjoint
+        [5, 9],                              # tiny
+        [42],                                # single token (no prefill)
+    ]
+
+
+PROMPTS = _prompt_pool()
+
+
+def _expected(setup, prompt):
+    """Solo greedy reference for one prompt (contiguous, streaming, no
+    sharing) — memoized across hypothesis examples."""
+    cfg, qp, plans, cache = setup
+    key = tuple(prompt)
+    if key not in cache:
+        eng = ServingEngine(qp, plans, cfg, batch_size=2, cache_len=64,
+                            ops="ref", cache_mode="contiguous")
+        req = Request(uid=0, prompt=list(prompt), max_new_tokens=MAX_NEW)
+        eng.submit(req)
+        eng.run_until_done()
+        cache[key] = list(req.out_tokens)
+    return cache[key]
+
+
+def _check_refcounts(eng, sessions):
+    eng.kv.allocator.check()
+    held = collections.Counter()
+    for sess in sessions:
+        held.update(sess.pages)
+    if eng.prefix is not None:
+        for entry in eng.prefix.entries.values():
+            held.update(entry.pages)
+    for page in range(1, eng.layout.num_pages):
+        assert eng.kv.allocator.refcount[page] == held.get(page, 0), \
+            f"page {page}: refcount {eng.kv.allocator.refcount[page]} " \
+            f"vs holders {held.get(page, 0)}"
+
+
+@given(
+    schedule=st.lists(
+        st.tuples(st.sampled_from(["submit", "step", "preempt", "evict"]),
+                  st.integers(0, 5)),
+        max_size=24),
+    num_pages=st.integers(5, 11),
+    chunk=st.sampled_from([0, 8, 16, 32]),
+    budget=st.sampled_from([None, 4, 16]),
+    prefix=st.booleans(),
+)
+@settings(max_examples=8, deadline=None)
+def test_random_schedules_are_bit_exact_and_leak_free(
+        setup, schedule, num_pages, chunk, budget, prefix):
+    cfg, qp, plans, _ = setup
+    eng = ServingEngine(qp, plans, cfg, batch_size=2, cache_len=64,
+                        ops="ref", page_size=8, num_pages=num_pages,
+                        prefill_chunk=chunk, prefill_budget=budget,
+                        prefix_cache=prefix)
+    requests, sessions = [], []
+    uid = 0
+
+    def relieve():
+        live = [s for s in sessions
+                if s.state in ("prefilling", "active", "preempted")]
+        if live:
+            eng.evict(live[0])
+
+    for op, arg in schedule:
+        try:
+            if op == "submit":
+                req = Request(uid=uid, prompt=list(PROMPTS[arg]),
+                              max_new_tokens=MAX_NEW)
+                uid += 1
+                requests.append(req)
+                sessions.append(eng.submit(req))
+            elif op == "step":
+                eng.step()
+            elif op == "preempt":
+                live = [s for s in sessions
+                        if s.state in ("active", "prefilling")]
+                if live:
+                    eng.preempt(live[arg % len(live)])
+            elif op == "evict":
+                live = [s for s in sessions if s.state not in ("done",)]
+                live = [s for s in live
+                        if s.pages or s in eng.queue or s.slot is not None]
+                if live:
+                    eng.evict(live[arg % len(live)])
+        except PagePoolExhausted:
+            relieve()                        # legal under pool pressure
+        _check_refcounts(eng, sessions)
+
+    for _ in range(400):                     # drain, relieving pressure
+        if not eng.queue and all(s is None for s in eng.slots):
+            break
+        try:
+            eng.step()
+        except PagePoolExhausted:
+            relieve()
+    _check_refcounts(eng, sessions)
+
+    for req in requests:
+        want = _expected(setup, req.prompt)
+        if req.done:
+            assert req.out_tokens == want, req.prompt
+        else:
+            assert req.out_tokens == want[:len(req.out_tokens)], req.prompt

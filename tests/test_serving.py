@@ -107,6 +107,9 @@ def test_describe_is_structured_with_derived_string(engine_setup):
     eng.step()
     assert eng.describe()["cache"]["pages_used"] > 0
     eng.run_until_done()
+    # the prefix index keeps the prompt's pages cached after the drain;
+    # clearing it returns them all
+    eng.prefix.clear()
     assert eng.describe()["cache"]["pages_used"] == 0
 
     cont = ServingEngine(qp, plans, cfg, batch_size=2, cache_len=64,
