@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import activations as act
-from repro.core import intmath, norms
+from repro.core import intmath
 from repro.core import softmax as ism
 
 

@@ -10,7 +10,7 @@ import numpy as np
 
 from repro import ops
 from repro.core import attention as iattn
-from repro.core import intmath, norms
+from repro.core import norms
 from repro.core import softmax as ism
 from repro.core.dyadic import fit_dyadic
 from repro.ops import RequantSpec

@@ -1,9 +1,11 @@
-"""Schema sanity check for the machine-readable ``BENCH_*.json`` files.
+"""Schema sanity check for the machine-readable JSON artifacts
+(``BENCH_*.json`` and the static-certification ``CERTIFY.json``).
 
-CI's bench-smoke job runs this right after ``run.py --quick``: the
-benchmark JSON artifacts are consumed by tooling tracking the perf
-trajectory per commit, so a bench refactor that silently changes or
-drops a field should fail the build, not the downstream dashboards.
+CI's bench-smoke job runs this right after ``run.py --quick`` (and the
+static-analysis job right after ``repro.analysis.certify``): the JSON
+artifacts are consumed by tooling tracking the perf/certification
+trajectory per commit, so a refactor that silently changes or drops a
+field should fail the build, not the downstream dashboards.
 
 The validator is a ~30-line structural checker (no external jsonschema
 dependency): a schema is a dict mapping field name -> type | nested
@@ -38,12 +40,33 @@ SERVING_CONFIG = {
     "prefix_hit_rate": (int, float, type(None)),
 }
 
+# per-config entry of CERTIFY.json: only "ok" is shared between the
+# certified shape (worst_bits/ops/assumptions) and the failed shape
+# (error {what, value, budget, op, layer, message}) — the checker has
+# no conditionals, so require the common field and let extras pass
+CERTIFY_CONFIG = {
+    "ok": bool,
+}
+
 SCHEMAS = {
     "BENCH_serving.json": {
         "configs": {...: SERVING_CONFIG},
         "parity": bool,
         "arch": str,
         "quick": bool,
+    },
+    "CERTIFY.json": {
+        "schema": str,
+        "seq_len": int,
+        "cache_len": int,
+        "budgets": {
+            "INT32_MAX": int,
+            "MAX_ROWSUM_LEN": int,
+            "MAX_SQ": int,
+        },
+        "n_configs": int,
+        "n_failed": int,
+        "configs": {...: CERTIFY_CONFIG},
     },
 }
 
@@ -99,8 +122,12 @@ def check_file(path: str) -> list:
 
 
 def main(argv=None) -> int:
-    paths = (argv or sys.argv[1:]) \
-        or sorted(glob.glob(os.path.join(HERE, "BENCH_*.json")))
+    paths = list(argv if argv is not None else sys.argv[1:])
+    if not paths:
+        paths = sorted(glob.glob(os.path.join(HERE, "BENCH_*.json")))
+        certify = os.path.join(HERE, "CERTIFY.json")
+        if os.path.exists(certify):
+            paths.append(certify)
     if not paths:
         print("check_bench_json: no BENCH_*.json files found",
               file=sys.stderr)

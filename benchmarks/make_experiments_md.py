@@ -10,7 +10,7 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from benchmarks.report import cell_row, full_table, render_markdown
+from benchmarks.report import full_table, render_markdown
 from repro.configs.registry import ASSIGNED
 from repro.models.common import SHAPES
 
@@ -70,7 +70,7 @@ def write_tables():
     with open("experiments/roofline_table.md", "w") as f:
         f.write("# Roofline table (single-pod 16x16, per device)\n\n")
         f.write(f"cells: {ok} ok / {fail} fail / {skip} skip "
-                f"(both meshes)\n\n")
+                "(both meshes)\n\n")
         f.write(render_markdown(full_table()))
         f.write("\n\n# Dry-run records (both meshes)\n\n")
         f.write(dryrun_section())

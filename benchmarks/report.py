@@ -2,13 +2,11 @@
 table (per-cell three terms, bottleneck, MODEL_FLOPS ratio)."""
 from __future__ import annotations
 
-import glob
 import json
 import os
 from typing import Dict, List, Optional
 
-from benchmarks.roofline import (HBM_BW, ICI_BW, PEAK_FLOPS,
-                                 model_flops, roofline_terms)
+from benchmarks.roofline import model_flops, roofline_terms
 from repro.configs.registry import ASSIGNED, get_config
 from repro.models.common import SHAPES
 from repro.models.transformer import layer_group_spec

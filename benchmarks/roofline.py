@@ -14,9 +14,8 @@ the optimized HLO with while-loop trip counts multiplied through.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 PEAK_FLOPS = 197e12          # bf16 / chip
 PEAK_FLOPS_INT8 = 394e12
@@ -105,11 +104,8 @@ def parse_hlo_collectives(text: str) -> Tuple[List[CollectiveOp],
 
     # propagate multipliers from the entry
     mult: Dict[str, float] = {}
-    entry = order[0] if order else "ENTRY"
     for c in comp_lines:
         mult.setdefault(c, 1.0)
-    roots = [c for c in comp_lines if c.startswith(("main", "ENTRY"))
-             or c == entry]
     mult_final = {c: 1.0 for c in comp_lines}
     changed = True
     it = 0

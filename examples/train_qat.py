@@ -19,7 +19,6 @@ from repro.configs.registry import get_config
 from repro.data.pipeline import SyntheticLMDataset
 from repro.distributed.fault import FaultTolerantLoop, StragglerDetector
 from repro.models import inttransformer as it
-from repro.models import model as M
 from repro.models import transformer as tf
 from repro.optim import adamw_init
 from repro.optim.adamw import AdamWConfig

@@ -1,0 +1,320 @@
+"""Offline Pallas kernel-contract checking: :func:`check_launch`.
+
+Every kernel wrapper in ``repro.kernels`` guards its launch with
+preconditions — tile divisibility, the ``MAX_SKV``/``MAX_SQ`` budgets,
+page-size constraints, scalar-prefetch operand shapes.  This module
+states those contracts *declaratively and without executing anything*
+(pure Python, no jax import), so they can be
+
+  * checked offline — "would this shape take the fused kernel or fall
+    back, and why?" (:func:`check_launch` returns a
+    :class:`LaunchReport` with the predicted grid, block shapes,
+    scalar-prefetch operands and a VMEM footprint estimate);
+  * enforced in-kernel — the wrappers call :func:`require_launch`,
+    which raises :class:`KernelContractError` (an ``AssertionError``
+    subclass, so pre-existing ``assert``-expecting callers and tests
+    keep working) with every violated clause named;
+  * consulted by the dispatching backends — :func:`can_tile`,
+    :func:`can_tile_decode` and :func:`can_tile_prefill` are the
+    fused-vs-fallback tiling policy ``ops.backends.pallas_fused``
+    delegates to.
+
+The contract clauses mirror the kernel wrappers clause-for-clause; a
+report with ``ok=False`` predicts an ``AssertionError`` from the kernel,
+``fused=False`` predicts the backend's exact fallback path.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.analysis.budgets import MAX_ROWSUM_LEN, MAX_SQ
+
+#: the online (one-pass) kernel's own row budget: its running rescale
+#: bounds the accumulator differently, see kernels/int_attention.py
+MAX_SKV_ONLINE = 1 << 16
+
+#: backend tiling-policy default (ops.backends.pallas_fused min_block)
+MIN_BLOCK = 16
+
+
+class KernelContractError(AssertionError):
+    """A kernel launch precondition is violated.
+
+    Subclasses ``AssertionError``: the kernels historically ``assert``-ed
+    these clauses, and callers/tests relying on that contract must keep
+    working.  Fields: ``op`` (kernel name), ``reasons`` (every violated
+    clause, human-readable, location-bearing).
+    """
+
+    def __init__(self, op: str, reasons):
+        self.op = op
+        self.reasons = tuple(reasons)
+        super().__init__(
+            f"{op} launch contract violated: " + "; ".join(self.reasons))
+
+
+@dataclasses.dataclass(frozen=True)
+class LaunchReport:
+    """What a kernel launch would look like, statically.
+
+    ``ok``     — the kernel's own preconditions hold (False predicts an
+                 in-wrapper assertion);
+    ``fused``  — the backend tiling policy would take the fused kernel
+                 (False predicts the documented exact fallback);
+    ``reasons``— every violated / declining clause;
+    ``grid``   — the Pallas grid the launch would use;
+    ``blocks`` — resolved block shapes (after ``_fit_block`` clamping);
+    ``vmem_bytes`` — per-grid-step VMEM estimate (operand blocks +
+                 output block + scratch);
+    ``scalar_prefetch`` — ``(name, shape)`` for each scalar-prefetch
+                 operand the launch consumes.
+    """
+
+    op: str
+    ok: bool
+    fused: bool
+    reasons: tuple = ()
+    grid: tuple = ()
+    blocks: dict = dataclasses.field(default_factory=dict)
+    vmem_bytes: int = 0
+    scalar_prefetch: tuple = ()
+
+
+def fit_block(blk: int, dim: int) -> int:
+    """Pure twin of ``ops.backends.pallas._fit_block``: the largest
+    block <= ``blk`` dividing ``dim``."""
+    blk = min(blk, dim)
+    while dim % blk:
+        blk -= 1
+    return blk
+
+
+# ---------------------------------------------------------------- policy --
+
+def can_tile(sq: int, skv: int, bq: int, bkv: int,
+             min_block: int = MIN_BLOCK) -> bool:
+    """Fused prefill-attention tiling policy (pallas_fused backend)."""
+    if skv > MAX_ROWSUM_LEN:
+        return False          # exact row sum leaves the int32 budget
+    if sq < min_block or skv < min_block:
+        return False          # tiny problem (e.g. decode): oracle wins
+    if bq < min_block or bkv < min_block:
+        return False          # no usable divisor (e.g. prime Sq)
+    return True
+
+
+def can_tile_decode(sq: int, L: int, d: int, bkv: int,
+                    min_block: int = MIN_BLOCK) -> bool:
+    """Fused decode tiling policy (pallas_fused backend)."""
+    if sq > MAX_SQ:
+        return False          # scratch holds at most MAX_SQ query rows
+    if L > MAX_ROWSUM_LEN:
+        return False          # exact row sum leaves the int32 budget
+    if bkv < min_block:
+        return False          # no usable cache-block divisor
+    if d % 2:
+        return False          # odd head dims: lane-hostile, oracle wins
+    return True
+
+
+def can_tile_prefill(L: int, d: int, bq: int, bkv: int,
+                     min_block: int = MIN_BLOCK) -> bool:
+    """Fused paged-prefill tiling policy (pallas_fused backend)."""
+    if L > MAX_ROWSUM_LEN:
+        return False          # exact row sum leaves the int32 budget
+    if bq < min_block or bkv < min_block:
+        return False          # tiny chunk / page: oracle wins
+    if d % 2:
+        return False          # odd head dims: lane-hostile, oracle wins
+    return True
+
+
+# ----------------------------------------------------------- per-kernel --
+
+def _check_int8_matmul(m, n, k, bm=128, bn=128, bk=512, out_bits=8,
+                       has_bias=False, per_channel=False):
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    reasons = []
+    if m % bm or n % bn or k % bk:
+        reasons.append("blocks must divide the problem: "
+                       f"(M,N,K)=({m},{n},{k}) %% (bm,bn,bk)="
+                       f"({bm},{bn},{bk})")
+    vmem = bm * bk + bk * bn + bm * bn * 4          # x8 + w8 + acc scratch
+    vmem += bm * bn * (1 if out_bits <= 8 else 4)   # output block
+    if has_bias:
+        vmem += bn * 4
+    if per_channel:
+        vmem += bn * 4
+    return LaunchReport(
+        op="int8_matmul", ok=not reasons, fused=not reasons,
+        reasons=tuple(reasons),
+        grid=(m // bm, n // bn, k // bk) if not reasons else (),
+        blocks={"bm": bm, "bn": bn, "bk": bk}, vmem_bytes=vmem)
+
+
+def _attn_common(h, hkv, reasons):
+    if h % hkv:
+        reasons.append(f"GQA requires Hkv | H: got H={h}, Hkv={hkv}")
+
+
+def _check_int_attention(b, sq, skv, h, hkv, d, bq=128, bkv=128,
+                         out_bits=8, per_channel=False,
+                         min_block=MIN_BLOCK, online=False):
+    op = "int_attention_online" if online else "int_attention"
+    bq, bkv = min(bq, sq), min(bkv, skv)    # the kernels' own clamping
+    reasons, policy = [], []
+    _attn_common(h, hkv, reasons)
+    budget = MAX_SKV_ONLINE if online else MAX_ROWSUM_LEN
+    if skv > budget:
+        reasons.append(f"row-sum int32 budget: Skv <= {budget} "
+                       f"(got {skv})")
+    if sq % bq or skv % bkv:
+        reasons.append(f"blocks must divide (Sq,Skv)=({sq},{skv}): "
+                       f"(bq,bkv)=({bq},{bkv})")
+    if not can_tile(sq, skv, bq, bkv, min_block):
+        policy.append(f"tiling policy declines: sq={sq}, skv={skv}, "
+                      f"bq={bq}, bkv={bkv}, min_block={min_block}")
+    out_elem = 1 if (online or out_bits <= 8) else 4
+    vmem = (bq * d + 2 * bkv * d                    # q + k + v blocks
+            + bq * d * out_elem                     # output block
+            + 2 * bq * 4 + bq * d * 4)              # m/s/acc scratch
+    if per_channel:
+        vmem += d * 4
+    if sq % bq or skv % bkv:
+        grid = ()
+    elif online:
+        grid = (b, h, sq // bq, skv // bkv)
+    else:
+        grid = (b, h, sq // bq, 3, skv // bkv)
+    return LaunchReport(
+        op=op, ok=not reasons, fused=not (reasons or policy),
+        reasons=tuple(reasons + policy), grid=grid,
+        blocks={"bq": bq, "bkv": bkv}, vmem_bytes=vmem)
+
+
+def _check_int_decode_attention(b, sq, h, hkv, d, L=None, bkv=128,
+                                max_pages=0, page_size=0, out_bits=8,
+                                per_channel=False, fold=False, n_out=0,
+                                min_block=MIN_BLOCK):
+    paged = page_size > 0
+    if paged:
+        L = max_pages * page_size
+    assert L is not None, "need L (contiguous) or max_pages+page_size"
+    reasons, policy = [], []
+    _attn_common(h, hkv, reasons)
+    if sq > MAX_SQ:
+        reasons.append(f"decode kernel holds Sq <= {MAX_SQ} query rows "
+                       f"in scratch (got {sq})")
+    if L > MAX_ROWSUM_LEN:
+        reasons.append("row-sum int32 budget: cache_len <= "
+                       f"{MAX_ROWSUM_LEN} (got {L})")
+    bkv = min(bkv, page_size if paged else L)
+    if paged:
+        if page_size % bkv:
+            reasons.append("KV block must tile the physical page: "
+                           f"page_size={page_size}, bkv={bkv}")
+    elif L % bkv:
+        reasons.append(f"KV block must tile the cache: L={L}, bkv={bkv}")
+    if fold and not n_out:
+        reasons.append("folded wo projection needs n_out (= wo_w8 "
+                       "output channels)")
+    if not can_tile_decode(sq, L, d, bkv, min_block):
+        policy.append(f"tiling policy declines: sq={sq}, L={L}, d={d}, "
+                      f"bkv={bkv}, min_block={min_block}")
+    prefetch = [("valid_len", (b,))]
+    if paged:
+        prefetch.append(("pages", (b, max_pages)))
+    vmem = (sq * d + 2 * bkv * d                    # q + k + v blocks
+            + 2 * sq * 4 + sq * d * 4)              # m/s/acc scratch
+    if per_channel:
+        vmem += d * 4
+    if fold:
+        vmem += (d * n_out                          # wo weight slab
+                 + sq * d                           # int8 attention tile
+                 + sq * n_out * 4                   # wo accumulator
+                 + sq * n_out)                      # output block
+    else:
+        vmem += sq * d * (1 if out_bits <= 8 else 4)
+    grid = (b, h, 3, L // bkv) if not (L % bkv if not paged
+                                       else page_size % bkv) else ()
+    return LaunchReport(
+        op="int_decode_attention", ok=not reasons,
+        fused=not (reasons or policy), reasons=tuple(reasons + policy),
+        grid=grid, blocks={"bkv": bkv}, vmem_bytes=vmem,
+        scalar_prefetch=tuple(prefetch))
+
+
+def _check_int_paged_prefill(b, c, h, hkv, d, max_pages, page_size,
+                             bq=128, bkv=128, out_bits=8,
+                             per_channel=False, fold=False, n_out=0,
+                             min_block=MIN_BLOCK):
+    L = max_pages * page_size
+    reasons, policy = [], []
+    _attn_common(h, hkv, reasons)
+    if L > MAX_ROWSUM_LEN:
+        reasons.append("row-sum int32 budget: logical cache <= "
+                       f"{MAX_ROWSUM_LEN} (got {L})")
+    bq = min(bq, c)
+    bkv = min(bkv, page_size)
+    if c % bq:
+        reasons.append(f"query block must tile the chunk: c={c}, bq={bq}")
+    if page_size % bkv:
+        reasons.append("KV block must tile the physical page: "
+                       f"page_size={page_size}, bkv={bkv}")
+    if fold and not n_out:
+        reasons.append("folded wo projection needs n_out (= wo_w8 "
+                       "output channels)")
+    if not can_tile_prefill(L, d, bq, bkv, min_block):
+        policy.append(f"tiling policy declines: L={L}, d={d}, bq={bq}, "
+                      f"bkv={bkv}, min_block={min_block}")
+    vmem = (bq * d + 2 * bkv * d
+            + 2 * bq * 4 + bq * d * 4)
+    if per_channel:
+        vmem += d * 4
+    if fold:
+        vmem += (d * n_out + bq * d + bq * n_out * 4 + bq * n_out)
+    else:
+        vmem += bq * d * (1 if out_bits <= 8 else 4)
+    grid = (b, c // bq, h, 3, L // bkv) \
+        if not (c % bq or page_size % bkv) else ()
+    return LaunchReport(
+        op="int_paged_prefill", ok=not reasons,
+        fused=not (reasons or policy), reasons=tuple(reasons + policy),
+        grid=grid, blocks={"bq": bq, "bkv": bkv}, vmem_bytes=vmem,
+        scalar_prefetch=(("pos_end", (b,)), ("pages", (b, max_pages))))
+
+
+_CHECKS = {
+    "int8_matmul": _check_int8_matmul,
+    "int_attention": _check_int_attention,
+    "int_decode_attention": _check_int_decode_attention,
+    "int_paged_prefill": _check_int_paged_prefill,
+}
+
+
+def check_launch(op: str, **params) -> LaunchReport:
+    """Statically validate a kernel launch.  ``op`` is one of
+    ``int8_matmul`` / ``int_attention`` (pass ``online=True`` for the
+    one-pass kernel) / ``int_decode_attention`` / ``int_paged_prefill``;
+    ``params`` are the launch shapes (see the per-kernel helpers).
+    Never executes or imports jax — safe anywhere, including CI."""
+    if op not in _CHECKS:
+        raise KeyError(f"unknown kernel op {op!r}; known: "
+                       f"{sorted(_CHECKS)}")
+    return _CHECKS[op](**params)
+
+
+def require_launch(report: LaunchReport) -> LaunchReport:
+    """Raise :class:`KernelContractError` unless the kernel's own
+    preconditions hold (``report.ok``).  Policy declines (``fused=False``
+    with ``ok=True``) pass — the backend handles those by falling back."""
+    if not report.ok:
+        raise KernelContractError(report.op, report.reasons)
+    return report
+
+
+__all__ = [
+    "KernelContractError", "LaunchReport", "MAX_SKV_ONLINE", "MIN_BLOCK",
+    "can_tile", "can_tile_decode", "can_tile_prefill", "check_launch",
+    "fit_block", "require_launch",
+]

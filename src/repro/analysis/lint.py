@@ -1,0 +1,180 @@
+"""AST repo-rule linter: invariants the codebase learned the hard way.
+
+Run as ``python -m repro.analysis.lint [paths...]`` (default:
+``src/repro``).  Emits ``path:line:col CODE message`` per finding and
+exits non-zero if any fire — the CI ``static-analysis`` job gates on it.
+
+Rule catalog (docs/ANALYSIS.md has the full rationale):
+
+  RR001  no direct ``repro.kernels.*`` imports outside
+         ``repro/kernels/`` and ``repro/ops/backends/``.  Kernels are
+         reached through the backend registry (``repro.ops``) so
+         fallback dispatch, interpret-mode plumbing and launch contracts
+         stay in one place.
+
+  RR002  no ``jnp.asarray(<attribute>)`` on mutable engine state in
+         ``repro/serving/`` — ``jnp.asarray`` on a numpy array may alias
+         its buffer (zero-copy), so later in-place mutation of e.g.
+         ``self.pos`` silently changes a value captured by a pending
+         dispatch (the PR 3 serving flake).  Snapshot first:
+         ``jnp.asarray(x.copy())`` / ``jnp.asarray(t.snapshot())``.
+
+  RR003  no float dtypes (``float16/32/64``, ``bfloat16``) in
+         ``repro/core/`` integer modules — the integer datapath must
+         stay integer; the only sanctioned float boundary is
+         ``core/quant.py`` (dequantization helpers).
+
+``lint_source(src, path)`` is the unit-test entry point; ``lint_paths``
+drives the CLI.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import sys
+
+#: rel-path prefixes (within src/) allowed to import repro.kernels.*
+KERNEL_IMPORT_ALLOWED = ("repro/kernels", "repro/ops/backends")
+
+#: core modules sanctioned to use float dtypes (the dequant boundary)
+CORE_FLOAT_ALLOWED = ("repro/core/quant.py",)
+
+FLOAT_DTYPES = frozenset(
+    {"float16", "float32", "float64", "bfloat16", "half", "double"})
+
+SNAPSHOT_METHODS = frozenset({"copy", "snapshot", "tolist", "item"})
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    col: int
+    code: str
+    message: str
+
+    def __str__(self):
+        return f"{self.path}:{self.line}:{self.col} {self.code} " \
+               f"{self.message}"
+
+
+def _norm(path: str) -> str:
+    """Repo-relative posix-ish path for scope matching."""
+    p = path.replace(os.sep, "/")
+    if "/src/" in p:
+        p = p.split("/src/", 1)[1]
+    elif p.startswith("src/"):
+        p = p[4:]
+    return p
+
+
+def _in_scope(norm: str, prefixes) -> bool:
+    return any(norm.startswith(p) for p in prefixes)
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, path: str, norm: str):
+        self.path = path
+        self.norm = norm
+        self.findings = []
+        self.check_kernels = (
+            norm.startswith("repro/")
+            and not _in_scope(self.norm, KERNEL_IMPORT_ALLOWED))
+        self.check_asarray = norm.startswith("repro/serving/")
+        self.check_floats = (norm.startswith("repro/core/")
+                             and norm not in CORE_FLOAT_ALLOWED)
+
+    def _emit(self, node, code, message):
+        self.findings.append(Finding(self.path, node.lineno,
+                                     node.col_offset, code, message))
+
+    # RR001 ------------------------------------------------------------
+    def visit_Import(self, node):
+        if self.check_kernels:
+            for a in node.names:
+                if a.name == "repro.kernels" or \
+                        a.name.startswith("repro.kernels."):
+                    self._emit(node, "RR001",
+                               f"direct kernel import '{a.name}' — go "
+                               "through the repro.ops backend registry")
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node):
+        mod = node.module or ""
+        if self.check_kernels and (
+                mod == "repro.kernels" or mod.startswith("repro.kernels.")):
+            self._emit(node, "RR001",
+                       f"direct kernel import 'from {mod}' — go through "
+                       "the repro.ops backend registry")
+        self.generic_visit(node)
+
+    # RR002 / RR003 ----------------------------------------------------
+    def visit_Call(self, node):
+        if self.check_asarray and self._is_jnp_asarray(node.func) \
+                and node.args:
+            arg = node.args[0]
+            if isinstance(arg, ast.Attribute):
+                self._emit(
+                    node, "RR002",
+                    f"jnp.asarray({ast.unparse(arg)}) may alias mutable "
+                    "engine state (zero-copy) — snapshot first: "
+                    f"jnp.asarray({ast.unparse(arg)}.copy())")
+        self.generic_visit(node)
+
+    @staticmethod
+    def _is_jnp_asarray(func) -> bool:
+        return (isinstance(func, ast.Attribute)
+                and func.attr == "asarray"
+                and isinstance(func.value, ast.Name)
+                and func.value.id in ("jnp", "jax"))
+
+    def visit_Attribute(self, node):
+        if self.check_floats and node.attr in FLOAT_DTYPES:
+            self._emit(node, "RR003",
+                       f"float dtype '{ast.unparse(node)}' in an integer "
+                       "core module — the integer datapath must stay "
+                       "integer (dequant belongs in core/quant.py)")
+        self.generic_visit(node)
+
+
+def lint_source(src: str, path: str = "<memory>"):
+    """Lint one source string; returns a list of :class:`Finding`."""
+    tree = ast.parse(src, filename=path)
+    v = _Visitor(path, _norm(path))
+    v.visit(tree)
+    return v.findings
+
+
+def lint_paths(paths):
+    """Lint files / directory trees; returns all findings."""
+    findings = []
+    for root in paths:
+        if os.path.isfile(root):
+            files = [root]
+        else:
+            files = sorted(
+                os.path.join(dp, f)
+                for dp, _, fs in os.walk(root)
+                for f in fs if f.endswith(".py"))
+        for f in files:
+            with open(f, encoding="utf-8") as fh:
+                findings.extend(lint_source(fh.read(), f))
+    return findings
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    paths = argv or [os.path.join("src", "repro")]
+    findings = lint_paths(paths)
+    for f in findings:
+        print(f)
+    if findings:
+        print(f"{len(findings)} repo-rule violation(s)", file=sys.stderr)
+        return 1
+    print(f"lint ok: {', '.join(paths)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

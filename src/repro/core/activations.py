@@ -8,13 +8,12 @@ uses (i-exp, one integer division, dyadic requants).
 """
 from __future__ import annotations
 
-import math
 from typing import NamedTuple
 
 import jax.numpy as jnp
 
 from repro.core import intmath
-from repro.core.dyadic import Dyadic, clip_to_bits, fit_dyadic, rshift_round
+from repro.core.dyadic import Dyadic, clip_to_bits, fit_dyadic
 
 SIG_FRAC = 15                     # sigmoid as a 16-bit fraction
 RECIP_BITS = 30

@@ -23,16 +23,20 @@ Variants:
 from __future__ import annotations
 
 import math
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import softmax as ism
 from repro.core.dyadic import Dyadic, clip_to_bits, fit_dyadic
-from repro.core.softmax import (ISoftmaxPlan, combine_correction,
-                                finalize_probs, i_softmax, i_softmax_stats,
-                                make_isoftmax, rescale_sum)
+from repro.core.softmax import (
+    ISoftmaxPlan,
+    combine_correction,
+    i_softmax,
+    i_softmax_stats,
+    make_isoftmax,
+    rescale_sum)
 
 
 class IAttnPlan(NamedTuple):

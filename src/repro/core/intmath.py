@@ -17,10 +17,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dyadic import (Dyadic, bits_for, fit_dyadic, rshift_floor,
-                               rshift_round)
-
-INT32_MAX = 2**31 - 1
+# INT32_MAX re-exported: sibling modules bound their budgets to
+# ``intmath.INT32_MAX`` before the analysis package centralized it
+from repro.analysis.budgets import INT32_MAX  # noqa: F401
+from repro.analysis.budgets import static_check
+from repro.core.dyadic import Dyadic, bits_for, fit_dyadic, rshift_round
 
 # I-BERT second-order polynomial coefficients.
 EXP_A, EXP_B, EXP_C = 0.35815147, 1.353, 0.344   # exp(p) ~ a(p+b)^2+c on (-ln2, 0]
@@ -34,8 +35,10 @@ del _e
 
 
 def _static_check(val: int, what: str):
-    if val > INT32_MAX:
-        raise ValueError(f"int32 overflow in {what}: worst case {val} > 2^31-1")
+    """Design-time bound check — delegates to the central analyzer
+    budget (``repro.analysis.budgets``), raising its typed
+    ``BitBudgetError`` (a ``ValueError``, message unchanged)."""
+    static_check(val, what)
 
 
 def int_bit_length(n):

@@ -13,7 +13,7 @@ All bit budgets are solved at design time in ``make_inorm``.
 from __future__ import annotations
 
 import math
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax.numpy as jnp
 

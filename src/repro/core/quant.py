@@ -9,7 +9,6 @@ weights land on the same grid the accelerator executes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -26,6 +26,9 @@ from typing import NamedTuple
 
 import jax.numpy as jnp
 
+# the row-length budget lives with the other bit budgets in the analysis
+# package (single source of truth); re-exported here for compatibility
+from repro.analysis.budgets import MAX_ROWSUM_LEN  # noqa: F401
 from repro.core import intmath
 from repro.core.dyadic import Dyadic, fit_dyadic, rshift_round
 
@@ -35,9 +38,6 @@ S_PROB = 2.0 ** -7       # int8 probability scale
 PROB_SHIFT = 7
 RECIP_BITS = 30
 Z_MAX = 30               # exp(-z_max*ln2) == 2^-30 ~ 0
-# longest row whose e16 sum is int32-exact: rowlen * 2^15 <= 2^30 — the
-# budget every exact (non-streaming-corrected) attention kernel asserts
-MAX_ROWSUM_LEN = 1 << 15
 
 
 class ISoftmaxPlan(NamedTuple):

@@ -13,7 +13,6 @@ mid-epoch.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, Iterator, Optional
 
 import numpy as np

@@ -13,7 +13,7 @@ ring orders — a reproducibility win the integer paper would appreciate).
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -22,7 +22,7 @@ import dataclasses
 import logging
 import time
 from collections import deque
-from typing import Any, Callable, Dict, Iterable, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import numpy as np

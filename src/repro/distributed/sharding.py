@@ -7,7 +7,7 @@ silently no-ops outside a mesh context (unit tests on one device).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.analysis.contracts import check_launch, require_launch
 from repro.core.dyadic import Dyadic
 
 
@@ -83,8 +84,11 @@ def int8_matmul_pallas(x8, w8, bias32=None, dn: Dyadic = None,
     m, k = x8.shape
     k2, n = w8.shape
     assert k == k2, (x8.shape, w8.shape)
+    require_launch(check_launch(
+        "int8_matmul", m=m, n=n, k=k, bm=bm, bn=bn, bk=bk,
+        out_bits=out_bits, has_bias=bias32 is not None,
+        per_channel=b_vec is not None))
     bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
     n_k = k // bk
     if dn is not None:
         dn_b, dn_c, dn_pre = dn.b, dn.c, dn.pre

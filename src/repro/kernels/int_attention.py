@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.analysis.contracts import check_launch, require_launch
 from repro.core.attention import IAttnPlan
 from repro.kernels.int_softmax import _exp16_tile, _rshift_round
 
@@ -112,12 +113,12 @@ def int_attention_pallas(q8, k8, v8, plan: IAttnPlan, causal: bool = True,
     """
     b, sq, h, d = q8.shape
     _, skv, hkv, _ = k8.shape
-    assert h % hkv == 0, (h, hkv)
-    assert skv <= 65536, "int32 accumulator budget (see module docstring)"
+    require_launch(check_launch(
+        "int_attention", b=b, sq=sq, skv=skv, h=h, hkv=hkv, d=d,
+        bq=bq, bkv=bkv, out_bits=out_bits, online=True))
     group = h // hkv
     bq = min(bq, sq)
     bkv = min(bkv, skv)
-    assert sq % bq == 0 and skv % bkv == 0, (sq, bq, skv, bkv)
     n_kv = skv // bkv
     kernel = functools.partial(
         _attn_kernel, plan=plan, n_kv=n_kv, bq=bq, bkv=bkv, causal=causal,

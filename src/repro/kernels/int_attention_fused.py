@@ -44,14 +44,18 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.analysis.budgets import MAX_ROWSUM_LEN
+from repro.analysis.contracts import check_launch, require_launch
 from repro.core.attention import IAttnPlan
-from repro.core.softmax import MAX_ROWSUM_LEN, PROB_SHIFT, RECIP_BITS
+from repro.core.softmax import PROB_SHIFT, RECIP_BITS
 from repro.kernels.int_softmax import _exp16_tile, _rshift_round
 from repro.ops.spec import PER_CHANNEL, PER_TENSOR, RequantSpec
 
 NEG = -(2 ** 30)
 
-MAX_SKV = MAX_ROWSUM_LEN    # row-sum int32 budget: Skv * 2^15 <= 2^30
+# the row-sum budget is owned by repro.analysis.budgets (one source of
+# truth shared with the decode kernel and the tiling policy)
+MAX_SKV = MAX_ROWSUM_LEN
 
 
 def _streaming_attn_body(phase, kv_step, n_kv, q8, k8, v8, live, blk_live,
@@ -209,14 +213,12 @@ def int_attention_fused(q8, k8, v8, plan: IAttnPlan, requant=None,
     """
     b, sq, h, d = q8.shape
     _, skv, hkv, _ = k8.shape
-    assert h % hkv == 0, (h, hkv)
-    assert skv <= MAX_SKV, \
-        f"row-sum int32 budget: Skv <= {MAX_SKV} (got {skv}); " \
-        "use the two-pass streaming path (see module docstring)"
+    require_launch(check_launch(
+        "int_attention", b=b, sq=sq, skv=skv, h=h, hkv=hkv, d=d,
+        bq=bq, bkv=bkv, out_bits=out_bits))
     group = h // hkv
     bq = min(bq, sq)
     bkv = min(bkv, skv)
-    assert sq % bq == 0 and skv % bkv == 0, (sq, bq, skv, bkv)
     n_kv = skv // bkv
 
     requant, has_bvec, b2, out_dtype = _epilogue_setup(
@@ -385,15 +387,13 @@ def int_paged_prefill_fused(q8, k_pool, v_pool, plan: IAttnPlan, pos_end,
     pages = jnp.asarray(pages, jnp.int32)
     assert pages.ndim == 2 and pages.shape[0] == b, pages.shape
     L = pages.shape[1] * ps
-    assert h % hkv == 0, (h, hkv)
-    assert L <= MAX_SKV, \
-        f"row-sum int32 budget: logical cache <= {MAX_SKV} (got {L}); " \
-        "use the two-pass path (see module docstring)"
+    require_launch(check_launch(
+        "int_paged_prefill", b=b, c=c, h=h, hkv=hkv, d=d,
+        max_pages=pages.shape[1], page_size=ps, bq=bq, bkv=bkv,
+        out_bits=out_bits))
     group = h // hkv
     bq = min(bq, c)
-    assert c % bq == 0, (c, bq)
     bkv = min(bkv, ps)
-    assert ps % bkv == 0, (ps, bkv)
     sub = ps // bkv                     # KV sub-blocks per physical page
     n_kv = L // bkv
     pos_end = jnp.asarray(pos_end, jnp.int32)

@@ -69,14 +69,18 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.analysis.budgets import MAX_ROWSUM_LEN
+from repro.analysis.budgets import MAX_SQ as _MAX_SQ
+from repro.analysis.contracts import check_launch, require_launch
 from repro.core.attention import IAttnPlan
-from repro.core.softmax import MAX_ROWSUM_LEN
 from repro.kernels.int_attention_fused import (_epilogue_setup,
                                                _requant_tile,
                                                _streaming_attn_body)
 from repro.ops.spec import PER_CHANNEL, RequantSpec
 
-MAX_SQ = 8                  # speculative query budget (scratch rows/head)
+# both budgets are owned by repro.analysis.budgets; re-exported here
+# because callers (and tests) import them from the kernel module
+MAX_SQ = _MAX_SQ            # speculative query budget (scratch rows/head)
 MAX_SKV = MAX_ROWSUM_LEN    # row-sum int32 budget: L * 2^15 <= 2^30
 
 
@@ -198,21 +202,14 @@ def int_decode_attention_fused(q8, k8_cache, v8_cache, plan: IAttnPlan,
         L = pages.shape[1] * ps
     else:
         _, L, hkv, _ = k8_cache.shape
-    assert h % hkv == 0, (h, hkv)
-    assert sq <= MAX_SQ, \
-        f"decode kernel holds Sq <= {MAX_SQ} query rows in scratch " \
-        f"(got {sq}); use the prefill kernel for larger Sq"
-    assert L <= MAX_SKV, \
-        f"row-sum int32 budget: cache_len <= {MAX_SKV} (got {L}); " \
-        "use the two-pass path (see module docstring)"
+    require_launch(check_launch(
+        "int_decode_attention", b=b, sq=sq, h=h, hkv=hkv, d=d,
+        L=None if paged else L, bkv=bkv,
+        max_pages=pages.shape[1] if paged else 0,
+        page_size=page_size, out_bits=out_bits))
     group = h // hkv
     bkv = min(bkv, ps if paged else L)
-    if paged:
-        assert ps % bkv == 0, (ps, bkv)
-        sub = ps // bkv                 # KV sub-blocks per physical page
-    else:
-        assert L % bkv == 0, (L, bkv)
-        sub = 1
+    sub = ps // bkv if paged else 1     # KV sub-blocks per physical page
     n_kv = L // bkv
     valid_len = jnp.asarray(valid_len, jnp.int32)
 

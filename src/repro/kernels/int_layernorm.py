@@ -8,7 +8,6 @@ the reciprocal + per-channel gamma/beta output phase.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

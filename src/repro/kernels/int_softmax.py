@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.softmax import (ISoftmaxPlan, PROB_SHIFT, RECIP_BITS, S_SM)
+from repro.core.softmax import ISoftmaxPlan, PROB_SHIFT, RECIP_BITS
 
 
 def _rshift_round(x, s: int):

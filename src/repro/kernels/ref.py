@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core import activations as iact
 from repro.core import attention as iattn
 from repro.core import norms as inorms
 from repro.core import softmax as ism

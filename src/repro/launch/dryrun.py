@@ -24,7 +24,7 @@ import traceback
 import jax
 import jax.numpy as jnp
 
-from repro.configs.registry import ARCHS, ASSIGNED, LONG_OK, get_config
+from repro.configs.registry import ASSIGNED, get_config
 from repro.launch import shardings as shd
 from repro.launch import steps as steps_mod
 from repro import ops as rops
@@ -179,7 +179,6 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
         print(f"[SKIP] {arch} x {shape_name}: {skip}")
         return rec
     mesh = make_production_mesh(multi_pod=multi_pod)
-    n_chips = mesh.devices.size
     t0 = time.time()
     try:
         lowered = lower_cell(cfg, shape, mesh)

@@ -8,7 +8,6 @@ import sys
 import time
 import traceback
 
-import jax
 
 from repro.configs.registry import ASSIGNED, get_config
 from repro.launch.cells import cell_supported

@@ -127,7 +127,7 @@ def main():
     n_tok = sum(len(r.out_tokens) for r in reqs)
     print(f"served {len(reqs)} requests / {n_tok} tokens in {steps} "
           f"batched steps, {dt:.1f}s ({n_tok/dt:.1f} tok/s, int8 KV "
-          f"cache)")
+          "cache)")
     px = eng.describe()["cache"].get("prefix")
     if px:
         print(f"prefix cache: {px['hits']} hits / {px['misses']} misses, "

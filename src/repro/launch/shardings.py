@@ -9,10 +9,9 @@ while jamba's 16544 shards).
 from __future__ import annotations
 
 import fnmatch
-from typing import Any, Tuple
+from typing import Any
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.treepath import path_parts

@@ -2,17 +2,15 @@
 integer serving steps (prefill / decode)."""
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import inttransformer as it
-from repro.models import intlayers as il
 from repro.models.common import ArchConfig
 from repro.ops import resolve_ops
-from repro.optim import adamw_init, adamw_update
+from repro.optim import adamw_update
 from repro.optim.adamw import AdamWConfig
 from repro.quant import plans as qplans
 from repro.quant import qat

@@ -12,8 +12,6 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import math
 import time
 
 import jax

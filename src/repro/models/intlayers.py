@@ -9,8 +9,7 @@ Residual stream: int32 at ``cfg.s_res`` clipped to ``cfg.qmax_res``
 """
 from __future__ import annotations
 
-import math
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -402,7 +401,6 @@ def init_int_mamba_state(cfg: ArchConfig, batch: int) -> IntMambaState:
 
 def _int_conv_step(xbc8_t, conv_state, qconv_w8, mp: qplans.MambaPlan):
     """Depthwise causal conv, one step.  xbc8_t: (B,C) int8."""
-    km1 = conv_state.shape[1]
     window = jnp.concatenate([conv_state, xbc8_t[:, None, :]], axis=1)
     acc = jnp.sum(window.astype(jnp.int32)
                   * qconv_w8.astype(jnp.int32)[None], axis=1)

@@ -12,13 +12,11 @@ Caches:
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.dyadic import clip_to_bits
 from repro.distributed.sharding import shard
 from repro.models import intlayers as il
 from repro.models.common import ArchConfig
@@ -339,7 +337,7 @@ def int_prefill_chunk_step(qparams, caches, tokens, base_pos, plans,
     """
     ops = resolve_ops(ops, cfg)
     if not chunked_prefill_supported(cfg):
-        raise ValueError(f"chunked prefill unsupported for arch "
+        raise ValueError("chunked prefill unsupported for arch "
                          f"{cfg.name!r} (needs window == 0 and "
                          "attention+ffn sublayers only)")
     gl, ng, kinds = layer_group_spec(cfg)

@@ -8,7 +8,6 @@ integer path (intlayers.py) with matching numerics.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Optional
 
 import jax
@@ -17,7 +16,7 @@ import jax.numpy as jnp
 from repro.core.quant import fake_quant, per_channel_absmax
 from repro.distributed.sharding import (comm_quant_gather, shard,
                                         shard_residual)
-from repro.models.common import ArchConfig, apply_rope, truncated_normal_init
+from repro.models.common import ArchConfig, apply_rope
 
 
 # ---------------------------------------------------------------- init ----

@@ -16,14 +16,10 @@ the partial-inapplicability case in DESIGN.md §6.
 from __future__ import annotations
 
 import math
-from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import activations as iact
-from repro.core import intmath
-from repro.core.dyadic import Dyadic, clip_to_bits, fit_dyadic
 from repro.distributed.sharding import shard, shard_residual
 from repro.models.common import ArchConfig
 from repro.models.layers import _init, maybe_fq, fq_weight

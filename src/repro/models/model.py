@@ -7,14 +7,14 @@ a byte (the 235B MoE's int8 weights exist only as avals).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import inttransformer as it
 from repro.models import transformer as tf
-from repro.models.common import ArchConfig, ShapeConfig, SHAPES
+from repro.models.common import ArchConfig, ShapeConfig
 from repro.models.transformer import layer_group_spec
 from repro.quant import plans as qplans
 from repro.ops import QuantLinearParams
@@ -194,5 +194,5 @@ def decode_cache_spec(cfg: ArchConfig, batch: int, cache_len: int,
         mem8 = jnp.zeros((batch,
                           cfg.n_img_tokens or 1, cfg.d_model), jnp.int8) \
             if with_memory else None
-        return it.init_decode_cache(cfg, batch, cache_len, memory8=None)
+        return it.init_decode_cache(cfg, batch, cache_len, memory8=mem8)
     return jax.eval_shape(build)

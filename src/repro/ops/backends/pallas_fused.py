@@ -31,7 +31,8 @@ See docs/KERNELS.md for the kernel contract this backend satisfies.
 """
 from __future__ import annotations
 
-from repro.core.softmax import MAX_ROWSUM_LEN as MAX_SKV
+from repro.analysis import contracts as _contracts
+from repro.analysis.budgets import MAX_ROWSUM_LEN as MAX_SKV
 from repro.kernels import ref as _ref
 from repro.ops import spec as _spec
 from repro.ops.backends.pallas import PallasBackend, _fit_block
@@ -189,36 +190,18 @@ class PallasFusedBackend(PallasBackend):
                                     interpret=self._interp(), **kw, **opts)
         return o, k_pool, v_pool
 
+    # the fused-vs-fallback tiling policy is owned declaratively by
+    # repro.analysis.contracts so offline certification predicts the
+    # exact same dispatch this backend takes
+
     def _can_tile_prefill(self, L: int, d: int, bq: int, bkv: int) -> bool:
-        if L > MAX_SKV:
-            return False          # exact row sum leaves the int32 budget
-        if bq < self.min_block or bkv < self.min_block:
-            return False          # tiny chunk / page: oracle wins
-        if d % 2:
-            return False          # odd head dims: lane-hostile, oracle wins
-        return True
+        return _contracts.can_tile_prefill(L, d, bq, bkv, self.min_block)
 
     def _can_tile_decode(self, sq: int, L: int, d: int, bkv: int) -> bool:
-        from repro.kernels.int_decode_attention import MAX_SQ
-        if sq > MAX_SQ:
-            return False          # scratch holds at most MAX_SQ query rows
-        if L > MAX_SKV:
-            return False          # exact row sum leaves the int32 budget
-        if bkv < self.min_block:
-            return False          # no usable cache-block divisor
-        if d % 2:
-            return False          # odd head dims: lane-hostile, oracle wins
-        return True
+        return _contracts.can_tile_decode(sq, L, d, bkv, self.min_block)
 
     def _can_tile(self, sq: int, skv: int, bq: int, bkv: int) -> bool:
-        if skv > MAX_SKV:
-            return False          # exact row sum leaves the int32 budget
-        mb = self.min_block
-        if sq < mb or skv < mb:
-            return False          # tiny problem (e.g. decode): oracle wins
-        if bq < mb or bkv < mb:
-            return False          # no usable divisor (e.g. prime Sq)
-        return True
+        return _contracts.can_tile(sq, skv, bq, bkv, self.min_block)
 
     def _two_pass_fallback(self, q8, k8, v8, plan, causal, window,
                            requant, b_vec):

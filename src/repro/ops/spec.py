@@ -54,7 +54,7 @@ class RequantSpec:
             raise ValueError(f"RequantSpec kind must be one of {_KINDS}, "
                              f"got {self.kind!r}")
         if not 2 <= self.out_bits <= 32:
-            raise ValueError(f"out_bits must be in [2, 32], got "
+            raise ValueError("out_bits must be in [2, 32], got "
                              f"{self.out_bits}")
         if self.kind == PER_TENSOR:
             if not isinstance(self.dn, Dyadic):

@@ -10,9 +10,7 @@ from __future__ import annotations
 
 from typing import Callable, Dict, Iterable
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models.common import ArchConfig
 

@@ -10,7 +10,7 @@ frozen static plan set.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -72,7 +72,6 @@ def _q_norm(p, plan: norms.INormPlan):
 
 
 def _q_attn(p, plans: qplans.AttnPlan):
-    d = p["wq"].shape[-3]
     out = {
         "wq": _q_attn_w(p["wq"], plans.qkv),
         "wk": _q_attn_w(p["wk"], plans.qkv),
@@ -120,7 +119,6 @@ def _q_moe(p, plans: qplans.MoePlan):
 
 
 def _q_mamba(p, mp: qplans.MambaPlan, cfg: ArchConfig):
-    di = cfg.ssm_d_inner
     w = np.asarray(jax.device_get(p["in_proj"]), np.float64)
     n_zxbc = w.shape[-1] - cfg.ssm_heads
     out = {}

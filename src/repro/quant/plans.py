@@ -13,8 +13,7 @@ vectors with a plan-level shared shift.
 """
 from __future__ import annotations
 
-import math
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional
 
 import numpy as np
 
@@ -22,7 +21,7 @@ from repro.core import activations as iact
 from repro.core import attention as iattn
 from repro.core import intmath, norms
 from repro.core import softmax as ism
-from repro.core.dyadic import Dyadic, bits_for, fit_dyadic
+from repro.core.dyadic import Dyadic, fit_dyadic
 from repro.models.common import ArchConfig
 
 

@@ -7,7 +7,6 @@ the integer grid that ``quant.convert`` freezes.
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -133,10 +133,10 @@ class ServingEngine:
                           DeprecationWarning, stacklevel=2)
             ops = backend if ops is None else ops
         if cache_mode not in ("paged", "contiguous"):
-            raise ValueError(f"cache_mode must be 'paged' or 'contiguous',"
+            raise ValueError("cache_mode must be 'paged' or 'contiguous',"
                              f" got {cache_mode!r}")
         if prefill_budget is not None and prefill_budget < 1:
-            raise ValueError(f"prefill_budget must be >= 1 token/step, "
+            raise ValueError("prefill_budget must be >= 1 token/step, "
                              f"got {prefill_budget}")
         self.cfg = cfg
         self.plans = plans
@@ -217,7 +217,7 @@ class ServingEngine:
         if prefill_chunk == 0:
             return 0
         if prefill_chunk < 0:
-            raise ValueError(f"prefill_chunk must be >= 0, got "
+            raise ValueError("prefill_chunk must be >= 0, got "
                              f"{prefill_chunk}")
         if not self.paged:
             raise ValueError("prefill_chunk needs cache_mode='paged' "
@@ -225,7 +225,7 @@ class ServingEngine:
                              "page table)")
         if not chunkable:
             raise ValueError(
-                f"chunked prefill is unsupported for arch "
+                "chunked prefill is unsupported for arch "
                 f"{self.cfg.name!r}: it needs window == 0 and "
                 "attention+ffn sublayers only (sliding-window, SSM, MoE "
                 "and cross-attention archs keep token-streaming "
@@ -623,7 +623,7 @@ class ServingEngine:
             raise ValueError("preempt is unsupported for SSM/hybrid "
                              "archs: Mamba state is lane-indexed")
         if sess.state not in ("active", "prefilling") or sess.slot is None:
-            raise ValueError(f"cannot preempt session in state "
+            raise ValueError("cannot preempt session in state "
                              f"{sess.state!r}")
         slot = sess.slot
         sess.pos = int(self.pos[slot])

@@ -1,0 +1,113 @@
+"""Soundness property of the bit-budget abstract interpreter.
+
+For *any* design constants the repo's fitters can produce and *any*
+concrete input inside the declared range — endpoints forced — the value
+the real integer op computes must lie inside the ``IntRange`` the
+transfer function predicts, and no intermediate the transfer certified
+may be exceeded by the concrete run.  Needs the optional ``hypothesis``
+dev dependency (importorskip'd, like ``test_kvcache_props.py``).
+"""
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis "
+                           "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.analysis.interpret import check_requant_spec
+from repro.analysis.ranges import (INT8, IntRange, rshift_round_int,
+                                   t_dyadic, t_iexp, t_matmul_acc,
+                                   t_softmax)
+from repro.core import intmath
+from repro.core.dyadic import fit_dyadic, rshift_round
+from repro.core.softmax import make_isoftmax, i_softmax
+from repro.ops.spec import RequantSpec
+
+
+def _sample(qmax: int, picks):
+    """Concrete int32 inputs: forced extremes + hypothesis-drawn interior."""
+    return np.array([-qmax, qmax, 0] + [max(-qmax, min(qmax, p))
+                                        for p in picks], np.int32)
+
+
+@given(ratio=st.floats(1e-6, 0.9), qmax=st.integers(2 ** 8, 2 ** 26),
+       picks=st.lists(st.integers(-(2 ** 26), 2 ** 26), min_size=1,
+                      max_size=32))
+@settings(max_examples=200, deadline=None)
+def test_fitted_dyadic_stays_in_predicted_range(ratio, qmax, picks):
+    dn = fit_dyadic(ratio, qmax)
+    r = t_dyadic(IntRange.symmetric(qmax), dn)
+    q = _sample(qmax, picks)
+    out = np.asarray(dn(jnp.asarray(q)))          # the real integer op
+    assert out.min() >= r.lo and out.max() <= r.hi, (dn, r, out)
+    # staging stays int32 in exact arithmetic too (what t_dyadic proved)
+    for v in q.tolist():
+        staged = rshift_round_int(v, dn.pre) * dn.b
+        assert abs(staged) <= 2 ** 31 - 1
+
+
+@given(ratio=st.floats(1e-6, 0.9), qmax=st.integers(2 ** 8, 2 ** 24),
+       out_bits=st.sampled_from([8, 16, 32]),
+       picks=st.lists(st.integers(-(2 ** 24), 2 ** 24), min_size=1,
+                      max_size=16))
+@settings(max_examples=100, deadline=None)
+def test_requant_spec_epilogue_soundness(ratio, qmax, out_bits, picks):
+    dn = fit_dyadic(ratio, qmax)
+    spec = RequantSpec.per_tensor(dn, out_bits=out_bits)
+    r = check_requant_spec(spec, IntRange.symmetric(qmax),
+                           op="int8_matmul", layer="prop")
+    lo, hi = -(1 << (out_bits - 1)), (1 << (out_bits - 1)) - 1
+    q = _sample(qmax, picks)
+    out = np.clip(np.asarray(dn(jnp.asarray(q))), lo, hi)
+    assert out.min() >= r.lo and out.max() <= r.hi
+
+
+@given(k=st.integers(1, 4096), picks=st.lists(st.integers(-127, 127),
+                                              min_size=1, max_size=64))
+@settings(max_examples=100, deadline=None)
+def test_matmul_accumulator_soundness(k, picks):
+    r = t_matmul_acc(k, INT8)
+    x = _sample(127, picks).astype(np.int64)
+    w = -x[::-1]                                  # adversarial signs
+    n = min(k, len(x))
+    acc = int(np.dot(x[:n], w[:n]))
+    assert r.lo <= acc <= r.hi
+
+
+# make_iexp's own static check rejects s_in finer than 2^-14 (q_b^2
+# leaves int32) — the admissible design band is [2^-14, 2^-10]
+@given(exp=st.integers(10, 14), picks=st.lists(st.integers(-(2 ** 20), 0),
+                                               min_size=1, max_size=32))
+@settings(max_examples=100, deadline=None)
+def test_iexp_output_within_predicted_range(exp, picks):
+    s_in = 2.0 ** -exp
+    plan = intmath.make_iexp(s_in)
+    r = t_iexp(plan)
+    band = plan.z_max * plan.q_ln2
+    q = _sample(band, picks)
+    q = np.minimum(q, 0)                          # i-exp takes q <= 0
+    out = np.asarray(intmath.i_exp(jnp.asarray(q), plan))
+    assert out.min() >= r.lo and out.max() <= r.hi, (plan, r)
+
+
+@given(scale_exp=st.integers(8, 14), qmax=st.integers(2 ** 10, 2 ** 22),
+       rowlen=st.integers(1, 64),
+       seed=st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_softmax_probs_within_predicted_range(scale_exp, qmax, rowlen,
+                                              seed):
+    s_score = 2.0 ** -scale_exp
+    plan = make_isoftmax(s_score, qmax)
+    r = t_softmax(plan, IntRange.symmetric(qmax), rowlen)
+    rng = np.random.default_rng(seed)
+    scores = rng.integers(-qmax, qmax + 1, size=(4, rowlen),
+                          dtype=np.int64).astype(np.int32)
+    scores[0, 0] = qmax                           # force the extremes
+    scores[1, 0] = -qmax
+    p = np.asarray(i_softmax(jnp.asarray(scores), plan))
+    assert p.min() >= r.lo and p.max() <= r.hi
+    # exact row sums of e16 stay int32 whenever the analyzer said so
+    assert rowlen * (1 << 15) <= 2 ** 31 - 1

@@ -32,7 +32,7 @@ from repro.models import model as M
 from repro.models import transformer as tf
 from repro.ops import (QuantLinearParams, RequantSpec, get_backend,
                        resolve_ops)
-from repro.ops.paged import gather_pages, scatter_chunk
+from repro.ops.paged import scatter_chunk
 from repro.quant import convert
 from repro.serving import Request, ServingEngine
 

@@ -111,7 +111,6 @@ def test_int8_matmul_wide_output_bits(rng):
     an int8 out_dtype silently truncated them (see ops.int8_matmul)."""
     from repro.quant.plans import make_linear_plan
     import repro.models.intlayers as il
-    import jax
     plan = make_linear_plan(8 / 127, 2 / 127, 16 / 1024, 128, out_bits=11)
     x8 = jnp.asarray(rng.integers(-127, 128, (16, 128)), jnp.int8)
     w = rng.normal(0, 0.1, (128, 256))

@@ -9,7 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.registry import ARCHS, ASSIGNED, get_config
+from repro.configs.registry import ASSIGNED, get_config
 from repro.models import model as M
 from repro.models import transformer as tf
 from repro.optim import adamw_init, adamw_update

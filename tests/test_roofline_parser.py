@@ -2,9 +2,11 @@
 a header-regex bug silently dropped all while-loop trip multipliers)."""
 import numpy as np
 
-from benchmarks.roofline import (CollectiveOp, _shape_bytes,
-                                 collective_wire_bytes,
-                                 parse_hlo_collectives, roofline_terms)
+from benchmarks.roofline import (
+    CollectiveOp,
+    _shape_bytes,
+    parse_hlo_collectives,
+    roofline_terms)
 
 HLO = """\
 HloModule test

@@ -1,6 +1,5 @@
 """Serving engine: batched generation == sequential decode."""
 import jax
-import numpy as np
 import pytest
 
 from repro.configs.registry import get_config

@@ -8,7 +8,6 @@ import os
 import subprocess
 import sys
 
-import numpy as np
 import pytest
 
 SCRIPT = r"""

@@ -1,11 +1,7 @@
 """End-to-end system behaviour: the full SwiftTron flow (paper Fig. 17)
 float train -> calibrate/convert -> integer serve, plus cell accounting."""
-import os
-import subprocess
-import sys
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import ASSIGNED, get_config
