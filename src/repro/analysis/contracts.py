@@ -304,6 +304,39 @@ def check_launch(op: str, **params) -> LaunchReport:
     return _CHECKS[op](**params)
 
 
+def check_tp_launch(op: str, tp: int = 1, **params) -> LaunchReport:
+    """Statically validate the *per-shard* kernel launch of a
+    tensor-parallel serving step: under ``shard_map`` head sharding
+    (``distributed.tp_serving``) each device launches the attention
+    kernel with ``h/tp`` query heads and ``hkv/tp`` KV heads of the
+    global problem — every other shape (batch, chunk, cache geometry,
+    head dim) is unchanged.  This is the offline twin of the in-wrapper
+    ``require_launch`` call, which under shard_map sees (and validates)
+    exactly these local shapes.  Shard-divisibility violations come back
+    as a failed report, same as any other contract clause."""
+    if op not in ("int_attention", "int_decode_attention",
+                  "int_paged_prefill"):
+        raise KeyError(f"check_tp_launch covers the attention launches "
+                       f"of the tp serving path, not {op!r}")
+    reasons = []
+    if tp < 1:
+        reasons.append(f"tp must be >= 1 (got {tp})")
+    h, hkv = params.get("h"), params.get("hkv")
+    if h is None or hkv is None:
+        reasons.append("per-shard check needs the global h and hkv")
+    elif tp >= 1:
+        if hkv % tp:
+            reasons.append(f"tp={tp} must divide the KV head count "
+                           f"(hkv={hkv}): each shard owns hkv/tp heads")
+        if h % tp:
+            reasons.append(f"tp={tp} must divide the query head count "
+                           f"(h={h})")
+    if reasons:
+        return LaunchReport(op=op, ok=False, fused=False,
+                            reasons=tuple(reasons))
+    return check_launch(op, **{**params, "h": h // tp, "hkv": hkv // tp})
+
+
 def require_launch(report: LaunchReport) -> LaunchReport:
     """Raise :class:`KernelContractError` unless the kernel's own
     preconditions hold (``report.ok``).  Policy declines (``fused=False``
@@ -316,5 +349,5 @@ def require_launch(report: LaunchReport) -> LaunchReport:
 __all__ = [
     "KernelContractError", "LaunchReport", "MAX_SKV_ONLINE", "MIN_BLOCK",
     "can_tile", "can_tile_decode", "can_tile_prefill", "check_launch",
-    "fit_block", "require_launch",
+    "check_tp_launch", "fit_block", "require_launch",
 ]

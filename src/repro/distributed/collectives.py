@@ -63,3 +63,19 @@ def psum_int8(x, axis_name: str):
     q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
     total = jax.lax.psum(q.astype(jnp.int32), axis_name)
     return total.astype(jnp.float32) * scale
+
+
+def psum_int32(x, axis_name: str):
+    """Exact all-reduce of int32 partial accumulators across ``axis_name``.
+
+    The quantized collective of the tensor-parallel serving path: each
+    device contributes the int32 partial dot over its head slice, and
+    the integer sum is exact and order-independent — so a requant
+    epilogue applied *after* this psum rounds exactly once, on the same
+    accumulator a single device would have produced.  (Contrast
+    :func:`psum_int8`, which trades exactness for wire bytes on the
+    float training grads; serving partials are already integers, so the
+    wire payload is the accumulator itself.)"""
+    x = jnp.asarray(x)
+    assert x.dtype == jnp.int32, f"psum_int32 takes int32, got {x.dtype}"
+    return jax.lax.psum(x, axis_name)

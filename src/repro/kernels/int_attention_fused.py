@@ -210,6 +210,11 @@ def int_attention_fused(q8, k8, v8, plan: IAttnPlan, requant=None,
     Returns (B, Sq, H, D): int8 when the epilogue clips to ≤ 8 bits,
     int32 otherwise (raw / wide output).  Bit-exact against
     ``kernels.ref.ref_int_attention`` for the same arguments.
+
+    Under tensor-parallel serving (``distributed.tp_serving``) the
+    wrapper runs inside a shard_map body on head-sliced operands, so
+    ``require_launch`` validates the local (H/tp, Hkv/tp) launch;
+    ``analysis.contracts.check_tp_launch`` is its offline twin.
     """
     b, sq, h, d = q8.shape
     _, skv, hkv, _ = k8.shape
@@ -380,6 +385,11 @@ def int_paged_prefill_fused(q8, k_pool, v_pool, plan: IAttnPlan, pos_end,
     Returns (B, C, H, D) — or (B, C, N) folded.  Bit-exact against
     ``kernels.ref.ref_int_paged_prefill``'s attention output for the
     same (post-scatter) pools.
+
+    Under tensor-parallel serving the pools arrive head-sliced (each
+    device owns Hkv/tp heads of every page — page *ids* are global), so
+    ``require_launch`` validates the local launch;
+    ``analysis.contracts.check_tp_launch`` is its offline twin.
     """
     b, c, h, d = q8.shape
     ps, hkv = k_pool.shape[1], k_pool.shape[2]

@@ -191,6 +191,11 @@ def int_decode_attention_fused(q8, k8_cache, v8_cache, plan: IAttnPlan,
     final epilogue clips to ≤ 8 bits, int32 otherwise.  Bit-exact
     against ``kernels.ref.ref_int_decode_attention`` (+ the unfolded
     per-channel matmul when folding) for the same arguments.
+
+    Under tensor-parallel serving this wrapper runs inside a shard_map
+    body with the head axes already sliced, so the ``require_launch``
+    below validates the *local* (H/tp, Hkv/tp) launch each device
+    makes; ``analysis.contracts.check_tp_launch`` is its offline twin.
     """
     b, sq, h, d = q8.shape
     paged = pages is not None

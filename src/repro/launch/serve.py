@@ -62,6 +62,13 @@ def main():
                     help="disable cross-session prompt-prefix sharing "
                          "(shared prefixes otherwise map the same "
                          "physical KV pages)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree: shard attention heads "
+                         "over a tp-device mesh (must divide the "
+                         "arch's KV head count); backends without the "
+                         "tp_serving capability — or a box without the "
+                         "devices — serve through an exact single-"
+                         "device lowering instead")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--backend", default=None,
                     help="registered op backend (default: REPRO_BACKEND "
@@ -88,6 +95,13 @@ def main():
         ap.error("--prefill-budget must be >= 1 token/step")
     if args.reduced:
         cfg = M.reduce_config(cfg, dtype="float32", vocab=1024)
+    # --tp validates against the FINAL config (--reduced shrinks the
+    # head counts), same early-typed-error policy as the flags above
+    try:
+        from repro.distributed.tp_serving import validate_tp
+        validate_tp(cfg, args.tp)
+    except ValueError as e:
+        ap.error(f"--tp {args.tp}: {e}")
     params = tf.init_params(jax.random.key(0), cfg)
     if args.ckpt_dir:
         params, meta = load_checkpoint(args.ckpt_dir, (params, None))
@@ -108,7 +122,8 @@ def main():
                         fold_wo=not args.no_fold_wo,
                         prefill_chunk=args.prefill_chunk,
                         prefill_budget=args.prefill_budget,
-                        prefix_cache=not args.no_prefix_cache)
+                        prefix_cache=not args.no_prefix_cache,
+                        tp=args.tp)
     print(f"engine: {eng.describe_str()}")
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,

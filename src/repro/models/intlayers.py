@@ -19,7 +19,9 @@ from repro.core import activations as iact
 from repro.core import attention as iattn
 from repro.core import intmath, norms
 from repro.core import softmax as ism
-from repro.core.dyadic import clip_to_bits, rshift_round
+from repro.core.dyadic import apply_dyadic_perchannel, clip_to_bits, \
+    rshift_round
+from repro.distributed.collectives import psum_int32
 from repro.distributed.sharding import shard
 from repro.models.common import ArchConfig
 from repro.ops import QuantLinearParams, RequantSpec
@@ -48,6 +50,40 @@ def int_linear(x8, qw, plan: qplans.LinearPlan, ops=None):
     if not spec.is_raw and plan.out_bits <= 8:
         out = out.astype(jnp.int8)
     return out
+
+
+def _tp_wo_project(o8, qw, plan: qplans.LinearPlan, tp_axis: str,
+                   ops=None):
+    """Head-sharded o-projection (tensor-parallel serving).
+
+    ``o8``: (..., H_local·hd) int8 — this device's slice of the
+    attention output; ``qw.w8``: the matching *row* slice of wo.  Each
+    device computes the raw int32 partial product over its head slice,
+    :func:`~repro.distributed.collectives.psum_int32` combines the
+    partial slabs exactly, and only then do bias and the per-channel
+    requant epilogue apply — once, on the full-sum accumulator — so the
+    requant rounds exactly as it would on a single device (mirroring
+    ``kernels.ref.ref_apply_wo``).
+    """
+    ops = resolve_ops(ops)
+    qw = QuantLinearParams.of(qw)
+    lead = o8.shape[:-1]
+    n = qw.w8.shape[-1]
+    x2 = o8.reshape(-1, o8.shape[-1])
+    acc = ops.int8_matmul(x2, qw.w8, RequantSpec.raw())
+    acc = psum_int32(acc, tp_axis)
+    if qw.bias32 is not None:
+        acc = acc + qw.bias32[None, :]
+    spec = RequantSpec.for_linear(plan)
+    if spec.is_raw:
+        out = acc
+    else:
+        out = apply_dyadic_perchannel(acc, qw.b_mult, spec.c, spec.pre,
+                                      axis=-1)
+        out = clip_to_bits(out, spec.out_bits)
+        if spec.out_bits <= 8:
+            out = out.astype(jnp.int8)
+    return out.reshape(*lead, n)
 
 
 # ------------------------------------------------------------- norms ------
@@ -170,7 +206,8 @@ def int_attn_fwd(qp, x8, plans: qplans.AttnPlan, cfg: ArchConfig,
 def int_attn_decode(qp, x8, cache, pos, plans: qplans.AttnPlan,
                     cfg: ArchConfig, rope_tab=None, window: int = 0,
                     ops=None, pages=None, page_size: int = 0,
-                    max_len: int = 0, fold_wo: bool = False):
+                    max_len: int = 0, fold_wo: bool = False,
+                    tp_axis: Optional[str] = None):
     """One-token decode.  x8: (B,1,D); cache: {"k8","v8"}.
 
     ``pos``: (B,) current position (tokens written at logical slot
@@ -194,8 +231,20 @@ def int_attn_decode(qp, x8, cache, pos, plans: qplans.AttnPlan,
     handed over in its compact Hkv form.  With ``fold_wo`` the output
     projection's per-channel requant rides in the decode epilogue
     (``wo=``/``wo_spec=`` operands; bit-exact vs the unfolded path).
+
+    ``tp_axis``: when tracing under a tensor-parallel shard_map (see
+    ``repro.distributed.tp_serving``), ``cfg`` carries the *local* head
+    counts and the o-projection runs as partial-matmul → exact int32
+    psum across ``tp_axis`` → requant-once epilogue
+    (:func:`_tp_wo_project`).  Incompatible with ``fold_wo`` — the fold
+    would requant each device's partial slab before the all-reduce,
+    rounding more than once.
     """
     ops = resolve_ops(ops, cfg)
+    if tp_axis is not None and fold_wo:
+        raise ValueError("fold_wo cannot cross the tensor-parallel "
+                         "all-reduce: the wo requant must round once, "
+                         "after psum (pass fold_wo=False under tp)")
     b, _, d = x8.shape
     paged = pages is not None
     if paged:
@@ -240,16 +289,19 @@ def int_attn_decode(qp, x8, cache, pos, plans: qplans.AttnPlan,
         o8 = ops.int_decode_attention(
             q8, k_cache, v_cache, plans.attn, valid,
             requant=RequantSpec.per_tensor(plans.attn.dn_out), **kw)
-        o8 = o8.astype(jnp.int8)
-        out32 = int_linear(o8.reshape(b, 1, cfg.n_heads * cfg.hd),
-                           qp["wo"], plans.out, ops)
+        o8 = o8.astype(jnp.int8).reshape(b, 1, cfg.n_heads * cfg.hd)
+        if tp_axis is not None:
+            out32 = _tp_wo_project(o8, qp["wo"], plans.out, tp_axis, ops)
+        else:
+            out32 = int_linear(o8, qp["wo"], plans.out, ops)
     return out32, {"k8": k_cache, "v8": v_cache}
 
 
 def int_attn_prefill_chunk(qp, x8, cache, base_pos, plans: qplans.AttnPlan,
                            cfg: ArchConfig, rope_tab=None, ops=None,
                            pages=None, page_size: int = 0,
-                           fold_wo: bool = False):
+                           fold_wo: bool = False,
+                           tp_axis: Optional[str] = None):
     """Chunked prefill attention over a *paged* KV cache.
 
     x8: (B, C, D) — one prompt chunk per lane, covering that lane's
@@ -268,9 +320,17 @@ def int_attn_prefill_chunk(qp, x8, cache, base_pos, plans: qplans.AttnPlan,
     streaming the same tokens through :func:`int_attn_decode` one at a
     time.  With ``fold_wo`` the o-projection's per-channel requant rides
     in the prefill launch's epilogue (``prefill_wo_fold``).
+
+    ``tp_axis``: tensor-parallel tracing, exactly as in
+    :func:`int_attn_decode` (local-head ``cfg``, partial o-projection,
+    exact psum, requant-once; ``fold_wo`` must be off).
     """
     assert cfg.window == 0, "chunked prefill needs full causal attention"
     ops = resolve_ops(ops, cfg)
+    if tp_axis is not None and fold_wo:
+        raise ValueError("fold_wo cannot cross the tensor-parallel "
+                         "all-reduce: the wo requant must round once, "
+                         "after psum (pass fold_wo=False under tp)")
     b, c, d = x8.shape
     q8 = int_linear(x8, qp["wq"], plans.qkv, ops) \
         .reshape(b, c, cfg.n_heads, cfg.hd)
@@ -293,9 +353,11 @@ def int_attn_prefill_chunk(qp, x8, cache, base_pos, plans: qplans.AttnPlan,
         o8, k_pool, v_pool = ops.int_paged_prefill(
             q8, k8, v8, cache["k8"], cache["v8"], plans.attn, base_pos,
             pages, page_size, requant=requant)
-        o8 = o8.astype(jnp.int8)
-        out32 = int_linear(o8.reshape(b, c, cfg.n_heads * cfg.hd),
-                           qp["wo"], plans.out, ops)
+        o8 = o8.astype(jnp.int8).reshape(b, c, cfg.n_heads * cfg.hd)
+        if tp_axis is not None:
+            out32 = _tp_wo_project(o8, qp["wo"], plans.out, tp_axis, ops)
+        else:
+            out32 = int_linear(o8, qp["wo"], plans.out, ops)
     return out32, {"k8": k_pool, "v8": v_pool}
 
 

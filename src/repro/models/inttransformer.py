@@ -208,7 +208,7 @@ def init_decode_cache(cfg: ArchConfig, batch: int, cache_len: int,
 def _int_sublayer_decode(qp, cache, x32, plans, cfg: ArchConfig, kind,
                          rope_tab, pos, ops, pages=None,
                          page_size: int = 0, max_len: int = 0,
-                         fold_wo: bool = False):
+                         fold_wo: bool = False, tp_axis=None):
     mix, ff, has_cross = kind
     new_cache = dict(cache)
     h8 = il.int_norm(qp["norm1"], x32, plans.norm, ops)
@@ -217,7 +217,8 @@ def _int_sublayer_decode(qp, cache, x32, plans, cfg: ArchConfig, kind,
                                      plans.attn, cfg, rope_tab,
                                      window=cfg.window, ops=ops,
                                      pages=pages, page_size=page_size,
-                                     max_len=max_len, fold_wo=fold_wo)
+                                     max_len=max_len, fold_wo=fold_wo,
+                                     tp_axis=tp_axis)
         new_cache.update(kv)
     elif mix == "cross":
         a32 = _cross_decode(qp["attn"], h8, cache, plans, cfg, pos, ops)
@@ -264,7 +265,7 @@ def _cross_decode(qp, h8, cache, plans, cfg, pos, ops):
 def int_decode_step(qparams, caches, tokens, pos, plans, cfg: ArchConfig,
                     rope_tab=None, ops=None, pages=None,
                     page_size: int = 0, max_len: int = 0,
-                    fold_wo: bool = False):
+                    fold_wo: bool = False, tp_axis=None):
     """tokens: (B,) int32; pos: (B,) int32.  Returns (logits, caches).
 
     One scan over layer groups; inside the body the ``gl`` sublayers run in
@@ -274,7 +275,11 @@ def int_decode_step(qparams, caches, tokens, pos, plans, cfg: ArchConfig,
     (page table int32 (B, max_pages); see ``init_decode_cache(layout=)``
     and repro.serving.kvcache).  ``fold_wo`` folds each attention
     sublayer's o-projection requant into the decode epilogue
-    (bit-exact either way)."""
+    (bit-exact either way).  ``tp_axis``: tensor-parallel tracing under
+    shard_map — ``qparams``/``caches`` are head-sharded, ``cfg`` carries
+    the local head counts, and each attention o-projection all-reduces
+    its int32 partials before requanting once (see
+    ``repro.distributed.tp_serving``)."""
     ops = resolve_ops(ops, cfg)
     gl, ng, kinds = layer_group_spec(cfg)
     x32 = embed_int(qparams, tokens[:, None], plans, cfg)
@@ -288,7 +293,8 @@ def int_decode_step(qparams, caches, tokens, pos, plans, cfg: ArchConfig,
                                            pos, ops, pages=pages,
                                            page_size=page_size,
                                            max_len=max_len,
-                                           fold_wo=fold_wo)
+                                           fold_wo=fold_wo,
+                                           tp_axis=tp_axis)
             new_group.append(nc)
         return x32, tuple(new_group)
 
@@ -316,7 +322,7 @@ def chunked_prefill_supported(cfg: ArchConfig) -> bool:
 def int_prefill_chunk_step(qparams, caches, tokens, base_pos, plans,
                            cfg: ArchConfig, rope_tab=None, ops=None,
                            pages=None, page_size: int = 0,
-                           fold_wo: bool = False):
+                           fold_wo: bool = False, tp_axis=None):
     """One chunked-prefill step: advance every prefilling lane by one
     C-token prompt chunk, writing K/V straight into the paged pools.
 
@@ -353,7 +359,7 @@ def int_prefill_chunk_step(qparams, caches, tokens, base_pos, plans,
             a32, kv = il.int_attn_prefill_chunk(
                 qp["attn"], h8, cache, base_pos, plans.attn, cfg,
                 rope_tab, ops=ops, pages=pages, page_size=page_size,
-                fold_wo=fold_wo)
+                fold_wo=fold_wo, tp_axis=tp_axis)
             new_cache.update(kv)
             x32 = _residual_add(x32, a32, cfg)
             h8 = il.int_norm(qp["norm2"], x32, plans.norm, ops)

@@ -41,6 +41,11 @@ class PallasBackend:
     decode_wo_fold = False
     paged_prefill = False
     prefill_wo_fold = False
+    # deliberately does NOT advertise tp_serving: this backend is the
+    # serving engine's fallback exerciser — a tp > 1 engine over it
+    # takes the exact single-device gather lowering, which is what
+    # keeps that path tested (tp_serving on ref + pallas_fused)
+    tp_serving = False
 
     def __init__(self, name: str = "pallas",
                  interpret: Optional[bool] = None,

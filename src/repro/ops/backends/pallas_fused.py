@@ -53,6 +53,10 @@ class PallasFusedBackend(PallasBackend):
     decode_wo_fold = True     # folds the o-projection into the launch
     paged_prefill = True      # chunked prefill straight over the page table
     prefill_wo_fold = True    # ... with the o-projection folded in too
+    tp_serving = True         # kernels launch per-shard under shard_map
+    #   (the wrapper's require_launch then validates the LOCAL h/tp,
+    #   hkv/tp shapes; analysis.contracts.check_tp_launch is its
+    #   offline twin)
 
     def __init__(self, name: str = "pallas_fused", interpret=None,
                  blocks=None, min_block: int = 16):

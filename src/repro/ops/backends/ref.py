@@ -22,6 +22,9 @@ class RefBackend:
     decode_wo_fold = False
     paged_prefill = False
     prefill_wo_fold = False
+    # the pure-jnp oracles trace cleanly inside a shard_map body, so the
+    # serving engine may head-shard its launches across a tp mesh
+    tp_serving = True
 
     def int8_matmul(self, x8, w8, spec, *, bias32=None, b_vec=None, **opts):
         if spec.is_raw:

@@ -84,6 +84,14 @@ class Backend(Protocol):
       * ``prefill_wo_fold`` — the backend folds the o-projection into
         the prefill launch's epilogue, mirroring ``decode_wo_fold``.
         Without it, decode-then-``int8_matmul`` (bit-identical).
+      * ``tp_serving`` — the backend's ops trace inside a ``shard_map``
+        body, so the serving engine may head-shard its decode/prefill
+        launches tensor-parallel over a device mesh
+        (``distributed.tp_serving``; each shard launches with ``H/tp``
+        query and ``Hkv/tp`` KV heads).  Without the flag — on ANY
+        backend in the OpSet — a ``tp > 1`` engine takes the exact
+        single-device gather lowering instead: same API, bit-identical
+        tokens, no mesh.
     """
 
     name: str

@@ -53,6 +53,21 @@ requant into that launch's epilogue (``decode_wo_fold``; the chunked
 prefill launch folds it too via ``prefill_wo_fold``) — bit-exact vs the
 unfolded path.
 
+Tensor parallelism (``tp``): the engine shards its attention datapath
+head-wise over a 1-D device mesh (``distributed.tp_serving``) — each
+device owns ``Hkv/tp`` KV heads of every physical page and the matching
+query-head slice of wq/wk/wv, wo combines int32 partial o-projections
+with an exact :func:`~repro.distributed.collectives.psum_int32` *before*
+the requant epilogue (so it rounds once), and everything host-side
+(allocator, page table, prefix index, scheduler) stays replicated
+because page ids are device-agnostic.  Sharding engages only when every
+backend advertises the ``tp_serving`` capability and the process has
+``tp`` devices; otherwise the engine serves ``tp > 1`` through an exact
+single-device gather lowering (same API, same tokens).  Token streams
+are bit-exact across tp degrees: the datapath is all-integer, so the
+psum is order-independent and the replicated non-attention sublayers
+see identical inputs on every device.
+
 Shapes (batch lanes, page pool, logical cache length, prefill chunk) are
 fixed at engine construction, so lanes and pages recycle without
 recompiling.
@@ -67,7 +82,10 @@ from typing import Callable, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
+from repro.analysis import contracts
+from repro.distributed import tp_serving
 from repro.models import intlayers as il
 from repro.models import inttransformer as it
 from repro.models.common import ArchConfig
@@ -126,7 +144,7 @@ class ServingEngine:
                  num_pages: Optional[int] = None, fold_wo: bool = True,
                  prefill_chunk: Optional[int] = None,
                  prefill_budget: Optional[int] = None,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True, tp: int = 1):
         if backend is not None:
             warnings.warn("ServingEngine(backend=...) is deprecated; pass "
                           "ops= (an OpSet or backend name)",
@@ -145,6 +163,25 @@ class ServingEngine:
         self.cache_len = cache_len
         self.fold_wo = fold_wo
         self.ops = resolve_ops(ops, cfg)
+        # tensor parallelism: typed validation always (tp must divide
+        # Hkv, arch must be head-shardable), then capability/device
+        # negotiation picks the lowering — shard_map over a ("tp",) mesh
+        # when every backend advertises ``tp_serving`` and the process
+        # has the devices, else the exact single-device gather lowering
+        # (tokens identical either way, so tp > 1 is never an error on a
+        # 1-device box)
+        tp_serving.validate_tp(cfg, tp)
+        self.tp = tp
+        self.tp_sharded = (tp > 1
+                           and tp_serving.backends_support_tp(self.ops)
+                           and jax.device_count() >= tp)
+        self.mesh = tp_serving.make_tp_mesh(tp) if self.tp_sharded \
+            else None
+        if self.tp_sharded and self.fold_wo:
+            # the folded epilogue requants inside the kernel — before
+            # the cross-device psum — which would round per-shard; the
+            # sharded step always runs unfolded (requant-rounds-once)
+            self.fold_wo = False
         # whether prefill/cross attention runs as one fused kernel launch
         # (pallas / pallas_fused) or the two-pass oracle path (ref)
         self.attn_fused = \
@@ -194,6 +231,17 @@ class ServingEngine:
         else:
             self.prefix = None
         self._cow_copies = 0
+        if self.tp_sharded:
+            # static per-shard launch contracts first (shape errors name
+            # the tp clause, not a kernel assert three layers down),
+            # then lay the params and pools out over the mesh
+            self._check_tp_launches()
+            self._qspecs = tp_serving.qparam_pspecs(qparams)
+            self._cspecs = tp_serving.cache_pspecs(self.caches)
+            self.qparams = tp_serving.shard_put(self.qparams,
+                                                self._qspecs, self.mesh)
+            self.caches = tp_serving.shard_put(self.caches,
+                                               self._cspecs, self.mesh)
         self.pos = np.zeros(batch_size, np.int32)
         self.slots: List[Optional[Session]] = [None] * batch_size
         self.queue: List[Session] = []
@@ -238,14 +286,47 @@ class ServingEngine:
                 "physical pages")
         return min(prefill_chunk, self.layout.logical_len)
 
+    def _check_tp_launches(self):
+        """Per-shard launch contracts for the sharded step: under
+        shard_map every device launches the attention kernels with
+        ``H/tp`` / ``Hkv/tp`` heads, and :func:`~repro.analysis.
+        contracts.check_tp_launch` is the offline twin of the
+        ``require_launch`` each wrapper will run on those local
+        shapes.  Policy declines are fine (the backend falls back
+        exactly, per shard); contract violations raise here, at
+        construction."""
+        cfg, tp = self.cfg, self.tp
+        if self.paged:
+            geom = dict(max_pages=self.layout.max_pages,
+                        page_size=self.layout.page_size)
+        else:
+            geom = dict(L=self.L)
+        contracts.require_launch(contracts.check_tp_launch(
+            "int_decode_attention", tp=tp, b=self.batch, sq=1,
+            h=cfg.n_heads, hkv=cfg.n_kv_heads, d=cfg.hd, **geom))
+        if self._use_chunked:
+            contracts.require_launch(contracts.check_tp_launch(
+                "int_paged_prefill", tp=tp, b=self.batch,
+                c=self.prefill_chunk, h=cfg.n_heads, hkv=cfg.n_kv_heads,
+                d=cfg.hd, max_pages=self.layout.max_pages,
+                page_size=self.layout.page_size))
+
     # ------------------------------------------------------ compiled step --
 
     def _step_key(self, tag: str, *extra) -> tuple:
         geometry = ("paged", self.layout.page_size, self.layout.num_pages,
                     self.layout.max_pages, self.L) if self.paged \
             else ("contiguous",)
+        # mesh geometry: sharded engines key on (tp, device ids) — a
+        # differently-sized or differently-placed mesh must not share
+        # an executable; every unsharded engine (tp=1 AND the tp>1
+        # gather fallback, which traces the identical single-device
+        # program) collapses onto one ("mesh", 1) entry
+        mesh = ("mesh", self.tp,
+                tuple(int(d.id) for d in self.mesh.devices.flat)) \
+            if self.tp_sharded else ("mesh", 1)
         return (tag, self.cfg, self.plans, self.batch, self.cache_len,
-                geometry, self.fold_wo, *extra,
+                geometry, self.fold_wo, mesh, *extra,
                 tuple(id(self.ops.backend_for(op)) for op in OP_NAMES))
 
     def _shared_decode_step(self) -> Callable:
@@ -256,20 +337,27 @@ class ServingEngine:
         The callable closes over (plans, cfg, rope_tab, ops, cache
         geometry) only — never ``self`` — so a retired engine's weights,
         caches and sessions are not pinned by the process-global cache.
-        The key carries the page-pool shape: engines over
-        differently-provisioned pools must not share an executable."""
+        The key carries the page-pool shape and mesh geometry: engines
+        over differently-provisioned pools or meshes must not share an
+        executable."""
         plans, cfg, rope_tab, ops = (self.plans, self.cfg,
                                      self.rope_tab, self.ops)
         page_size = self.layout.page_size if self.paged else 0
         max_len = self.L if self.paged else 0
         fold_wo = self.fold_wo
+        tp_axis = None
+        if self.tp_sharded:
+            cfg = tp_serving.local_cfg(cfg, self.tp)
+            tp_axis = tp_serving.TP_AXIS
 
         def step(qparams, caches, tokens, pos, pages=None):
-            return it.int_decode_step(qparams, caches, tokens, pos,
-                                      plans, cfg, rope_tab, ops=ops,
-                                      pages=pages, page_size=page_size,
-                                      max_len=max_len, fold_wo=fold_wo)
+            return it.int_decode_step(
+                qparams, caches, tokens, pos, plans, cfg, rope_tab,
+                ops=ops, pages=pages, page_size=page_size,
+                max_len=max_len, fold_wo=fold_wo, tp_axis=tp_axis)
 
+        if self.tp_sharded:
+            step = self._tp_wrap(step, n_host_args=3 if self.paged else 2)
         return _cached_step(self._step_key("decode"),
                             lambda: jax.jit(step))
 
@@ -281,6 +369,10 @@ class ServingEngine:
                                      self.rope_tab, self.ops)
         page_size = self.layout.page_size
         fold_wo = self.fold_wo
+        tp_axis = None
+        if self.tp_sharded:
+            cfg = tp_serving.local_cfg(cfg, self.tp)
+            tp_axis = tp_serving.TP_AXIS
 
         def step(qparams, caches, tokens, base_pos, pages):
             return it.int_prefill_chunk_step(qparams, caches, tokens,
@@ -288,10 +380,31 @@ class ServingEngine:
                                              rope_tab, ops=ops,
                                              pages=pages,
                                              page_size=page_size,
-                                             fold_wo=fold_wo)
+                                             fold_wo=fold_wo,
+                                             tp_axis=tp_axis)
 
+        if self.tp_sharded:
+            step = self._tp_wrap(step, n_host_args=3, caches_only=True)
         return _cached_step(self._step_key("prefill", self.prefill_chunk),
                             lambda: jax.jit(step))
+
+    def _tp_wrap(self, step: Callable, n_host_args: int,
+                 caches_only: bool = False) -> Callable:
+        """shard_map a local step over the engine's ``("tp",)`` mesh:
+        qparams and caches flow in under their head-sharding specs,
+        the ``n_host_args`` scheduler operands (tokens, positions, page
+        table) replicate, and the returned caches keep their sharding so
+        the next step consumes them in place.  Logits come back
+        replicated — every device computed the identical full-width
+        value after the exact wo psum (``check_rep=False``: the
+        replication invariant is by integer-exactness construction, and
+        rep-checking doesn't trace through the pallas launches)."""
+        host = tuple(P() for _ in range(n_host_args))
+        in_specs = (self._qspecs, self._cspecs) + host
+        out_specs = self._cspecs if caches_only else (P(), self._cspecs)
+        smap = tp_serving.shard_map_fn()
+        return smap(step, mesh=self.mesh, in_specs=in_specs,
+                    out_specs=out_specs, check_rep=False)
 
     # ------------------------------------------------------ scheduling ---
 
@@ -737,6 +850,23 @@ class ServingEngine:
         cache["kv_bytes"] = int(sum(
             c[key].size * c[key].dtype.itemsize
             for c in self.caches for key in ("k8", "v8") if key in c))
+        tp = {
+            "tp": self.tp,
+            # "sharded": shard_map over the mesh; "gathered": tp > 1 but
+            # a backend lacks tp_serving (or the process lacks devices)
+            # — the exact single-device lowering; "off": tp == 1
+            "mode": ("sharded" if self.tp_sharded
+                     else "gathered" if self.tp > 1 else "off"),
+            "mesh": None if self.mesh is None else {
+                "axis": tp_serving.TP_AXIS,
+                "shape": [self.tp],
+                "devices": [int(d.id) for d in self.mesh.devices.flat],
+            },
+            # each device holds Hkv/tp of every page, so its pool slice
+            # is exactly 1/tp of the global KV bytes
+            "per_device_kv_bytes": cache["kv_bytes"] // self.tp
+            if self.tp_sharded else cache["kv_bytes"],
+        }
         return {
             "ops": self.ops.name,
             "backends": {op: self.ops.backend_for(op).name
@@ -750,6 +880,7 @@ class ServingEngine:
                 "paged_native": self.prefill_paged_native,
             },
             "fold_wo": self.fold_wo,
+            "tp": tp,
             "batch": self.batch,
             "cache_len": self.cache_len,
             "cache": cache,
@@ -770,9 +901,11 @@ class ServingEngine:
             else "streaming"
         if c.get("prefix") is not None:
             prefill += f"+prefix[{c['prefix']['entries']}]"
+        tp = "" if d["tp"]["tp"] == 1 \
+            else f" tp={d['tp']['tp']}:{d['tp']['mode']}"
         return (f"ops={d['ops']} attn={d['attn']} decode={d['decode']} "
-                f"prefill={prefill} fold_wo={str(d['fold_wo']).lower()} "
-                f"cache={cache} batch={d['batch']} "
+                f"prefill={prefill} fold_wo={str(d['fold_wo']).lower()}"
+                f"{tp} cache={cache} batch={d['batch']} "
                 f"cache_len={d['cache_len']}")
 
     def run_until_done(self, max_steps: int = 10000) -> List[Request]:

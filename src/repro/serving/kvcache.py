@@ -37,6 +37,13 @@ Invariants (normative — the kernel and the allocator both rely on them):
     sessions at once (that is the whole point of prefix sharing), and
     the engine copy-on-writes any page with refcount > 1 before the
     first write lands on it.
+  * **Page ids are device-agnostic.**  Under tensor-parallel serving
+    (``distributed.tp_serving``) the physical K/V pools shard on their
+    *head* axis — every device holds ``Hkv/tp`` heads of every page —
+    so this entire host-side layer (allocator, page table, prefix
+    index, sessions) stays replicated untouched: one allocation maps
+    the same page id into every device's pool slice, and CoW /
+    preempt / evict need no distributed bookkeeping.
 """
 from __future__ import annotations
 

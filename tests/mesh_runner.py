@@ -1,0 +1,52 @@
+"""Shared subprocess runner for multi-device CPU tests.
+
+``--xla_force_host_platform_device_count`` only takes effect if it is in
+``XLA_FLAGS`` *before* jax initializes its backends, and ``conftest.py``
+deliberately never sets it (smoke tests and benches must see exactly one
+device).  So every multi-device test hands its body to
+:func:`run_with_devices`, which runs it in a fresh subprocess whose
+script sets the flag first, imports jax second, and asserts the device
+count it actually obtained — silently testing 1 device is the failure
+mode this runner exists to prevent.
+"""
+import os
+import subprocess
+import sys
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                   "src"))
+
+_PRELUDE = """\
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=%(n)d")
+import sys
+sys.path.insert(0, %(src)r)
+import jax
+assert jax.device_count() == %(n)d, (
+    "forced host-device count not honored: asked for %(n)d, got "
+    + str(jax.device_count())
+    + " (jax initialized before XLA_FLAGS was set?)")
+"""
+
+
+def run_with_devices(body: str, n: int, tmp_path, timeout: int = 900):
+    """Run ``body`` (python source; jax + repro already importable, the
+    device count already asserted) in a subprocess forced to ``n`` host
+    devices.  The parent's own ``XLA_FLAGS`` is dropped from the child
+    environment so the script's pre-import assignment is authoritative.
+    Asserts a clean exit and the runner's own completion marker (so a
+    child that dies before the end fails loudly, with its stderr)."""
+    code = (_PRELUDE % {"n": n, "src": SRC}
+            + body + '\nprint("MESH-OK")\n')
+    f = tmp_path / "mesh_run.py"
+    f.write_text(code)
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, str(f)], capture_output=True,
+                         text=True, timeout=timeout, env=env)
+    assert out.returncode == 0, (
+        f"mesh child (n={n}) failed:\n--- stdout ---\n"
+        f"{out.stdout[-2000:]}\n--- stderr ---\n{out.stderr[-4000:]}")
+    assert "MESH-OK" in out.stdout, out.stdout[-2000:]
+    return out

@@ -475,6 +475,13 @@ def test_bench_json_schema_checker(tmp_path):
             "prefix_hit_rate": None,
         }},
         "parity": True, "arch": "llama3-8b", "quick": True,
+        "tp": {
+            "devices": 4, "parity": True,
+            "tp1": {"tokens_per_s": 10.0, "mode": "off",
+                    "kv_bytes": 1024, "per_device_kv_bytes": 1024},
+            "tp4": {"tokens_per_s": 9.0, "mode": "sharded",
+                    "kv_bytes": 1024, "per_device_kv_bytes": 256},
+        },
     }
     good = tmp_path / "BENCH_serving.json"
     good.write_text(json.dumps(data))
@@ -484,6 +491,7 @@ def test_bench_json_schema_checker(tmp_path):
     if os.path.exists(real):                # generated by bench runs
         assert check_file(real) == []
     del data["parity"]
+    del data["tp"]["tp4"]["per_device_kv_bytes"]
     for cfg in data["configs"].values():
         cfg["tokens_per_s"] = "fast"
     bad = tmp_path / "BENCH_bad" / "BENCH_serving.json"
@@ -492,4 +500,5 @@ def test_bench_json_schema_checker(tmp_path):
     errors = check_file(str(bad))
     assert any("parity" in e for e in errors)
     assert any("tokens_per_s" in e for e in errors)
+    assert any("per_device_kv_bytes" in e for e in errors)
     assert check_file(str(tmp_path / "BENCH_missing.json"))

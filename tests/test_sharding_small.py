@@ -2,20 +2,19 @@
 sharded train/serve steps on a tiny (2,2) mesh with 4 real host devices.
 
 This is the runnable counterpart of the 512-chip dry-run: same sharding
-rules, same step functions, real numerics.
+rules, same step functions, real numerics.  Runs through
+``mesh_runner.run_with_devices`` — subprocess isolation keeps
+``conftest.py``'s 1-device rule for smoke tests, and the runner's
+prelude asserts the forced device count was actually obtained (the old
+in-module ``os.environ`` mutation silently tested 1 device whenever jax
+was already initialized).
 """
-import os
-import subprocess
-import sys
-
 import pytest
 
-SCRIPT = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
-import sys
-sys.path.insert(0, "SRCPATH")
-import jax, jax.numpy as jnp
+from mesh_runner import run_with_devices
+
+BODY = r"""
+import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.configs.registry import get_config
 from repro.launch import shardings as shd
@@ -73,12 +72,5 @@ print("OK", loss1, loss2)
 @pytest.mark.parametrize("arch", ["llama3-8b", "qwen2-moe-a2.7b",
                                   "jamba-v0.1-52b"])
 def test_sharded_train_step_matches_reference(arch, tmp_path):
-    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
-                                       "src"))
-    code = SCRIPT.replace("SRCPATH", src).replace("ARCH", arch)
-    f = tmp_path / "run.py"
-    f.write_text(code)
-    out = subprocess.run([sys.executable, str(f)], capture_output=True,
-                         text=True, timeout=900)
-    assert out.returncode == 0, out.stderr[-3000:]
+    out = run_with_devices(BODY.replace("ARCH", arch), 4, tmp_path)
     assert "OK" in out.stdout
