@@ -18,7 +18,11 @@ reports:
     bytes, measured in a subprocess forced to 4 host devices (the
     ``--xla_force_host_platform_device_count`` flag must precede jax
     init, so the sharded engine can't run in this process) — token
-    parity sharded-vs-unsharded asserted as a by-product.
+    parity sharded-vs-unsharded asserted as a by-product;
+  * **speculative decoding**: accept-rate and effective tokens/s at
+    spec_k in {0, 2, 4} on a decode-heavy prompt-lookup harness, with
+    bit-identical streams asserted and an effective-throughput gate
+    (>= 1.3x the spec-off decode) enforced.
 
 Besides the usual CSV rows this module writes the machine-readable
 ``benchmarks/BENCH_serving.json`` (see ``benchmarks/check_bench_json.py``
@@ -127,6 +131,65 @@ def _serve(cfg, qp, plans, prompts, max_new: int, **engine_kw):
     }, toks
 
 
+def _spec_bench(cfg, qp, plans, quick: bool) -> dict:
+    """Speculative decoding: accept-rate and effective tokens/s at
+    spec_k in {0, 2, 4} on a decode-heavy prompt-lookup harness.
+
+    The prompt's greedy continuation settles into a short cycle the
+    n-gram proposer predicts, so the verify launch commits several
+    tokens per step — ``speedup`` is end-to-end wall-clock (prefill
+    included), and the committed streams are asserted bit-identical
+    across every spec_k as a by-product.
+    """
+    from repro.serving import Request, ServingEngine
+
+    prompt = [7] * 24
+    max_new = 160
+
+    def run(spec_k):
+        # best-of-3 after a warmup pass, so one scheduler hiccup on a
+        # shared CI box can't fail the speedup gate
+        best = None
+        for rep in range(4):
+            eng = ServingEngine(qp, plans, cfg, batch_size=2,
+                                cache_len=256, ops="ref", spec_k=spec_k)
+            reqs = [Request(uid=i, prompt=list(prompt),
+                            max_new_tokens=max_new) for i in range(2)]
+            for r in reqs:
+                eng.submit(r)
+            t0 = time.perf_counter()
+            eng.run_until_done()
+            dt = time.perf_counter() - t0
+            if rep == 0:
+                continue                    # warmup: compile both steps
+            n_tok = sum(len(r.out_tokens) for r in reqs)
+            if best is None or n_tok / dt > best[0]:
+                best = (n_tok / dt, eng.describe()["spec"],
+                        [list(r.out_tokens) for r in reqs])
+        return best
+
+    out = {}
+    toks = {}
+    for k in (0, 2, 4):
+        tps, stats, toks[k] = run(k)
+        out["k%d" % k] = {
+            "tokens_per_s": round(tps, 2),
+            "accept_rate": stats["accept_rate"],
+            "drafted": stats["drafted"],
+            "accepted": stats["accepted"],
+        }
+    out["parity"] = toks[2] == toks[0] and toks[4] == toks[0]
+    assert out["parity"], "speculative streams diverged from spec_k=0"
+    base = out["k0"]["tokens_per_s"]
+    out["speedup"] = round(max(out["k2"]["tokens_per_s"],
+                               out["k4"]["tokens_per_s"]) / base, 2)
+    assert out["k2"]["accept_rate"] > 0, out["k2"]
+    assert out["speedup"] >= 1.3, (
+        "speculative decoding effective tokens/s below the 1.3x gate: "
+        f"{out}")
+    return out
+
+
 # child script for the tensor-parallel measurement: the forced device
 # count only takes effect before jax initializes, so it cannot run in
 # this (already-1-device) process
@@ -201,10 +264,12 @@ def run(quick: bool = False):
     parity = toks_p == toks_c and toks_s == toks_c
     assert parity, "paged/chunked tokens diverged from contiguous"
     tp = _tp_bench(quick)
+    spec = _spec_bench(cfg, qp, plans, quick)
 
     with open(JSON_PATH, "w") as f:
         json.dump({"configs": configs, "parity": parity, "tp": tp,
-                   "arch": cfg.name, "quick": quick}, f, indent=2)
+                   "spec": spec, "arch": cfg.name, "quick": quick},
+                  f, indent=2)
 
     rows = []
     for name, c in configs.items():
@@ -239,6 +304,15 @@ def run(quick: bool = False):
                  tp["tp4"]["per_device_kv_bytes"],
                  f"of {tp['tp4']['kv_bytes']} global (Hkv/4 heads of "
                  "every page per device)"))
+    for k in (0, 2, 4):
+        c = spec["k%d" % k]
+        note = "spec off (baseline)" if k == 0 else (
+            f"accept_rate={c['accept_rate']}, "
+            f"{c['accepted']}/{c['drafted']} drafts")
+        rows.append((f"serving_spec_tokens_per_s[k{k}]",
+                     c["tokens_per_s"], note))
+    rows.append(("serving_spec_speedup", spec["speedup"],
+                 "best spec_k vs spec off, streams bit-identical"))
     return rows
 
 

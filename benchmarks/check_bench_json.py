@@ -48,6 +48,14 @@ SERVING_CONFIG = {
     "prefix_hit_rate": (int, float, type(None)),
 }
 
+# one spec_k point of the speculative-decoding measurement
+SPEC_CONFIG = {
+    "tokens_per_s": NUM,
+    "accept_rate": (int, float, type(None)),   # None at spec_k = 0
+    "drafted": int,
+    "accepted": int,
+}
+
 # per-config entry of CERTIFY.json: only "ok" is shared between the
 # certified shape (worst_bits/ops/assumptions) and the failed shape
 # (error {what, value, budget, op, layer, message}) — the checker has
@@ -65,6 +73,13 @@ SCHEMAS = {
             "parity": bool,
             "tp1": TP_CONFIG,
             "tp4": TP_CONFIG,
+        },
+        "spec": {
+            "k0": SPEC_CONFIG,
+            "k2": SPEC_CONFIG,
+            "k4": SPEC_CONFIG,
+            "parity": bool,
+            "speedup": NUM,
         },
         "arch": str,
         "quick": bool,

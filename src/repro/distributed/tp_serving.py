@@ -29,6 +29,14 @@ construction, no further collectives.
 GQA stays aligned under the shard: ``H/tp = q_group · Hkv/tp``, so a
 device's local query head ``j`` maps to its local KV head
 ``j // q_group`` exactly as in the global layout.
+
+Speculative decoding composes transparently: the engine's batched
+verify launch widens the query axis to ``Sq = spec_k + 1`` rows per
+lane, and ``Sq`` — like batch — is a *replicated* dimension under this
+mesh (only the head axes shard).  The same per-head pspecs serve both
+the ``Sq = 1`` decode step and the verify step, psum'd partial
+o-projections included, so sharded spec streams are bit-exact against
+single-device spec streams and against ``spec_k = 0``.
 """
 from __future__ import annotations
 

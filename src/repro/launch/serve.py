@@ -69,6 +69,16 @@ def main():
                          "tp_serving capability — or a box without the "
                          "devices — serve through an exact single-"
                          "device lowering instead")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: draft up to K tokens per "
+                         "live lane and verify all K+1 positions in one "
+                         "decode launch (greedy acceptance; streams stay "
+                         "bit-exact with --spec-k 0); bounded by the "
+                         "kernel's MAX_SQ query budget; 0 = off")
+    ap.add_argument("--spec-mode", default="ngram",
+                    help="draft proposer (self-speculative, no draft "
+                         "model); 'ngram' = prompt-lookup over the "
+                         "session's own context")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--backend", default=None,
                     help="registered op backend (default: REPRO_BACKEND "
@@ -102,6 +112,21 @@ def main():
         validate_tp(cfg, args.tp)
     except ValueError as e:
         ap.error(f"--tp {args.tp}: {e}")
+    # --spec-k likewise validates against the FINAL config: sliding-
+    # window / SSM / cross-attention archs (and unknown proposers, and
+    # K beyond the kernel's MAX_SQ budget) fail here as an argparse
+    # error, not as a shape error inside the verify launch
+    if args.spec_k:
+        if args.temperature > 0:
+            ap.error("--spec-k needs --temperature 0: greedy longest-"
+                     "prefix acceptance is only bit-exact against the "
+                     "argmax stream; a sampled stream would silently "
+                     "diverge")
+        try:
+            from repro.serving.speculate import validate_spec
+            validate_spec(cfg, args.spec_k, args.spec_mode)
+        except ValueError as e:
+            ap.error(f"--spec-k {args.spec_k}: {e}")
     params = tf.init_params(jax.random.key(0), cfg)
     if args.ckpt_dir:
         params, meta = load_checkpoint(args.ckpt_dir, (params, None))
@@ -123,7 +148,8 @@ def main():
                         prefill_chunk=args.prefill_chunk,
                         prefill_budget=args.prefill_budget,
                         prefix_cache=not args.no_prefix_cache,
-                        tp=args.tp)
+                        tp=args.tp, spec_k=args.spec_k,
+                        spec_mode=args.spec_mode)
     print(f"engine: {eng.describe_str()}")
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,
@@ -143,6 +169,13 @@ def main():
     print(f"served {len(reqs)} requests / {n_tok} tokens in {steps} "
           f"batched steps, {dt:.1f}s ({n_tok/dt:.1f} tok/s, int8 KV "
           "cache)")
+    sp = eng.describe()["spec"]
+    if sp["k"]:
+        rate = f"{sp['accept_rate']:.0%}" \
+            if sp["accept_rate"] is not None else "n/a"
+        print(f"speculation ({sp['mode']}, k={sp['k']}): "
+              f"{sp['accepted']}/{sp['drafted']} drafts accepted "
+              f"({rate}), {sp['wasted']} wasted verify rows")
     px = eng.describe()["cache"].get("prefix")
     if px:
         print(f"prefix cache: {px['hits']} hits / {px['misses']} misses, "

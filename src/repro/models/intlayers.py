@@ -207,7 +207,7 @@ def int_attn_decode(qp, x8, cache, pos, plans: qplans.AttnPlan,
                     cfg: ArchConfig, rope_tab=None, window: int = 0,
                     ops=None, pages=None, page_size: int = 0,
                     max_len: int = 0, fold_wo: bool = False,
-                    tp_axis: Optional[str] = None):
+                    tp_axis: Optional[str] = None, n_new=None):
     """One-token decode.  x8: (B,1,D); cache: {"k8","v8"}.
 
     ``pos``: (B,) current position (tokens written at logical slot
@@ -239,43 +239,93 @@ def int_attn_decode(qp, x8, cache, pos, plans: qplans.AttnPlan,
     (:func:`_tp_wo_project`).  Incompatible with ``fold_wo`` — the fold
     would requant each device's partial slab before the all-reduce,
     rounding more than once.
+
+    ``n_new``: the speculative-verify generalization.  When given,
+    ``x8`` is (B, S, D) with each lane's real tokens **right-aligned**
+    in the S rows — row ``i`` is real iff ``i >= S - n_new[b]`` and
+    covers logical position ``pos[b] + n_new[b] - S + i`` (the last row
+    always lands on ``pos + n_new - 1``; full causal only, so the
+    engine gates speculation to ``window == 0``).  Pad rows write
+    nothing (paged: routed to the null page; contiguous: out-of-bounds
+    scatter explicitly dropped) and their garbage outputs are discarded
+    by the caller.  ``valid_len = pos + n_new`` then gives every row
+    ``i`` the stepped-mask visibility ``positions <= pos + n_new - S +
+    i`` — exactly the positions a sequential one-token decode of the
+    same tokens would see, which is why the verify launch is bit-exact
+    against ``n_new`` single-token steps.  Precondition (engine-
+    enforced): ``pos + n_new <= L``, so every real write lands in
+    bounds and ``valid_len`` never clips a real row's mask limit.
     """
     ops = resolve_ops(ops, cfg)
     if tp_axis is not None and fold_wo:
         raise ValueError("fold_wo cannot cross the tensor-parallel "
                          "all-reduce: the wo requant must round once, "
                          "after psum (pass fold_wo=False under tp)")
-    b, _, d = x8.shape
+    b, s, d = x8.shape
     paged = pages is not None
     if paged:
         L = max_len or pages.shape[1] * page_size
     else:
         L = cache["k8"].shape[1]
     q8 = int_linear(x8, qp["wq"], plans.qkv, ops) \
-        .reshape(b, 1, cfg.n_heads, cfg.hd)
+        .reshape(b, s, cfg.n_heads, cfg.hd)
     k8 = int_linear(x8, qp["wk"], plans.qkv, ops) \
-        .reshape(b, 1, cfg.n_kv_heads, cfg.hd)
+        .reshape(b, s, cfg.n_kv_heads, cfg.hd)
     v8 = int_linear(x8, qp["wv"], plans.qkv, ops) \
-        .reshape(b, 1, cfg.n_kv_heads, cfg.hd)
-    if rope_tab is not None:
-        q8 = apply_int_rope(q8, pos[:, None], rope_tab)
-        k8 = apply_int_rope(k8, pos[:, None], rope_tab)
-    if window > 0:
-        slot = pos % window
+        .reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    if n_new is None:
+        if rope_tab is not None:
+            q8 = apply_int_rope(q8, pos[:, None], rope_tab)
+            k8 = apply_int_rope(k8, pos[:, None], rope_tab)
+        if window > 0:
+            slot = pos % window
+        else:
+            slot = pos
+        if paged:
+            pages = jnp.asarray(pages, jnp.int32)
+            bidx = jnp.arange(b)
+            page = pages[bidx, slot // page_size]
+            off = slot % page_size
+            k_cache = cache["k8"].at[page, off].set(k8[:, 0])
+            v_cache = cache["v8"].at[page, off].set(v8[:, 0])
+        else:
+            bidx = jnp.arange(b)
+            k_cache = cache["k8"].at[bidx, slot].set(k8[:, 0])
+            v_cache = cache["v8"].at[bidx, slot].set(v8[:, 0])
+        valid = jnp.minimum(pos + 1, L) if (window > 0 or paged) \
+            else pos + 1
     else:
-        slot = pos
-    if paged:
-        pages = jnp.asarray(pages, jnp.int32)
-        bidx = jnp.arange(b)
-        page = pages[bidx, slot // page_size]
-        off = slot % page_size
-        k_cache = cache["k8"].at[page, off].set(k8[:, 0])
-        v_cache = cache["v8"].at[page, off].set(v8[:, 0])
-    else:
-        bidx = jnp.arange(b)
-        k_cache = cache["k8"].at[bidx, slot].set(k8[:, 0])
-        v_cache = cache["v8"].at[bidx, slot].set(v8[:, 0])
-    valid = jnp.minimum(pos + 1, L) if (window > 0 or paged) else pos + 1
+        assert window == 0, \
+            "speculative verify needs full causal attention"
+        n_new = jnp.asarray(n_new, jnp.int32)
+        rows = jnp.arange(s, dtype=jnp.int32)[None, :]       # (1, S)
+        rpos = pos[:, None] + n_new[:, None] - s + rows      # (B, S)
+        write_ok = rows >= s - n_new[:, None]
+        # pad-row positions clamp to 0 (their rope rotation and writes
+        # are masked/discarded; a negative gather index would clamp to
+        # the table's LAST entry and silently alias a live position)
+        rpos_c = jnp.maximum(rpos, 0)
+        if rope_tab is not None:
+            q8 = apply_int_rope(q8, rpos_c, rope_tab)
+            k8 = apply_int_rope(k8, rpos_c, rope_tab)
+        if paged:
+            pages = jnp.asarray(pages, jnp.int32)
+            bidx = jnp.arange(b)[:, None]
+            page = pages[bidx, rpos_c // page_size]          # (B, S)
+            # pad rows write into the reserved null page 0, whose
+            # contents are never valid (repro.serving.kvcache)
+            page = jnp.where(write_ok, page, 0)
+            off = rpos_c % page_size
+            k_cache = cache["k8"].at[page, off].set(k8)
+            v_cache = cache["v8"].at[page, off].set(v8)
+        else:
+            bidx = jnp.arange(b)[:, None]
+            # pad rows scatter out of bounds and are explicitly
+            # dropped (scatter OOB is unspecified without a mode)
+            slot_w = jnp.where(write_ok, rpos_c, L)
+            k_cache = cache["k8"].at[bidx, slot_w].set(k8, mode="drop")
+            v_cache = cache["v8"].at[bidx, slot_w].set(v8, mode="drop")
+        valid = pos + n_new
     kw = {}
     if paged:
         kw.update(pages=pages, page_size=page_size)
@@ -289,7 +339,7 @@ def int_attn_decode(qp, x8, cache, pos, plans: qplans.AttnPlan,
         o8 = ops.int_decode_attention(
             q8, k_cache, v_cache, plans.attn, valid,
             requant=RequantSpec.per_tensor(plans.attn.dn_out), **kw)
-        o8 = o8.astype(jnp.int8).reshape(b, 1, cfg.n_heads * cfg.hd)
+        o8 = o8.astype(jnp.int8).reshape(b, s, cfg.n_heads * cfg.hd)
         if tp_axis is not None:
             out32 = _tp_wo_project(o8, qp["wo"], plans.out, tp_axis, ops)
         else:

@@ -304,6 +304,92 @@ def int_decode_step(qparams, caches, tokens, pos, plans, cfg: ArchConfig,
     return logits, list(new_caches)
 
 
+def speculative_decode_supported(cfg: ArchConfig) -> bool:
+    """Whether :func:`int_verify_step` serves this arch: full
+    (non-windowed) causal attention, no lane-indexed sublayer state.
+    Sliding windows interleave rolling-buffer writes and reads token by
+    token (a batched multi-position write would clobber slots earlier
+    verify rows still need), and SSM / cross-attention state advances
+    destructively per token — a rejected draft could not roll it back.
+    Dense FFN *and* MoE sublayers are fine: decode routes MoE with
+    ``group_size=1`` (one token per routing group), so each verify row
+    routes independently, bit-exact against sequential decode."""
+    _, _, kinds = layer_group_spec(cfg)
+    return cfg.window == 0 and all(mix == "attn" and not has_cross
+                                   for (mix, ff, has_cross) in kinds)
+
+
+def int_verify_step(qparams, caches, tokens, pos, n_new, plans,
+                    cfg: ArchConfig, rope_tab=None, ops=None, pages=None,
+                    page_size: int = 0, max_len: int = 0,
+                    fold_wo: bool = False, tp_axis=None):
+    """One speculative verify step: score S = spec_k + 1 candidate
+    positions per lane in a single stepped-mask decode launch.
+
+    ``tokens``: (B, S) int32, each lane's real tokens (last committed
+    token + its drafts) **right-aligned**; ``pos``: (B,) the lane's
+    current position (the first real row writes there); ``n_new``: (B,)
+    count of real rows, ``1 <= n_new <= S`` with ``pos + n_new <= L``
+    (idle lanes pass ``n_new = 1`` with token 0 — the same discarded
+    garbage row the plain decode step gives them).  Returns
+    ``(logits (B, S, V), caches)`` — the caller reads rows
+    ``S - n_new ..`` and commits the longest argmax-matching draft
+    prefix plus the bonus token.
+
+    Row ``i`` of lane ``b`` covers logical position ``pos[b] +
+    n_new[b] - S + i`` and the ``valid_len = pos + n_new`` stepped mask
+    (``ops.int_decode_attention``; built for exactly this in PR 3)
+    limits it to positions ``<= pos + n_new - S + i`` — the visibility
+    a sequential decode of the same tokens would have.  Embedding,
+    norms, FFN/MoE(``group_size=1``) and the residual stream are
+    position-independent, and the attention rows are masked
+    identically, so each real row's logits are **bit-exact** against
+    feeding its token through :func:`int_decode_step` — greedy
+    acceptance therefore reproduces the non-speculative stream token
+    for token.  Supported archs: :func:`speculative_decode_supported`.
+    """
+    ops = resolve_ops(ops, cfg)
+    if not speculative_decode_supported(cfg):
+        raise ValueError("speculative verify unsupported for arch "
+                         f"{cfg.name!r} (needs window == 0 and "
+                         "attention+ffn/moe sublayers only)")
+    gl, ng, kinds = layer_group_spec(cfg)
+    x32 = embed_int(qparams, tokens, plans, cfg)
+
+    def body(x32, xs):
+        qp_group, cache_group = xs
+        new_group = []
+        for j, kind in enumerate(kinds):
+            qp, cache = qp_group[j], cache_group[j]
+            new_cache = dict(cache)
+            h8 = il.int_norm(qp["norm1"], x32, plans.norm, ops)
+            a32, kv = il.int_attn_decode(qp["attn"], h8, cache, pos,
+                                         plans.attn, cfg, rope_tab,
+                                         window=0, ops=ops, pages=pages,
+                                         page_size=page_size,
+                                         max_len=max_len, fold_wo=fold_wo,
+                                         tp_axis=tp_axis, n_new=n_new)
+            new_cache.update(kv)
+            x32 = _residual_add(x32, a32, cfg)
+            _, ff, _ = kind
+            if ff is not None:
+                h8 = il.int_norm(qp["norm2"], x32, plans.norm, ops)
+                if ff == "moe":
+                    f32 = il.int_moe_fwd(qp["moe"], h8, plans.moe, cfg,
+                                         ops, group_size=1)
+                else:
+                    f32 = il.int_ffn_fwd(qp["ffn"], h8, plans.ffn, cfg,
+                                         ops)
+                x32 = _residual_add(x32, f32, cfg)
+            new_group.append(new_cache)
+        return x32, tuple(new_group)
+
+    x32, new_caches = jax.lax.scan(
+        body, x32, (tuple(qparams["layers"]), tuple(caches)))
+    logits = logits_int(qparams, x32, plans, cfg, ops)
+    return logits, list(new_caches)
+
+
 def chunked_prefill_supported(cfg: ArchConfig) -> bool:
     """Whether :func:`int_prefill_chunk_step` serves this arch: full
     (non-windowed) causal attention + dense FFN sublayers only.  Sliding

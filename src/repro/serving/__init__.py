@@ -1,9 +1,15 @@
-from repro.serving.engine import ServingEngine, Request
+from repro.serving.engine import EngineStalled, Request, ServingEngine
 from repro.serving.kvcache import (BlockAllocator, CacheLayout, NULL_PAGE,
                                    PagedKVCache, PagePoolExhausted,
                                    PageTable, PrefixEntry, PrefixIndex,
                                    Session)
+from repro.serving.speculate import (NgramProposer, Proposer,
+                                     SpeculationError,
+                                     SpeculationUnsupported, get_proposer,
+                                     validate_spec)
 
-__all__ = ["ServingEngine", "Request", "BlockAllocator", "CacheLayout",
-           "NULL_PAGE", "PagedKVCache", "PagePoolExhausted", "PageTable",
-           "PrefixEntry", "PrefixIndex", "Session"]
+__all__ = ["ServingEngine", "Request", "EngineStalled", "BlockAllocator",
+           "CacheLayout", "NULL_PAGE", "PagedKVCache", "PagePoolExhausted",
+           "PageTable", "PrefixEntry", "PrefixIndex", "Session",
+           "NgramProposer", "Proposer", "SpeculationError",
+           "SpeculationUnsupported", "get_proposer", "validate_spec"]

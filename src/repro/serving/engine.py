@@ -68,6 +68,22 @@ are bit-exact across tp degrees: the datapath is all-integer, so the
 psum is order-independent and the replicated non-attention sublayers
 see identical inputs on every device.
 
+Speculative decoding (``spec_k``): each decode step drafts up to
+``spec_k`` tokens per live lane from a self-speculative proposer
+(``serving.speculate`` — prompt-lookup over the lane's own prompt +
+output, no draft model) and verifies all ``spec_k + 1`` positions in ONE
+``int_decode_attention`` launch with the Sq = K+1 stepped mask (fused on
+``pallas_fused``, exact oracle elsewhere).  Greedy acceptance commits
+the longest draft prefix matching the model's own argmax stream plus
+one bonus token; rejected tokens roll back as a position decrement plus
+:meth:`~repro.serving.kvcache.PagedKVCache.truncate` (now-empty pages
+return to the allocator; stale K/V is hidden by ``valid_len`` and
+overwritten by the next step).  Token streams are bit-exact with
+``spec_k = 0`` — speculation changes *when* tokens are computed, never
+*which* — so it composes with every cache layout, prefill mode and tp
+degree.  Greedy only: ``temperature > 0`` requests are rejected with a
+typed :class:`~repro.serving.speculate.SpeculationUnsupported`.
+
 Shapes (batch lanes, page pool, logical cache length, prefill chunk) are
 fixed at engine construction, so lanes and pages recycle without
 recompiling.
@@ -92,9 +108,33 @@ from repro.models.common import ArchConfig
 from repro.models.transformer import layer_group_spec
 from repro.ops import OP_NAMES, resolve_ops
 from repro.quant import plans as qplans
+from repro.serving import speculate
 from repro.serving.kvcache import (NULL_PAGE, CacheLayout,
                                    PagePoolExhausted, PagedKVCache,
                                    PrefixIndex, Session)
+
+
+class EngineStalled(RuntimeError):
+    """``run_until_done`` exhausted its step budget with sessions still
+    queued or on lanes — a stall (pool livelock, starved prefill, a
+    budget too small for the workload), not completion.  Carries the
+    scheduler state a caller needs to diagnose it: ``max_steps``,
+    ``queue_depth``, and per-lane ``slots`` dicts (uid / state / pos /
+    prefill_pos)."""
+
+    def __init__(self, max_steps: int, slots, queue_depth: int):
+        self.max_steps = max_steps
+        self.slots = slots
+        self.queue_depth = queue_depth
+        lanes = ", ".join(
+            "lane %d: uid=%s %s pos=%s prefill_pos=%s" % (
+                i, s["uid"], s["state"], s["pos"], s["prefill_pos"])
+            for i, s in enumerate(slots) if s is not None) or "all idle"
+        super().__init__(
+            f"engine stalled: {max_steps} steps exhausted with "
+            f"{queue_depth} queued session(s) and unfinished lanes "
+            f"({lanes}); raise max_steps, relieve pool pressure, or "
+            "evict a session")
 
 # Process-level cache of compiled engine steps (decode and chunked
 # prefill), keyed by everything the traced closure captures (cfg, plans,
@@ -144,7 +184,8 @@ class ServingEngine:
                  num_pages: Optional[int] = None, fold_wo: bool = True,
                  prefill_chunk: Optional[int] = None,
                  prefill_budget: Optional[int] = None,
-                 prefix_cache: bool = True, tp: int = 1):
+                 prefix_cache: bool = True, tp: int = 1,
+                 spec_k: int = 0, spec_mode: str = "ngram"):
         if backend is not None:
             warnings.warn("ServingEngine(backend=...) is deprecated; pass "
                           "ops= (an OpSet or backend name)",
@@ -171,6 +212,17 @@ class ServingEngine:
         # (tokens identical either way, so tp > 1 is never an error on a
         # 1-device box)
         tp_serving.validate_tp(cfg, tp)
+        # speculative decoding: typed validation at the boundary (k in
+        # budget, arch verify-able, proposer registered) — the Sq=K+1
+        # launch contract is checked below, once the cache geometry is
+        # known
+        speculate.validate_spec(cfg, spec_k, spec_mode)
+        self.spec_k = spec_k
+        self.spec_mode = spec_mode if spec_k else "off"
+        self.proposer = speculate.get_proposer(spec_mode) if spec_k \
+            else None
+        self._spec_drafted = 0
+        self._spec_accepted = 0
         self.tp = tp
         self.tp_sharded = (tp > 1
                            and tp_serving.backends_support_tp(self.ops)
@@ -231,6 +283,16 @@ class ServingEngine:
         else:
             self.prefix = None
         self._cow_copies = 0
+        if self.spec_k:
+            # construction-time twin of the verify launch's own
+            # require_launch: the Sq = spec_k + 1 stepped-mask decode
+            # must satisfy the kernel contract on this cache geometry
+            # (policy declines are fine — the backend falls back
+            # exactly; contract violations raise here, typed)
+            contracts.require_launch(contracts.check_launch(
+                "int_decode_attention", b=self.batch,
+                sq=self.spec_k + 1, h=cfg.n_heads, hkv=cfg.n_kv_heads,
+                d=cfg.hd, **self._decode_geom()))
         if self.tp_sharded:
             # static per-shard launch contracts first (shape errors name
             # the tp clause, not a kernel assert three layers down),
@@ -250,6 +312,8 @@ class ServingEngine:
         self._decode = self._shared_decode_step()
         self._prefill_step = self._shared_prefill_step() \
             if self._use_chunked else None
+        self._verify = self._shared_verify_step() if self.spec_k \
+            else None
 
     def _resolve_prefill_chunk(self, prefill_chunk: Optional[int]) -> int:
         """Validate/auto-size the prefill chunk.  0 disables chunked
@@ -286,6 +350,14 @@ class ServingEngine:
                 "physical pages")
         return min(prefill_chunk, self.layout.logical_len)
 
+    def _decode_geom(self) -> dict:
+        """The decode launch's cache-geometry params for
+        :func:`~repro.analysis.contracts.check_launch`."""
+        if self.paged:
+            return dict(max_pages=self.layout.max_pages,
+                        page_size=self.layout.page_size)
+        return dict(L=self.L)
+
     def _check_tp_launches(self):
         """Per-shard launch contracts for the sharded step: under
         shard_map every device launches the attention kernels with
@@ -296,14 +368,15 @@ class ServingEngine:
         exactly, per shard); contract violations raise here, at
         construction."""
         cfg, tp = self.cfg, self.tp
-        if self.paged:
-            geom = dict(max_pages=self.layout.max_pages,
-                        page_size=self.layout.page_size)
-        else:
-            geom = dict(L=self.L)
-        contracts.require_launch(contracts.check_tp_launch(
-            "int_decode_attention", tp=tp, b=self.batch, sq=1,
-            h=cfg.n_heads, hkv=cfg.n_kv_heads, d=cfg.hd, **geom))
+        geom = self._decode_geom()
+        # one check per decode-launch Sq the engine will issue: 1 for
+        # the plain step, spec_k + 1 for the speculative verify (Sq is
+        # replicated under the mesh — only the head counts shard)
+        sqs = (1,) if not self.spec_k else (1, self.spec_k + 1)
+        for sq in sqs:
+            contracts.require_launch(contracts.check_tp_launch(
+                "int_decode_attention", tp=tp, b=self.batch, sq=sq,
+                h=cfg.n_heads, hkv=cfg.n_kv_heads, d=cfg.hd, **geom))
         if self._use_chunked:
             contracts.require_launch(contracts.check_tp_launch(
                 "int_paged_prefill", tp=tp, b=self.batch,
@@ -388,6 +461,34 @@ class ServingEngine:
         return _cached_step(self._step_key("prefill", self.prefill_chunk),
                             lambda: jax.jit(step))
 
+    def _shared_verify_step(self) -> Callable:
+        """The jitted speculative verify step (tokens (B, S = spec_k+1)
+        right-aligned, pos (B,), n_new (B,), page table) -> (logits
+        (B, S, V), new caches); cached exactly like the decode step,
+        with a ("spec", S) element in the key — a spec engine and a
+        plain engine (or two different spec_k) must not share an
+        executable."""
+        plans, cfg, rope_tab, ops = (self.plans, self.cfg,
+                                     self.rope_tab, self.ops)
+        page_size = self.layout.page_size if self.paged else 0
+        max_len = self.L if self.paged else 0
+        fold_wo = self.fold_wo
+        tp_axis = None
+        if self.tp_sharded:
+            cfg = tp_serving.local_cfg(cfg, self.tp)
+            tp_axis = tp_serving.TP_AXIS
+
+        def step(qparams, caches, tokens, pos, n_new, pages=None):
+            return it.int_verify_step(
+                qparams, caches, tokens, pos, n_new, plans, cfg,
+                rope_tab, ops=ops, pages=pages, page_size=page_size,
+                max_len=max_len, fold_wo=fold_wo, tp_axis=tp_axis)
+
+        if self.tp_sharded:
+            step = self._tp_wrap(step, n_host_args=4 if self.paged else 3)
+        return _cached_step(self._step_key("spec", self.spec_k + 1),
+                            lambda: jax.jit(step))
+
     def _tp_wrap(self, step: Callable, n_host_args: int,
                  caches_only: bool = False) -> Callable:
         """shard_map a local step over the engine's ``("tp",)`` mesh:
@@ -414,6 +515,14 @@ class ServingEngine:
         if not req.prompt:
             raise ValueError("empty prompt: a request needs at least one "
                              "token")
+        if self.spec_k and req.temperature > 0:
+            raise speculate.SpeculationUnsupported(
+                f"spec_k={self.spec_k} serves greedy requests only: "
+                "acceptance keeps the longest draft prefix matching the "
+                "argmax stream, so a temperature="
+                f"{req.temperature} sampled stream would silently "
+                "diverge from the non-speculative engine; sample with "
+                "spec_k=0")
         if self.cfg.window == 0 and len(req.prompt) > self.L:
             # without a sliding window there is nowhere for positions
             # >= L to go: prefill would write past the cache (paged:
@@ -688,24 +797,31 @@ class ServingEngine:
             self.kv.page_table.table[sess.slot, blk] = new
         self._cow_copies += 1
 
-    def _ensure_write_pages(self):
+    def _ensure_write_pages(self, n_new=None):
         """Before a decode step, make the page under every live lane's
         write position resident (append-only allocation; raises
         :class:`PagePoolExhausted` when the pool is out) and exclusively
         owned (copy-on-write for pages shared through the prefix
-        index)."""
+        index).  ``n_new`` (B,) widens the per-lane write span to
+        ``[pos, pos + n_new)`` for the speculative verify launch —
+        every block the span touches is made resident and CoW'd, so a
+        draft write can never land on a page the prefix index (or a
+        prefix-sharing sibling) still reads."""
         if not self.paged:
             return
         for slot, sess in enumerate(self.slots):
             if sess is None:
                 continue
             p = int(self.pos[slot])
-            wslot = p % self.cfg.window if self.cfg.window > 0 else p
-            wslot = min(wslot, self.L - 1)
-            self.kv.ensure(sess, wslot)
-            blk = wslot // self.layout.page_size
-            if self.kv.allocator.refcount[sess.pages[blk]] > 1:
-                self._cow(sess, blk)
+            span = 1 if n_new is None else int(n_new[slot])
+            for j in range(span):
+                q = p + j
+                wslot = q % self.cfg.window if self.cfg.window > 0 else q
+                wslot = min(wslot, self.L - 1)
+                self.kv.ensure(sess, wslot)
+                blk = wslot // self.layout.page_size
+                if self.kv.allocator.refcount[sess.pages[blk]] > 1:
+                    self._cow(sess, blk)
 
     def evict(self, sess: Session):
         """Cancel a session: free its lane and release every page it
@@ -783,6 +899,15 @@ class ServingEngine:
         return self._decode(self.qparams, self.caches, jnp.asarray(toks),
                             self._snap_pos())
 
+    def _run_verify(self, toks, n_new):
+        n_new = jnp.asarray(n_new.copy())      # same snapshot rule as pos
+        if self.paged:
+            return self._verify(self.qparams, self.caches,
+                                jnp.asarray(toks), self._snap_pos(),
+                                n_new, self._snap_pages())
+        return self._verify(self.qparams, self.caches, jnp.asarray(toks),
+                            self._snap_pos(), n_new)
+
     def _step_one(self, slot: int, token: int):
         toks = np.zeros(self.batch, np.int32)
         toks[slot] = token
@@ -792,16 +917,31 @@ class ServingEngine:
         self.slots[slot].pos = int(self.pos[slot])
         return np.asarray(logits[slot])
 
+    def _at_cache_end(self, slot: int) -> bool:
+        """Whether the lane's NEXT token has nowhere to go: emitting it
+        would need a K/V write at logical slot ``pos`` (``pos ≤ L - 1``
+        for full-causal caches) and a RoPE rotation at ``pos`` (the
+        table spans ``cache_len + 1`` positions).  Retiring at
+        ``pos >= cache_len`` makes the final cache slot usable — the
+        old ``>= cache_len - 1`` boundary retired one token early,
+        wasting it."""
+        return self.pos[slot] >= self.cache_len
+
     def step(self) -> int:
         """One engine step: admit, advance prefill (budgeted), and one
-        batched decode for lanes whose prefill is complete.  Returns the
-        number of occupied lanes."""
+        batched decode for lanes whose prefill is complete (with
+        ``spec_k > 0``, one batched draft-verify launch committing up to
+        ``spec_k + 1`` tokens per lane).  Returns the number of occupied
+        lanes."""
         self._admit()
         self._advance_prefill()
         occupied = sum(s is not None for s in self.slots)
         live = [i for i, s in enumerate(self.slots)
                 if s is not None and s.state == "active"]
         if not live:
+            return occupied
+        if self.spec_k:
+            self._spec_decode(live)
             return occupied
         toks = np.zeros(self.batch, np.int32)
         for i in live:
@@ -815,18 +955,92 @@ class ServingEngine:
             self.pos[i] += 1
             sess.pos = int(self.pos[i])
             row = logits[i][:self.cfg.vocab]
-            if req.temperature <= 0:
-                nxt = int(np.argmax(row))
-            else:
-                p = np.exp((row - row.max()) / req.temperature)
-                p /= p.sum()
-                nxt = int(self.rng.choice(len(p), p=p))
+            nxt = self._sample(req, row)
             req.out_tokens.append(nxt)
             sess.last_token = nxt
             if len(req.out_tokens) >= req.max_new_tokens \
-                    or self.pos[i] >= self.cache_len - 1:
+                    or self._at_cache_end(i):
                 self._retire(i)
         return occupied
+
+    def _sample(self, req: Request, row: np.ndarray) -> int:
+        """Next token from one lane's logits row.
+
+        ``temperature <= 0``: greedy argmax.  Otherwise a softmax
+        sample: the row is the head's *dequantized* float logits (int32
+        accumulator × per-channel ``head_scale`` × ``s_act8`` —
+        ``models.inttransformer.logits_int``), so ``temperature`` acts
+        on that documented scale, pinned to float64 so the distribution
+        is platform-reproducible.  Randomness comes from the engine's
+        own seeded ``np.random.default_rng(seed)`` Generator — the
+        sampled stream is a pure function of (seed, schedule), and two
+        engines stepping identical schedules reproduce each other
+        token for token."""
+        if req.temperature <= 0:
+            return int(np.argmax(row))
+        z = row.astype(np.float64)
+        p = np.exp((z - z.max()) / req.temperature)
+        p /= p.sum()
+        return int(self.rng.choice(len(p), p=p))
+
+    def _spec_decode(self, live: List[int]):
+        """One speculative decode round: draft, batched verify, greedy
+        commit, rollback.
+
+        Per live lane: the proposer drafts ``k_b = min(spec_k,
+        remaining - 1, L - pos - 1)`` tokens (never past the request's
+        budget or the cache), and the lane's ``[last_token, *draft]``
+        rows go right-aligned into one (B, spec_k + 1) verify launch
+        (idle/prefilling lanes ride along as the same discarded
+        token-0 row the plain step gives them).  Greedy acceptance
+        commits the longest draft prefix matching the model's argmax
+        rows plus the bonus token — bit-exact against ``a + 1`` plain
+        steps — then rollback truncates the page list to the committed
+        positions, releasing pages only rejected drafts touched."""
+        S = self.spec_k + 1
+        toks = np.zeros((self.batch, S), np.int32)
+        n_new = np.ones(self.batch, np.int32)
+        drafts: Dict[int, List[int]] = {}
+        for i in live:
+            sess = self.slots[i]
+            req = sess.request
+            remaining = req.max_new_tokens - len(req.out_tokens)
+            room = self.L - int(self.pos[i]) - 1
+            k_b = max(0, min(self.spec_k, remaining - 1, room))
+            draft = self.proposer.propose(
+                req.prompt + req.out_tokens, k_b) if k_b else []
+            drafts[i] = draft
+            n = 1 + len(draft)
+            n_new[i] = n
+            toks[i, S - n:] = [sess.last_token] + draft
+        self._ensure_write_pages(n_new)
+        logits, self.caches = self._run_verify(toks, n_new)
+        logits = np.asarray(logits)
+        for i in live:
+            sess = self.slots[i]
+            req = sess.request
+            draft = drafts[i]
+            n = int(n_new[i])
+            rows = logits[i, S - n:, :self.cfg.vocab]
+            preds = np.argmax(rows, axis=-1)
+            a = 0
+            while a < len(draft) and int(preds[a]) == draft[a]:
+                a += 1
+            commit = [int(t) for t in preds[:a + 1]]
+            self._spec_drafted += len(draft)
+            self._spec_accepted += a
+            req.out_tokens.extend(commit)
+            sess.last_token = commit[-1]
+            self.pos[i] += len(commit)
+            sess.pos = int(self.pos[i])
+            if self.paged and len(commit) < n:
+                # rejected drafts wrote past the committed positions:
+                # release any page only they touched (valid_len hides
+                # the stale K/V in the kept tail page)
+                self.kv.truncate(sess, int(self.pos[i]))
+            if len(req.out_tokens) >= req.max_new_tokens \
+                    or self._at_cache_end(i):
+                self._retire(i)
 
     # ------------------------------------------------------ introspection --
 
@@ -867,12 +1081,23 @@ class ServingEngine:
             "per_device_kv_bytes": cache["kv_bytes"] // self.tp
             if self.tp_sharded else cache["kv_bytes"],
         }
+        drafted, accepted = self._spec_drafted, self._spec_accepted
+        spec = {
+            "k": self.spec_k,
+            "mode": self.spec_mode,
+            "drafted": drafted,
+            "accepted": accepted,
+            "accept_rate": round(accepted / drafted, 4) if drafted
+            else None,
+            "wasted": drafted - accepted,
+        }
         return {
             "ops": self.ops.name,
             "backends": {op: self.ops.backend_for(op).name
                          for op in OP_NAMES},
             "attn": "fused" if self.attn_fused else "two-pass",
             "decode": "fused" if self.decode_fused else "oracle",
+            "spec": spec,
             "prefill": {
                 "mode": "chunked" if self._use_chunked else "streaming",
                 "chunk": self.prefill_chunk,
@@ -903,17 +1128,40 @@ class ServingEngine:
             prefill += f"+prefix[{c['prefix']['entries']}]"
         tp = "" if d["tp"]["tp"] == 1 \
             else f" tp={d['tp']['tp']}:{d['tp']['mode']}"
+        sp = d["spec"]
+        spec = "" if not sp["k"] else (
+            f" spec={sp['mode']}:k{sp['k']}"
+            + (f"@{sp['accept_rate']:.2f}"
+               if sp["accept_rate"] is not None else ""))
         return (f"ops={d['ops']} attn={d['attn']} decode={d['decode']} "
                 f"prefill={prefill} fold_wo={str(d['fold_wo']).lower()}"
-                f"{tp} cache={cache} batch={d['batch']} "
+                f"{tp}{spec} cache={cache} batch={d['batch']} "
                 f"cache_len={d['cache_len']}")
 
     def run_until_done(self, max_steps: int = 10000) -> List[Request]:
         """Step until queue and lanes drain; returns the requests that
-        retired since the last call (completion order)."""
+        retired since the last call (completion order).
+
+        Raises :class:`EngineStalled` if ``max_steps`` elapse with
+        sessions still queued or resident — a silent partial return
+        here let callers mistake a stalled schedule (admission
+        deadlock, runaway generation) for completion.
+        """
         for _ in range(max_steps):
             if not self.queue and all(s is None for s in self.slots):
                 break
             self.step()
+        else:
+            if self.queue or any(s is not None for s in self.slots):
+                slots = [
+                    None if s is None else {
+                        "uid": s.request.uid,
+                        "state": s.state,
+                        "pos": int(self.pos[i]),
+                        "prefill_pos": s.prefill_pos,
+                    }
+                    for i, s in enumerate(self.slots)
+                ]
+                raise EngineStalled(max_steps, slots, len(self.queue))
         finished, self._finished = self._finished, []
         return finished

@@ -402,6 +402,30 @@ class PagedKVCache:
         session.slot = None
         session.state = "done"
 
+    def truncate(self, session: Session, keep_tokens: int) -> int:
+        """Speculative-rollback helper: drop the session's trailing
+        pages beyond the ones backing its first ``keep_tokens`` logical
+        positions, releasing each through the allocator (pages the
+        prefix index also holds stay cached — the release only drops
+        *this session's* reference).  The stale K/V a rejected draft
+        wrote into the kept tail page needs no cleanup: ``valid_len``
+        masking hides it, and the next decode write overwrites it —
+        rollback is a position decrement plus this table truncation, no
+        data movement.  Returns the number of pages released."""
+        if keep_tokens < 0:
+            raise ValueError(f"keep_tokens must be >= 0, got "
+                             f"{keep_tokens}")
+        keep_blocks = -(-keep_tokens // self.layout.page_size)
+        released = 0
+        while len(session.pages) > keep_blocks:
+            page = session.pages.pop()
+            if session.slot is not None:
+                self.page_table.table[session.slot,
+                                      len(session.pages)] = NULL_PAGE
+            self.allocator.release(page)
+            released += 1
+        return released
+
     def ensure(self, session: Session, write_pos: int):
         """Make the page backing logical position ``write_pos`` resident
         before the decode step writes there.  Pages map append-only, so

@@ -1,0 +1,160 @@
+"""Self-speculative draft proposers for the serving engine.
+
+Speculative decoding amortizes the per-step launch overhead SwiftTron's
+control unit pays once per token: a cheap *proposer* drafts ``K`` next
+tokens per live lane, and the engine verifies all ``K + 1`` positions in
+ONE ``int_decode_attention`` launch with the ``Sq = K + 1`` stepped mask
+the decode kernel has carried since PR 3 (``docs/KERNELS.md``) — fused
+on ``pallas_fused``, exact oracle lowering elsewhere.  Greedy acceptance
+keeps the longest prefix of the draft that matches the model's own
+argmax stream, so speculation changes *when* tokens are computed, never
+*which*: the committed stream is bit-exact with ``spec_k = 0``.
+
+The proposers here are **self-speculative**: no draft model, no extra
+weights.  :class:`NgramProposer` is prompt-lookup decoding — match the
+context's trailing n-gram against its own earlier occurrences (prompt +
+generated tokens) and propose the continuation.  This is exactly right
+for the engine's prefix-cached serving traffic (templated prompts,
+structured/repetitive continuations), and costs O(context) host-side
+python per step.
+
+Rejected drafts roll back for free: the paged cache truncates the
+session's page list (``PagedKVCache.truncate``) and ``valid_len``
+masking hides the stale K/V — no data movement, the invariant the
+paged pool was designed around.
+
+Typed errors: :class:`SpeculationError` (a ``ValueError``) for config
+mistakes, :class:`SpeculationUnsupported` for arch / sampling modes the
+verify step cannot serve.  :func:`validate_spec` is the single
+validation entry point the engine constructor and the serve CLI share.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Protocol, Sequence, Type
+
+from repro.analysis.budgets import MAX_SQ
+from repro.models.common import ArchConfig
+from repro.models.inttransformer import speculative_decode_supported
+
+
+class SpeculationError(ValueError):
+    """Invalid speculative-decoding configuration (bad ``spec_k``,
+    unknown proposer mode)."""
+
+
+class SpeculationUnsupported(SpeculationError):
+    """Speculative decoding cannot serve this request or arch.
+
+    Raised for sliding-window / SSM / cross-attention archs (their
+    lane-indexed or rolling state breaks the batched multi-position
+    verify) and for ``temperature > 0`` requests (greedy longest-prefix
+    acceptance is only bit-exact against the argmax stream — a sampled
+    stream would silently diverge).
+    """
+
+
+class Proposer(Protocol):
+    """Drafts up to ``k`` next tokens from the decoded context."""
+
+    name: str
+
+    def propose(self, context: Sequence[int], k: int) -> List[int]:
+        """Return ``<= k`` draft tokens continuing ``context`` (the
+        session's ``prompt + out_tokens``).  An empty list is always a
+        legal answer (the engine then verifies only the bonus token —
+        one launch, one token, exactly the non-speculative step)."""
+        ...
+
+
+class NgramProposer:
+    """Prompt-lookup decoding: propose the continuation of the most
+    recent earlier occurrence of the context's trailing n-gram.
+
+    Tries suffix lengths ``max_n`` down to ``min_n``; for the first
+    suffix that re-occurs earlier in the context, proposes the ``k``
+    tokens that followed it (preferring the most recent occurrence, so
+    generated cycles and templated boilerplate are predicted exactly).
+    No match -> empty draft, and the engine's verify step degenerates to
+    a plain decode step.
+    """
+
+    name = "ngram"
+
+    def __init__(self, max_n: int = 3, min_n: int = 1):
+        if not 1 <= min_n <= max_n:
+            raise SpeculationError(
+                f"need 1 <= min_n <= max_n, got min_n={min_n}, "
+                f"max_n={max_n}")
+        self.max_n = max_n
+        self.min_n = min_n
+
+    def propose(self, context: Sequence[int], k: int) -> List[int]:
+        ctx = list(context)
+        n_ctx = len(ctx)
+        if k <= 0 or n_ctx < self.min_n + 1:
+            return []
+        for n in range(min(self.max_n, n_ctx - 1), self.min_n - 1, -1):
+            suffix = ctx[n_ctx - n:]
+            # scan right-to-left so cycles continue from their most
+            # recent period; prefer the latest occurrence whose
+            # continuation is a full k tokens — matches hugging the
+            # context end (constant / short-cycle tails re-match their
+            # own last period) would otherwise truncate every draft to
+            # a token or two
+            best: List[int] = []
+            for start in range(n_ctx - n - 1, -1, -1):
+                if ctx[start:start + n] == suffix:
+                    cont = ctx[start + n:start + n + k]
+                    if len(cont) == k:
+                        return [int(t) for t in cont]
+                    if cont and not best:
+                        best = cont
+            if best:
+                return [int(t) for t in best]
+        return []
+
+
+PROPOSERS: Dict[str, Type] = {NgramProposer.name: NgramProposer}
+
+
+def get_proposer(mode: str, **kwargs) -> Proposer:
+    """Instantiate a registered proposer by name; typed error on an
+    unknown mode (the serve CLI surfaces it as an argparse error)."""
+    cls = PROPOSERS.get(mode)
+    if cls is None:
+        raise SpeculationError(
+            f"unknown spec_mode {mode!r}; registered proposers: "
+            f"{sorted(PROPOSERS)}")
+    return cls(**kwargs)
+
+
+def validate_spec(cfg: ArchConfig, spec_k: int, spec_mode: str) -> None:
+    """Typed validation of a speculative-decoding configuration, shared
+    by the engine constructor and the serve CLI (fail at the boundary,
+    not as a kernel-shape error inside a launch)."""
+    if spec_k < 0:
+        raise SpeculationError(f"spec_k must be >= 0, got {spec_k}")
+    if spec_k == 0:
+        return
+    if spec_k > MAX_SQ - 1:
+        raise SpeculationError(
+            f"spec_k={spec_k} exceeds the decode kernel's speculative "
+            f"query budget: the Sq = spec_k + 1 verify launch holds at "
+            f"most MAX_SQ={MAX_SQ} rows in scratch "
+            f"(analysis.budgets), so spec_k <= {MAX_SQ - 1}")
+    if not speculative_decode_supported(cfg):
+        raise SpeculationUnsupported(
+            f"speculative decoding is unsupported for arch "
+            f"{cfg.name!r}: the batched verify step needs full "
+            "(window == 0) causal attention and attention+ffn/moe "
+            "sublayers only — sliding-window caches interleave rolling-"
+            "buffer writes and reads token-by-token, and SSM / cross-"
+            "attention archs carry lane-indexed state a rejected draft "
+            "cannot roll back; serve with spec_k=0")
+    get_proposer(spec_mode)         # raises SpeculationError on typos
+
+
+__all__ = [
+    "NgramProposer", "PROPOSERS", "Proposer", "SpeculationError",
+    "SpeculationUnsupported", "get_proposer", "validate_spec",
+]

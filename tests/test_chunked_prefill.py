@@ -482,6 +482,15 @@ def test_bench_json_schema_checker(tmp_path):
             "tp4": {"tokens_per_s": 9.0, "mode": "sharded",
                     "kv_bytes": 1024, "per_device_kv_bytes": 256},
         },
+        "spec": {
+            "k0": {"tokens_per_s": 10.0, "accept_rate": None,
+                   "drafted": 0, "accepted": 0},
+            "k2": {"tokens_per_s": 15.0, "accept_rate": 0.9,
+                   "drafted": 100, "accepted": 90},
+            "k4": {"tokens_per_s": 14.0, "accept_rate": 0.8,
+                   "drafted": 200, "accepted": 160},
+            "parity": True, "speedup": 1.5,
+        },
     }
     good = tmp_path / "BENCH_serving.json"
     good.write_text(json.dumps(data))
