@@ -56,6 +56,31 @@ SPEC_CONFIG = {
     "accepted": int,
 }
 
+# one percentile summary of the latency section (front-end _pct shape)
+PCT = {
+    "n": int,
+    "mean": NUM,
+    "p50": NUM,
+    "p99": NUM,
+}
+
+# request-latency distribution under open-loop load (async front end)
+LATENCY = {
+    "arrival_rate_per_s": NUM,
+    "submitted": int,
+    "terminal": {
+        "completed": int,
+        "cancelled": int,
+        "timeout": int,
+        "rejected": int,
+    },
+    "ttft_s": PCT,
+    "inter_token_s": PCT,
+    "queue_wait_s": PCT,
+    "occupancy": {"mean": NUM, "max": int},
+    "queue_depth": {"mean": NUM, "max": int},
+}
+
 # per-config entry of CERTIFY.json: only "ok" is shared between the
 # certified shape (worst_bits/ops/assumptions) and the failed shape
 # (error {what, value, budget, op, layer, message}) — the checker has
@@ -81,6 +106,7 @@ SCHEMAS = {
             "parity": bool,
             "speedup": NUM,
         },
+        "latency": LATENCY,
         "arch": str,
         "quick": bool,
     },
@@ -133,6 +159,32 @@ def _check(value, schema, path: str, errors: list):
                       f"{type(value).__name__}")
 
 
+def _semantic_serving(data: dict, errors: list):
+    """Invariants the structural check can't express: percentile order
+    and terminal-state accounting of the latency section."""
+    lat = data.get("latency")
+    if not isinstance(lat, dict):
+        return                      # structural check already flagged it
+    for metric in ("ttft_s", "inter_token_s", "queue_wait_s"):
+        p = lat.get(metric)
+        if isinstance(p, dict) and isinstance(p.get("p50"), NUM) \
+                and isinstance(p.get("p99"), NUM) and p["p50"] > p["p99"]:
+            errors.append(f"latency.{metric}: p50 {p['p50']} > p99 "
+                          f"{p['p99']}")
+    term = lat.get("terminal")
+    sub = lat.get("submitted")
+    if isinstance(term, dict) and isinstance(sub, int):
+        counts = [v for v in term.values() if isinstance(v, int)]
+        if sum(counts) != sub:
+            errors.append(f"latency.terminal: counts {term} sum to "
+                          f"{sum(counts)}, expected submitted={sub}")
+
+
+SEMANTIC = {
+    "BENCH_serving.json": _semantic_serving,
+}
+
+
 def check_file(path: str) -> list:
     """Validate one BENCH_*.json; returns a list of error strings."""
     name = os.path.basename(path)
@@ -147,6 +199,9 @@ def check_file(path: str) -> list:
     schema = SCHEMAS.get(name)
     if schema is not None:
         _check(data, schema, name, errors)
+    semantic = SEMANTIC.get(name)
+    if semantic is not None:
+        semantic(data, errors)
     return errors
 
 

@@ -346,8 +346,96 @@ def require_launch(report: LaunchReport) -> LaunchReport:
     return report
 
 
+# ------------------------------------------------- request feasibility --
+
+
+class RequestInfeasible(ValueError):
+    """A request that can NEVER complete on the engine's cache geometry.
+
+    Admitting it anyway would either corrupt live cache positions
+    (prompt longer than the logical cache) or burn pool pages and lane
+    time on a stream guaranteed to retire short of ``max_new_tokens``
+    (prompt + continuation overrunning ``cache_len``) — and the failure
+    would only surface deep inside a step, or never.  Raised at the
+    submit / CLI boundary instead.  Fields: ``prompt_len``,
+    ``max_new_tokens``, ``cache_len``, ``reasons`` (every violated
+    clause)."""
+
+    def __init__(self, prompt_len: int, max_new_tokens: int,
+                 cache_len: int, reasons):
+        self.prompt_len = prompt_len
+        self.max_new_tokens = max_new_tokens
+        self.cache_len = cache_len
+        self.reasons = tuple(reasons)
+        super().__init__(
+            f"infeasible request (prompt_len={prompt_len}, "
+            f"max_new_tokens={max_new_tokens}, cache_len={cache_len}): "
+            + "; ".join(self.reasons))
+
+
+def check_request(prompt_len: int, max_new_tokens: int, cache_len: int,
+                  window: int = 0, page_size: int = 0,
+                  num_pages: int = 0) -> tuple:
+    """Statically validate one serving request against a cache geometry;
+    returns the tuple of violated clauses (empty = feasible).
+
+    The exact feasibility bound for full-causal archs (``window == 0``):
+    prefill writes ``prompt_len - 1`` K/V positions and every decoded
+    token writes one more, so the request reaches ``max_new_tokens``
+    only if ``prompt_len - 1 + max_new_tokens <= cache_len`` (the engine
+    retires lanes at ``pos >= cache_len``).  Sliding-window archs wrap,
+    so only the prompt-fits clause applies.  With a paged pool
+    (``page_size`` / ``num_pages`` given), a prompt whose block count
+    exceeds the allocatable pool can never be admitted either — that
+    used to surface as :class:`~repro.serving.kvcache.PagePoolExhausted`
+    from deep inside a scheduler step.  Pure Python, no jax — safe at
+    any CLI / server boundary."""
+    reasons = []
+    if prompt_len < 1:
+        reasons.append("empty prompt: a request needs at least one token")
+    if max_new_tokens < 1:
+        reasons.append(f"max_new_tokens must be >= 1 (got "
+                       f"{max_new_tokens})")
+    L = min(cache_len, window) if window > 0 else cache_len
+    if window == 0 and prompt_len > L:
+        reasons.append(
+            f"prompt of {prompt_len} tokens exceeds the cache_len={L} "
+            "logical cache: prefill would write past the page table / "
+            "cache slab and silently corrupt live positions")
+    elif window == 0 and prompt_len - 1 + max_new_tokens > cache_len:
+        reasons.append(
+            f"prompt_len + max_new_tokens exceeds the cache: the stream "
+            f"needs {prompt_len - 1 + max_new_tokens} K/V positions but "
+            f"cache_len={cache_len} — the request would silently retire "
+            f"after {cache_len - prompt_len + 1} token(s); shrink "
+            "max_new_tokens or raise cache_len")
+    if window == 0 and page_size > 0 and num_pages > 0:
+        span = min(max(prompt_len - 1, 0), L)
+        blocks = -(-span // page_size)
+        if blocks > num_pages - 1:
+            reasons.append(
+                f"prompt prefill needs {blocks} pages but the pool only "
+                f"has {num_pages - 1} allocatable (page 0 is the null "
+                "page): the admission can never succeed")
+    return tuple(reasons)
+
+
+def require_request(prompt_len: int, max_new_tokens: int, cache_len: int,
+                    window: int = 0, page_size: int = 0,
+                    num_pages: int = 0) -> None:
+    """Raise :class:`RequestInfeasible` if :func:`check_request` finds
+    any violated clause."""
+    reasons = check_request(prompt_len, max_new_tokens, cache_len,
+                            window=window, page_size=page_size,
+                            num_pages=num_pages)
+    if reasons:
+        raise RequestInfeasible(prompt_len, max_new_tokens, cache_len,
+                                reasons)
+
+
 __all__ = [
     "KernelContractError", "LaunchReport", "MAX_SKV_ONLINE", "MIN_BLOCK",
-    "can_tile", "can_tile_decode", "can_tile_prefill", "check_launch",
-    "check_tp_launch", "fit_block", "require_launch",
+    "RequestInfeasible", "can_tile", "can_tile_decode",
+    "can_tile_prefill", "check_launch", "check_request",
+    "check_tp_launch", "fit_block", "require_launch", "require_request",
 ]

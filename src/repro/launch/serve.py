@@ -1,5 +1,5 @@
 """Production serving driver: float checkpoint -> SwiftTron integer
-parameters -> batched INT8 engine.
+parameters -> batched INT8 engine behind the async front end.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch h2o-danube-3-4b \
@@ -8,10 +8,19 @@ Usage:
 Without --ckpt-dir the driver quantizes a fresh (random-init) model —
 useful for throughput measurement; with one it restores the trained
 params saved by launch.train.
+
+Requests flow through :class:`repro.serving.ServingFrontend` — the
+asyncio admission/streaming layer — rather than a hand-rolled drain
+loop, so the driver gets backpressure (``--max-pending``), per-request
+deadlines (``--timeout-s``), open-loop Poisson load (``--arrival-rate``
+requests/s; 0 = submit everything up front) and p50/p99 TTFT /
+inter-token latency in the summary, with the engine's ``EngineStalled``
+detection intact.
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 import time
 
 import jax
@@ -19,12 +28,48 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import ops as rops
+from repro.analysis import contracts
 from repro.checkpoint import load_checkpoint
 from repro.configs.registry import get_config
 from repro.models import model as M
 from repro.models import transformer as tf
 from repro.quant import convert
-from repro.serving import Request, ServingEngine
+from repro.serving import QueueFull, ServingEngine, ServingFrontend
+
+
+def _fmt_pct(p: dict | None, unit_ms: bool = True) -> str:
+    if p is None:
+        return "n/a"
+    k = 1e3 if unit_ms else 1.0
+    u = "ms" if unit_ms else "s"
+    return (f"p50 {p['p50'] * k:.1f}{u} / p99 {p['p99'] * k:.1f}{u} "
+            f"(n={p['n']})")
+
+
+async def _serve(fe: ServingFrontend, prompts, args) -> list:
+    """Open-loop client: submit ``prompts`` at ``--arrival-rate`` req/s
+    (exp-distributed gaps; 0 = all at once), drain every stream, return
+    the handles (None where admission rejected)."""
+    rng = np.random.default_rng(1)
+    runner = asyncio.create_task(fe.run())
+    handles, drains = [], []
+    for prompt in prompts:
+        if args.arrival_rate > 0:
+            await asyncio.sleep(rng.exponential(1.0 / args.arrival_rate))
+        try:
+            h = fe.submit(prompt, args.max_new,
+                          temperature=args.temperature,
+                          deadline_s=args.timeout_s)
+        except QueueFull as e:
+            print(f"  rejected (queue full, {e.pending} in flight)")
+            handles.append(None)
+            continue
+        handles.append(h)
+        drains.append(asyncio.create_task(h.result()))
+    await asyncio.gather(*drains)
+    fe.close()
+    await runner
+    return handles
 
 
 def main():
@@ -79,6 +124,17 @@ def main():
                     help="draft proposer (self-speculative, no draft "
                          "model); 'ngram' = prompt-lookup over the "
                          "session's own context")
+    ap.add_argument("--max-pending", type=int, default=None,
+                    help="admission bound: requests in flight before "
+                         "submit() raises QueueFull (default: 4x batch)")
+    ap.add_argument("--timeout-s", type=float, default=None,
+                    help="per-request deadline in seconds; an expired "
+                         "request is evicted (pages reclaimed) and its "
+                         "stream ends with terminal state 'timeout'")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="open-loop Poisson arrival rate in requests/s "
+                         "(exp-distributed gaps); 0 = submit every "
+                         "request up front (closed batch)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--backend", default=None,
                     help="registered op backend (default: REPRO_BACKEND "
@@ -103,6 +159,12 @@ def main():
                      "so chunk writes tile physical pages")
     if args.prefill_budget is not None and args.prefill_budget < 1:
         ap.error("--prefill-budget must be >= 1 token/step")
+    if args.max_pending is not None and args.max_pending < 1:
+        ap.error("--max-pending must be >= 1 request")
+    if args.timeout_s is not None and args.timeout_s <= 0:
+        ap.error("--timeout-s must be > 0 seconds")
+    if args.arrival_rate < 0:
+        ap.error("--arrival-rate must be >= 0 requests/s")
     if args.reduced:
         cfg = M.reduce_config(cfg, dtype="float32", vocab=1024)
     # --tp validates against the FINAL config (--reduced shrinks the
@@ -127,6 +189,16 @@ def main():
             validate_spec(cfg, args.spec_k, args.spec_mode)
         except ValueError as e:
             ap.error(f"--spec-k {args.spec_k}: {e}")
+    # the request shape every client will submit must be feasible on
+    # the cache geometry this engine is about to build — reject at the
+    # CLI boundary with the same typed check frontend.submit() applies
+    prompt_len = 4
+    try:
+        contracts.require_request(prompt_len, args.max_new,
+                                  args.cache_len, window=cfg.window)
+    except contracts.RequestInfeasible as e:
+        ap.error(f"--max-new {args.max_new} with --cache-len "
+                 f"{args.cache_len}: {e}")
     params = tf.init_params(jax.random.key(0), cfg)
     if args.ckpt_dir:
         params, meta = load_checkpoint(args.ckpt_dir, (params, None))
@@ -151,24 +223,28 @@ def main():
                         tp=args.tp, spec_k=args.spec_k,
                         spec_mode=args.spec_mode)
     print(f"engine: {eng.describe_str()}")
+    fe = ServingFrontend(eng, max_pending=args.max_pending)
     rng = np.random.default_rng(0)
-    reqs = [Request(uid=i,
-                    prompt=list(rng.integers(1, cfg.vocab, 4)),
-                    max_new_tokens=args.max_new,
-                    temperature=args.temperature)
-            for i in range(args.requests)]
-    for r in reqs:
-        eng.submit(r)
+    prompts = [[int(t) for t in rng.integers(1, cfg.vocab, prompt_len)]
+               for _ in range(args.requests)]
     t0 = time.time()
-    steps = 0
-    while eng.queue or any(s is not None for s in eng.slots):
-        eng.step()
-        steps += 1
+    handles = asyncio.run(_serve(fe, prompts, args))
     dt = time.time() - t0
-    n_tok = sum(len(r.out_tokens) for r in reqs)
-    print(f"served {len(reqs)} requests / {n_tok} tokens in {steps} "
-          f"batched steps, {dt:.1f}s ({n_tok/dt:.1f} tok/s, int8 KV "
-          "cache)")
+
+    d = fe.describe()
+    n_tok = d["tokens"]
+    print(f"served {d['submitted']} requests / {n_tok} tokens in "
+          f"{d['steps']} batched steps, {dt:.1f}s ({n_tok/dt:.1f} tok/s, "
+          "int8 KV cache)")
+    term = d["terminal"]
+    print("  terminal: " + ", ".join(f"{k}={v}" for k, v in term.items()))
+    lat = d["latency"]
+    print(f"  ttft: {_fmt_pct(lat['ttft_s'])}   inter-token: "
+          f"{_fmt_pct(lat['inter_token_s'])}   queue-wait: "
+          f"{_fmt_pct(lat['queue_wait_s'])}")
+    print(f"  occupancy: mean {d['occupancy']['mean']:.2f}/"
+          f"{args.batch} lanes, queue depth: mean "
+          f"{d['queue_depth']['mean']:.2f} max {d['queue_depth']['max']}")
     sp = eng.describe()["spec"]
     if sp["k"]:
         rate = f"{sp['accept_rate']:.0%}" \
@@ -180,8 +256,10 @@ def main():
     if px:
         print(f"prefix cache: {px['hits']} hits / {px['misses']} misses, "
               f"{px['tokens_reused']} prompt tokens reused")
-    for r in reqs[:4]:
-        print(f"  req {r.uid}: {r.prompt} -> {r.out_tokens[:10]}...")
+    for h in [h for h in handles if h is not None][:4]:
+        r = h.request
+        print(f"  req {h.uid} [{h.terminal}]: {r.prompt} -> "
+              f"{r.out_tokens[:10]}...")
 
 
 if __name__ == "__main__":

@@ -1,4 +1,8 @@
-from repro.serving.engine import EngineStalled, Request, ServingEngine
+from repro.serving.engine import (EngineStalled, PendingStep, Request,
+                                  ServingEngine, StepInFlight)
+from repro.serving.frontend import (QueueFull, RequestMetrics,
+                                    ServingFrontend, StreamHandle,
+                                    TERMINAL_STATES)
 from repro.serving.kvcache import (BlockAllocator, CacheLayout, NULL_PAGE,
                                    PagedKVCache, PagePoolExhausted,
                                    PageTable, PrefixEntry, PrefixIndex,
@@ -8,7 +12,9 @@ from repro.serving.speculate import (NgramProposer, Proposer,
                                      SpeculationUnsupported, get_proposer,
                                      validate_spec)
 
-__all__ = ["ServingEngine", "Request", "EngineStalled", "BlockAllocator",
+__all__ = ["ServingEngine", "Request", "EngineStalled", "PendingStep",
+           "StepInFlight", "ServingFrontend", "StreamHandle", "QueueFull",
+           "RequestMetrics", "TERMINAL_STATES", "BlockAllocator",
            "CacheLayout", "NULL_PAGE", "PagedKVCache", "PagePoolExhausted",
            "PageTable", "PrefixEntry", "PrefixIndex", "Session",
            "NgramProposer", "Proposer", "SpeculationError",

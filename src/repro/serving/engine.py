@@ -114,6 +114,17 @@ from repro.serving.kvcache import (NULL_PAGE, CacheLayout,
                                    PrefixIndex, Session)
 
 
+class StepInFlight(RuntimeError):
+    """A lifecycle operation (``evict`` / ``preempt`` / another
+    ``dispatch_step``) was attempted between :meth:`ServingEngine.
+    dispatch_step` and :meth:`ServingEngine.commit_step`.  The dispatched
+    launch captured snapshots of ``pos`` and the page table, but the
+    *scheduler* state (slots, sessions, allocator) it will be committed
+    against must not move underneath it — commit the pending step first
+    (the async front end's run loop applies cancellations only between
+    commit and the next dispatch for exactly this reason)."""
+
+
 class EngineStalled(RuntimeError):
     """``run_until_done`` exhausted its step budget with sessions still
     queued or on lanes — a stall (pool livelock, starved prefill, a
@@ -174,6 +185,30 @@ class Request:
     temperature: float = 0.0
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+
+
+@dataclasses.dataclass
+class PendingStep:
+    """An in-flight engine step: scheduling (admit / prefill / draft) ran
+    and the decode or verify launch was **dispatched** — its ``logits``
+    are an unmaterialized device array — but nothing has been sampled or
+    committed.  Produced by :meth:`ServingEngine.dispatch_step`, consumed
+    exactly once by :meth:`ServingEngine.commit_step`; the window between
+    the two is where an async driver overlaps host work (detokenizing /
+    distributing the *previous* step's tokens) with the device
+    computation.  The launch itself read snapshots (``_snap_pos`` /
+    ``_snap_pages``), so host bookkeeping in that window is safe as long
+    as the scheduler state commit will walk — ``slots`` and the captured
+    ``sessions`` — is left alone (:class:`StepInFlight` guards the
+    mutating lifecycle ops)."""
+
+    occupied: int
+    kind: str                       # "idle" | "decode" | "verify"
+    live: List[int] = dataclasses.field(default_factory=list)
+    sessions: List[Session] = dataclasses.field(default_factory=list)
+    logits: object = None           # device array, (B, V) or (B, S, V)
+    n_new: Optional[np.ndarray] = None
+    drafts: Optional[Dict[int, List[int]]] = None
 
 
 class ServingEngine:
@@ -309,6 +344,7 @@ class ServingEngine:
         self.queue: List[Session] = []
         self._finished: List[Request] = []
         self._uid = 0
+        self._inflight: Optional[PendingStep] = None
         self._decode = self._shared_decode_step()
         self._prefill_step = self._shared_prefill_step() \
             if self._use_chunked else None
@@ -511,10 +547,19 @@ class ServingEngine:
 
     def submit(self, req: Request) -> Session:
         """Queue a request; returns the Session that owns its cache
-        pages for the rest of its life (evict/preempt take Sessions)."""
-        if not req.prompt:
-            raise ValueError("empty prompt: a request needs at least one "
-                             "token")
+        pages for the rest of its life (evict/preempt take Sessions).
+
+        Impossible requests fail HERE, typed, not deep inside a step:
+        :func:`~repro.analysis.contracts.require_request` rejects a
+        prompt longer than the logical cache (prefill would write past
+        the page table and silently corrupt live positions) and — for
+        full-causal archs — a ``prompt + max_new_tokens`` stream that
+        overruns ``cache_len`` (the engine retires lanes at ``pos >=
+        cache_len``, so such a request is guaranteed to come back short;
+        the exact bound is ``len(prompt) - 1 + max_new_tokens <=
+        cache_len``).  Transient *pool* pressure is not checked — that
+        is an admission-time concern (``PagePoolExhausted`` when the
+        prompt can never fit the pool; requeue-and-retry otherwise)."""
         if self.spec_k and req.temperature > 0:
             raise speculate.SpeculationUnsupported(
                 f"spec_k={self.spec_k} serves greedy requests only: "
@@ -523,14 +568,8 @@ class ServingEngine:
                 f"{req.temperature} sampled stream would silently "
                 "diverge from the non-speculative engine; sample with "
                 "spec_k=0")
-        if self.cfg.window == 0 and len(req.prompt) > self.L:
-            # without a sliding window there is nowhere for positions
-            # >= L to go: prefill would write past the cache (paged:
-            # past the page table) and silently corrupt live positions
-            raise ValueError(
-                f"prompt of {len(req.prompt)} tokens exceeds the "
-                f"cache_len={self.L} logical cache; raise cache_len or "
-                "use a sliding-window arch")
+        contracts.require_request(len(req.prompt), req.max_new_tokens,
+                                  self.cache_len, window=self.cfg.window)
         sess = Session(uid=self._uid, request=req)
         self._uid += 1
         self.queue.append(sess)
@@ -823,10 +862,18 @@ class ServingEngine:
                 if self.kv.allocator.refcount[sess.pages[blk]] > 1:
                     self._cow(sess, blk)
 
+    def _require_committed(self, op: str):
+        if self._inflight is not None:
+            raise StepInFlight(
+                f"{op} while a dispatched step is uncommitted: call "
+                "commit_step(pending) first — the pending launch will "
+                "be committed against the sessions it captured")
+
     def evict(self, sess: Session):
         """Cancel a session: free its lane and release every page it
         owns (they return to the allocator at refcount zero — pages the
         prefix index also holds stay cached for future prompts)."""
+        self._require_committed("evict")
         if sess in self.queue:
             self.queue.remove(sess)
         if sess.slot is not None:
@@ -845,6 +892,7 @@ class ServingEngine:
         mid-prefill sessions resume the prompt at ``prefill_pos``.
         Paged mode only — the contiguous layout ties cache contents to
         the lane."""
+        self._require_committed("preempt")
         if not self.paged:
             raise ValueError("preempt needs cache_mode='paged' (the "
                              "contiguous layout ties K/V to the lane)")
@@ -932,24 +980,73 @@ class ServingEngine:
         batched decode for lanes whose prefill is complete (with
         ``spec_k > 0``, one batched draft-verify launch committing up to
         ``spec_k + 1`` tokens per lane).  Returns the number of occupied
-        lanes."""
+        lanes.
+
+        ``step()`` is exactly ``commit_step(dispatch_step())`` — the
+        split exists so an async driver can overlap host work with the
+        device computation; the synchronous composition is bit-exact
+        with the pre-split engine by construction."""
+        return self.commit_step(self.dispatch_step())
+
+    def dispatch_step(self) -> PendingStep:
+        """The scheduling + dispatch half of :meth:`step`: admit queued
+        sessions, advance prefill (budgeted), draft (``spec_k > 0``) and
+        dispatch the batched decode / verify launch WITHOUT materializing
+        its logits.  Returns the :class:`PendingStep` the caller must
+        pass to :meth:`commit_step` — between the two the device is
+        computing while the host is free (the launch consumed snapshots
+        of ``pos`` and the page table, so host-side reads are safe), but
+        ``evict`` / ``preempt`` / another dispatch raise
+        :class:`StepInFlight` until the commit lands."""
+        self._require_committed("dispatch_step")
         self._admit()
         self._advance_prefill()
         occupied = sum(s is not None for s in self.slots)
         live = [i for i, s in enumerate(self.slots)
                 if s is not None and s.state == "active"]
         if not live:
-            return occupied
+            return PendingStep(occupied, "idle")
+        sessions = list(self.slots)
         if self.spec_k:
-            self._spec_decode(live)
-            return occupied
-        toks = np.zeros(self.batch, np.int32)
-        for i in live:
-            toks[i] = self.slots[i].last_token
-        self._ensure_write_pages()
-        logits, self.caches = self._run_decode(toks)
-        logits = np.asarray(logits)
-        for i in live:
+            toks, n_new, drafts = self._build_spec_batch(live)
+            self._ensure_write_pages(n_new)
+            logits, self.caches = self._run_verify(toks, n_new)
+            pending = PendingStep(occupied, "verify", live, sessions,
+                                  logits, n_new, drafts)
+        else:
+            toks = np.zeros(self.batch, np.int32)
+            for i in live:
+                toks[i] = self.slots[i].last_token
+            self._ensure_write_pages()
+            logits, self.caches = self._run_decode(toks)
+            pending = PendingStep(occupied, "decode", live, sessions,
+                                  logits)
+        self._inflight = pending
+        return pending
+
+    def commit_step(self, pending: PendingStep) -> int:
+        """The sampling + bookkeeping half of :meth:`step`: materialize
+        the dispatched logits (this is where the host blocks on the
+        device), sample / greedily accept, advance positions, retire
+        finished lanes.  Returns the occupied-lane count, mirroring
+        ``step()``."""
+        if pending.kind == "idle":
+            return pending.occupied
+        if self._inflight is not pending:
+            raise StepInFlight(
+                "commit_step got a PendingStep that is not the one in "
+                "flight: each dispatch_step() result is committed "
+                "exactly once, in order")
+        self._inflight = None
+        if pending.kind == "verify":
+            self._commit_spec(pending)
+        else:
+            self._commit_decode(pending)
+        return pending.occupied
+
+    def _commit_decode(self, pending: PendingStep):
+        logits = np.asarray(pending.logits)
+        for i in pending.live:
             sess = self.slots[i]
             req = sess.request
             self.pos[i] += 1
@@ -961,7 +1058,6 @@ class ServingEngine:
             if len(req.out_tokens) >= req.max_new_tokens \
                     or self._at_cache_end(i):
                 self._retire(i)
-        return occupied
 
     def _sample(self, req: Request, row: np.ndarray) -> int:
         """Next token from one lane's logits row.
@@ -983,20 +1079,15 @@ class ServingEngine:
         p /= p.sum()
         return int(self.rng.choice(len(p), p=p))
 
-    def _spec_decode(self, live: List[int]):
-        """One speculative decode round: draft, batched verify, greedy
-        commit, rollback.
+    def _build_spec_batch(self, live: List[int]):
+        """The draft half of a speculative decode round.
 
         Per live lane: the proposer drafts ``k_b = min(spec_k,
         remaining - 1, L - pos - 1)`` tokens (never past the request's
         budget or the cache), and the lane's ``[last_token, *draft]``
         rows go right-aligned into one (B, spec_k + 1) verify launch
         (idle/prefilling lanes ride along as the same discarded
-        token-0 row the plain step gives them).  Greedy acceptance
-        commits the longest draft prefix matching the model's argmax
-        rows plus the bonus token — bit-exact against ``a + 1`` plain
-        steps — then rollback truncates the page list to the committed
-        positions, releasing pages only rejected drafts touched."""
+        token-0 row the plain step gives them)."""
         S = self.spec_k + 1
         toks = np.zeros((self.batch, S), np.int32)
         n_new = np.ones(self.batch, np.int32)
@@ -1013,9 +1104,17 @@ class ServingEngine:
             n = 1 + len(draft)
             n_new[i] = n
             toks[i, S - n:] = [sess.last_token] + draft
-        self._ensure_write_pages(n_new)
-        logits, self.caches = self._run_verify(toks, n_new)
-        logits = np.asarray(logits)
+        return toks, n_new, drafts
+
+    def _commit_spec(self, pending: PendingStep):
+        """The acceptance half: greedy acceptance commits the longest
+        draft prefix matching the model's argmax rows plus the bonus
+        token — bit-exact against ``a + 1`` plain steps — then rollback
+        truncates the page list to the committed positions, releasing
+        pages only rejected drafts touched."""
+        S = self.spec_k + 1
+        live, n_new, drafts = pending.live, pending.n_new, pending.drafts
+        logits = np.asarray(pending.logits)
         for i in live:
             sess = self.slots[i]
             req = sess.request

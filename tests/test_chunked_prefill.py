@@ -491,6 +491,18 @@ def test_bench_json_schema_checker(tmp_path):
                    "drafted": 200, "accepted": 160},
             "parity": True, "speedup": 1.5,
         },
+        "latency": {
+            "arrival_rate_per_s": 20.0, "submitted": 8,
+            "terminal": {"completed": 7, "cancelled": 0, "timeout": 0,
+                         "rejected": 1},
+            "ttft_s": {"n": 7, "mean": 0.01, "p50": 0.008, "p99": 0.02},
+            "inter_token_s": {"n": 21, "mean": 0.002, "p50": 0.001,
+                              "p99": 0.007},
+            "queue_wait_s": {"n": 7, "mean": 0.005, "p50": 0.004,
+                             "p99": 0.01},
+            "occupancy": {"mean": 1.5, "max": 2},
+            "queue_depth": {"mean": 0.5, "max": 2},
+        },
     }
     good = tmp_path / "BENCH_serving.json"
     good.write_text(json.dumps(data))
@@ -503,6 +515,10 @@ def test_bench_json_schema_checker(tmp_path):
     del data["tp"]["tp4"]["per_device_kv_bytes"]
     for cfg in data["configs"].values():
         cfg["tokens_per_s"] = "fast"
+    # semantic violations the structural pass can't see: inverted
+    # percentiles, terminal counts not reconciling with submitted
+    data["latency"]["ttft_s"]["p50"] = 0.5          # > p99 = 0.02
+    data["latency"]["terminal"]["completed"] = 3    # sums to 4 != 8
     bad = tmp_path / "BENCH_bad" / "BENCH_serving.json"
     bad.parent.mkdir()
     bad.write_text(json.dumps(data))
@@ -510,4 +526,6 @@ def test_bench_json_schema_checker(tmp_path):
     assert any("parity" in e for e in errors)
     assert any("tokens_per_s" in e for e in errors)
     assert any("per_device_kv_bytes" in e for e in errors)
+    assert any("p50" in e and "p99" in e for e in errors)
+    assert any("submitted" in e for e in errors)
     assert check_file(str(tmp_path / "BENCH_missing.json"))

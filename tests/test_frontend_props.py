@@ -1,0 +1,181 @@
+"""Property-based lifecycle sweep for the async serving front end.
+
+Hypothesis drives random schedules of arrivals, front-end steps,
+cancellations, deadline expiries (via an injected fake clock) and
+clock advances against a ``ServingFrontend`` over a paged engine with
+an undersubscribed pool, asserting after every operation:
+
+  * the allocator's partition invariant and **exact refcount
+    accounting** — every physical page's refcount equals the number of
+    session page-lists plus prefix-index entries holding it, so a
+    cancelled/expired request can neither leak a page nor free one a
+    prefix-sharing sibling still reads;
+  * terminal-state bookkeeping: every handle ends in exactly one of
+    completed/cancelled/timeout (rejected never gets a handle), and
+    ``describe()``'s counts reconcile with ``submitted``;
+  * **bit-exactness**: completed streams equal the solo synchronous
+    reference of the same prompt; cancelled/expired streams are a
+    prefix of it (the front end distributes tokens, it never invents
+    or reorders them).
+
+Deterministic lifecycle cases live in ``test_frontend.py``; this module
+needs the optional ``hypothesis`` dev dependency and runs in the
+multi-device CI matrix.
+"""
+import asyncio
+import collections
+
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis "
+                           "(pip install -r requirements-dev.txt)")
+import jax
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.analysis.contracts import RequestInfeasible
+from repro.configs.registry import get_config
+from repro.models import model as M
+from repro.models import transformer as tf
+from repro.quant import convert
+from repro.serving import (PagePoolExhausted, QueueFull, Request,
+                           ServingEngine, ServingFrontend)
+from repro.serving.frontend import _EOS
+
+MAX_NEW = 3
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = M.reduce_config(get_config("llama3-8b"), dtype="float32",
+                          vocab=128, num_layers=1)
+    params = tf.init_params(jax.random.key(0), cfg)
+    qp, plans = convert.quantize_params(params, cfg)
+    return cfg, qp, plans, {}               # {} = expected-stream cache
+
+
+def _prompt_pool():
+    rng = np.random.default_rng(3)
+    stem = [int(t) for t in rng.integers(1, 100, 20)]
+    return [
+        stem,                                # full stem
+        stem[:-1] + [101],                   # shared prefix, diverges
+        stem[:9],                            # shorter shared prefix
+        [int(t) for t in rng.integers(1, 100, 13)],  # disjoint
+        [5, 9],                              # tiny
+        [42],                                # single token (no prefill)
+    ]
+
+
+PROMPTS = _prompt_pool()
+
+
+def _expected(setup, prompt):
+    cfg, qp, plans, cache = setup
+    key = tuple(prompt)
+    if key not in cache:
+        eng = ServingEngine(qp, plans, cfg, batch_size=2, cache_len=64,
+                            ops="ref", cache_mode="contiguous")
+        req = Request(uid=0, prompt=list(prompt), max_new_tokens=MAX_NEW)
+        eng.submit(req)
+        eng.run_until_done()
+        cache[key] = list(req.out_tokens)
+    return cache[key]
+
+
+def _check_refcounts(eng, sessions):
+    eng.kv.allocator.check()
+    held = collections.Counter()
+    for sess in sessions:
+        held.update(sess.pages)
+    if eng.prefix is not None:
+        for entry in eng.prefix.entries.values():
+            held.update(entry.pages)
+    for page in range(1, eng.layout.num_pages):
+        assert eng.kv.allocator.refcount[page] == held.get(page, 0), \
+            f"page {page}: refcount {eng.kv.allocator.refcount[page]} " \
+            f"vs holders {held.get(page, 0)}"
+
+
+@given(
+    schedule=st.lists(
+        st.tuples(st.sampled_from(["submit", "step", "cancel", "tick"]),
+                  st.integers(0, 5)),
+        max_size=24),
+    num_pages=st.integers(6, 11),
+    prefix=st.booleans(),
+    deadlines=st.lists(st.sampled_from([None, 2.0, 6.0]), min_size=8,
+                       max_size=8),
+)
+@settings(max_examples=8, deadline=None)
+def test_random_lifecycles_are_bit_exact_and_leak_free(
+        setup, schedule, num_pages, prefix, deadlines):
+    cfg, qp, plans, _ = setup
+    t = [0.0]                               # injected fake clock
+    eng = ServingEngine(qp, plans, cfg, batch_size=2, cache_len=64,
+                        ops="ref", page_size=8, num_pages=num_pages,
+                        prefix_cache=prefix)
+    fe = ServingFrontend(eng, max_pending=4, clock=lambda: t[0])
+    handles = []
+
+    async def step_relieving():
+        """One front-end step; transient pool exhaustion under the
+        undersubscribed pool is relieved the way an operator would —
+        cancel a live request (whose pages the lifecycle reclaims)."""
+        try:
+            await fe.step()
+        except PagePoolExhausted:
+            live = [h for h in handles if h.terminal is None
+                    and (h.session.pages or h.session.slot is not None)]
+            if live:
+                live[0].cancel()
+
+    async def drive():
+        for op, arg in schedule:
+            if op == "submit":
+                try:
+                    handles.append(
+                        fe.submit(list(PROMPTS[arg]), MAX_NEW,
+                                  deadline_s=deadlines[
+                                      len(handles) % len(deadlines)]))
+                except (QueueFull, RequestInfeasible):
+                    pass                    # typed backpressure: legal
+            elif op == "step":
+                await step_relieving()
+            elif op == "cancel":
+                live = [h for h in handles if h.terminal is None]
+                if live:
+                    live[arg % len(live)].cancel()
+            elif op == "tick":
+                t[0] += 1.0 + (arg % 3)     # may expire deadlines
+            _check_refcounts(eng, [h.session for h in handles])
+        for _ in range(400):                # drain
+            await step_relieving()
+            if fe._engine_idle():
+                fe._apply_lifecycle(t[0])
+                if all(h.terminal is not None for h in handles):
+                    break
+        _check_refcounts(eng, [h.session for h in handles])
+
+    asyncio.run(drive())
+
+    d = fe.describe()
+    assert d["pending"] == 0
+    assert sum(d["terminal"].values()) == d["submitted"]
+    assert d["terminal"]["completed"] + d["terminal"]["cancelled"] \
+        + d["terminal"]["timeout"] == len(handles)
+    for h in handles:
+        want = _expected(setup, h.request.prompt)
+        if h.terminal == "completed":
+            assert h.tokens == want, h.request.prompt
+            assert h.request.done
+        else:
+            assert h.terminal in ("cancelled", "timeout")
+            assert h.tokens == want[: len(h.tokens)], h.request.prompt
+        # the stream queue holds exactly the committed tokens + EOS:
+        # a consumer attaching late still sees the full stream
+        drained = []
+        while not h._q.empty():
+            drained.append(h._q.get_nowait())
+        assert drained[-1] is _EOS and drained[:-1] == h.tokens
