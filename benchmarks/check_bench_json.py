@@ -37,6 +37,8 @@ SERVING_CONFIG = {
     "tokens": int,
     "tokens_per_s": NUM,
     "kv_bytes": int,
+    "kv_pack": str,                 # stored KV element dtype: int8 / int4
+    "weight_bytes": int,            # quantized-parameter bytes as stored
     "pages": dict,
     "mode": str,
     "prefill": {
@@ -160,8 +162,9 @@ def _check(value, schema, path: str, errors: list):
 
 
 def _semantic_serving(data: dict, errors: list):
-    """Invariants the structural check can't express: percentile order
-    and terminal-state accounting of the latency section."""
+    """Invariants the structural check can't express: percentile order,
+    terminal-state accounting of the latency section, and the int4 KV
+    tier's byte-reduction gate."""
     lat = data.get("latency")
     if not isinstance(lat, dict):
         return                      # structural check already flagged it
@@ -178,6 +181,23 @@ def _semantic_serving(data: dict, errors: list):
         if sum(counts) != sub:
             errors.append(f"latency.terminal: counts {term} sum to "
                           f"{sum(counts)}, expected submitted={sub}")
+    # the sub-8-bit KV tier: on the equal-page-count schedule the int4
+    # pool must actually halve the bytes (the bench's 1.8x gate), and
+    # its kv_pack tag must say so
+    cfgs = data.get("configs")
+    if isinstance(cfgs, dict):
+        base, kv4 = cfgs.get("paged_chunked"), cfgs.get("paged_kv4")
+        if isinstance(base, dict) and isinstance(kv4, dict) \
+                and isinstance(base.get("kv_bytes"), int) \
+                and isinstance(kv4.get("kv_bytes"), int) \
+                and kv4["kv_bytes"] > 0:
+            ratio = base["kv_bytes"] / kv4["kv_bytes"]
+            if ratio < 1.8:
+                errors.append(f"configs.paged_kv4: kv_bytes reduction "
+                              f"{ratio:.2f}x below the 1.8x gate")
+            if kv4.get("kv_pack") != "int4":
+                errors.append("configs.paged_kv4: kv_pack is "
+                              f"{kv4.get('kv_pack')!r}, expected 'int4'")
 
 
 SEMANTIC = {

@@ -132,24 +132,38 @@ def can_tile_prefill(L: int, d: int, bq: int, bkv: int,
 # ----------------------------------------------------------- per-kernel --
 
 def _check_int8_matmul(m, n, k, bm=128, bn=128, bk=512, out_bits=8,
-                       has_bias=False, per_channel=False):
+                       has_bias=False, per_channel=False, packed=False):
     bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
     reasons = []
     if m % bm or n % bn or k % bk:
         reasons.append("blocks must divide the problem: "
                        f"(M,N,K)=({m},{n},{k}) %% (bm,bn,bk)="
                        f"({bm},{bn},{bk})")
-    vmem = bm * bk + bk * bn + bm * bn * 4          # x8 + w8 + acc scratch
+    if packed and (k % 2 or bk % 2):
+        reasons.append("packed weights pair nibbles along K: K and bk "
+                       f"must be even (got K={k}, bk={bk})")
+    # packed operands halve the weight-block bytes: the w block is
+    # (bk // 2, bn) int8 nibbles, unpacked in-register
+    vmem = bm * bk + (bk // 2 if packed else bk) * bn \
+        + bm * bn * 4                               # x8 + w + acc scratch
     vmem += bm * bn * (1 if out_bits <= 8 else 4)   # output block
     if has_bias:
         vmem += bn * 4
     if per_channel:
         vmem += bn * 4
     return LaunchReport(
-        op="int8_matmul", ok=not reasons, fused=not reasons,
+        op="int8_matmul_packed" if packed else "int8_matmul",
+        ok=not reasons, fused=not reasons,
         reasons=tuple(reasons),
         grid=(m // bm, n // bn, k // bk) if not reasons else (),
         blocks={"bm": bm, "bn": bn, "bk": bk}, vmem_bytes=vmem)
+
+
+def _check_int8_matmul_packed(m, n, k, bm=128, bn=128, bk=512, out_bits=8,
+                              has_bias=False, per_channel=False):
+    return _check_int8_matmul(m, n, k, bm=bm, bn=bn, bk=bk,
+                              out_bits=out_bits, has_bias=has_bias,
+                              per_channel=per_channel, packed=True)
 
 
 def _attn_common(h, hkv, reasons):
@@ -195,6 +209,7 @@ def _check_int_attention(b, sq, skv, h, hkv, d, bq=128, bkv=128,
 def _check_int_decode_attention(b, sq, h, hkv, d, L=None, bkv=128,
                                 max_pages=0, page_size=0, out_bits=8,
                                 per_channel=False, fold=False, n_out=0,
+                                kv_pack=False, num_pages=0,
                                 min_block=MIN_BLOCK):
     paged = page_size > 0
     if paged:
@@ -202,6 +217,13 @@ def _check_int_decode_attention(b, sq, h, hkv, d, L=None, bkv=128,
     assert L is not None, "need L (contiguous) or max_pages+page_size"
     reasons, policy = [], []
     _attn_common(h, hkv, reasons)
+    if kv_pack:
+        if not paged:
+            reasons.append("int4 KV pages require the paged layout "
+                           "(kv_pack without page_size)")
+        if d % 2:
+            reasons.append("int4 KV pages pair nibbles along the head "
+                           f"dim: d must be even (got {d})")
     if sq > MAX_SQ:
         reasons.append(f"decode kernel holds Sq <= {MAX_SQ} query rows "
                        f"in scratch (got {sq})")
@@ -224,7 +246,13 @@ def _check_int_decode_attention(b, sq, h, hkv, d, L=None, bkv=128,
     prefetch = [("valid_len", (b,))]
     if paged:
         prefetch.append(("pages", (b, max_pages)))
-    vmem = (sq * d + 2 * bkv * d                    # q + k + v blocks
+    if kv_pack:
+        # per-page dequant shifts ride as two more scalar-prefetch
+        # operands; K/V blocks hold (bkv, d // 2) nibbles
+        prefetch.append(("k_shift", (num_pages,)))
+        prefetch.append(("v_shift", (num_pages,)))
+    kv_elem = d // 2 if kv_pack else d
+    vmem = (sq * d + 2 * bkv * kv_elem              # q + k + v blocks
             + 2 * sq * 4 + sq * d * 4)              # m/s/acc scratch
     if per_channel:
         vmem += d * 4
@@ -247,10 +275,14 @@ def _check_int_decode_attention(b, sq, h, hkv, d, L=None, bkv=128,
 def _check_int_paged_prefill(b, c, h, hkv, d, max_pages, page_size,
                              bq=128, bkv=128, out_bits=8,
                              per_channel=False, fold=False, n_out=0,
+                             kv_pack=False, num_pages=0,
                              min_block=MIN_BLOCK):
     L = max_pages * page_size
     reasons, policy = [], []
     _attn_common(h, hkv, reasons)
+    if kv_pack and d % 2:
+        reasons.append("int4 KV pages pair nibbles along the head dim: "
+                       f"d must be even (got {d})")
     if L > MAX_ROWSUM_LEN:
         reasons.append("row-sum int32 budget: logical cache <= "
                        f"{MAX_ROWSUM_LEN} (got {L})")
@@ -267,7 +299,8 @@ def _check_int_paged_prefill(b, c, h, hkv, d, max_pages, page_size,
     if not can_tile_prefill(L, d, bq, bkv, min_block):
         policy.append(f"tiling policy declines: L={L}, d={d}, bq={bq}, "
                       f"bkv={bkv}, min_block={min_block}")
-    vmem = (bq * d + 2 * bkv * d
+    kv_elem = d // 2 if kv_pack else d
+    vmem = (bq * d + 2 * bkv * kv_elem
             + 2 * bq * 4 + bq * d * 4)
     if per_channel:
         vmem += d * 4
@@ -275,17 +308,22 @@ def _check_int_paged_prefill(b, c, h, hkv, d, max_pages, page_size,
         vmem += (d * n_out + bq * d + bq * n_out * 4 + bq * n_out)
     else:
         vmem += bq * d * (1 if out_bits <= 8 else 4)
+    prefetch = [("pos_end", (b,)), ("pages", (b, max_pages))]
+    if kv_pack:
+        prefetch.append(("k_shift", (num_pages,)))
+        prefetch.append(("v_shift", (num_pages,)))
     grid = (b, c // bq, h, 3, L // bkv) \
         if not (c % bq or page_size % bkv) else ()
     return LaunchReport(
         op="int_paged_prefill", ok=not reasons,
         fused=not (reasons or policy), reasons=tuple(reasons + policy),
         grid=grid, blocks={"bq": bq, "bkv": bkv}, vmem_bytes=vmem,
-        scalar_prefetch=(("pos_end", (b,)), ("pages", (b, max_pages))))
+        scalar_prefetch=tuple(prefetch))
 
 
 _CHECKS = {
     "int8_matmul": _check_int8_matmul,
+    "int8_matmul_packed": _check_int8_matmul_packed,
     "int_attention": _check_int_attention,
     "int_decode_attention": _check_int_decode_attention,
     "int_paged_prefill": _check_int_paged_prefill,

@@ -4,8 +4,9 @@
 (``quant.plans.build_layer_plans``) layer-kind by layer-kind, pushing
 worst-case :class:`~repro.analysis.ranges.IntRange` intervals through the
 transfer functions of every op in the ``repro.ops`` API — ``int8_matmul``,
-``int_softmax``, ``int_gelu``, ``int_layernorm``, ``int_attention``,
-``int_decode_attention``, ``int_paged_prefill`` — at a given
+``int8_matmul_packed``, ``int_softmax``, ``int_gelu``, ``int_layernorm``,
+``int_attention``, ``int_decode_attention`` / ``int_paged_prefill``
+(both also at their int4-KV-page operand ranges) — at a given
 ``(seq_len, cache_len)``, and raises a typed, location-bearing
 :class:`~repro.analysis.budgets.BitBudgetError` if *any* intermediate of
 the exact integer computation could leave int32.  On success it returns
@@ -31,7 +32,8 @@ import dataclasses
 from repro.analysis import contracts
 from repro.analysis.budgets import (MAX_ROWSUM_LEN, MAX_SQ, bits_for,
                                     static_check)
-from repro.analysis.ranges import (INT8, IntRange, audit_dyadics,
+from repro.analysis.ranges import (INT4, INT4_KV, INT8, MSR4_DELTA_MAX,
+                                   IntRange, audit_dyadics,
                                    t_attention_acc, t_clip,
                                    t_dyadic, t_dyadic_perchannel, t_gelu,
                                    t_layernorm, t_matmul_acc,
@@ -133,6 +135,35 @@ def check_int8_matmul(plan, layer: str, x: IntRange = INT8,
     return out, OpReport(op, layer, t.worst, path="pallas")
 
 
+def check_int8_matmul_packed(plan, layer: str, x: IntRange = INT8,
+                             bias_qmax: int = BIAS_QMAX,
+                             op: str = "int8_matmul_packed"):
+    """The sub-8-bit weight tier: the packed matmul accumulates the
+    nibble operand (``|w| <= 7``) and — for msr4 — the outlier-lane
+    correction (``|delta| <= 120``, distinct rows per group) as separate
+    int32 partials whose sum is the dense accumulator.  Element-wise
+    ``|nib| + |delta| == |w| <= 127``, so the combined range is exactly
+    the dense ``k·|x|·127`` budget; the split pieces are certified
+    individually because the kernels materialize them."""
+    t = _Track()
+    t("nibble accumulator", t_matmul_acc(
+        plan.k_dim, x, w_qmax=INT4.qmax,
+        what="packed nibble accumulator", op=op, layer=layer))
+    t("outlier correction", t_matmul_acc(
+        plan.k_dim, x, w_qmax=MSR4_DELTA_MAX,
+        what="msr4 outlier correction", op=op, layer=layer))
+    acc = t("accumulator", t_matmul_acc(
+        plan.k_dim, x, bias=IntRange.symmetric(bias_qmax),
+        op=op, layer=layer))
+    if plan.s_out == 0.0:
+        out = acc
+    else:
+        out = t_clip(t("requant staging", t_dyadic_perchannel(
+            acc, plan.c, plan.pre, b_max=plan_b_max(plan),
+            op=op, layer=layer)), plan.out_bits)
+    return out, OpReport(op, layer, t.worst, path="pallas", note="msr4")
+
+
 def check_int_softmax(sm, score: IntRange, rowlen: int, layer: str,
                       exact: bool = True, op: str = "int_softmax"):
     t = _Track()
@@ -178,14 +209,21 @@ def check_int_layernorm(plan, layer: str, x: IntRange = None,
                          else "rmsnorm")
 
 
-def _attention_core(ia, rowlen: int, layer: str, op: str, t: _Track):
-    """Shared Q·Kᵀ → Shiftmax → P·V → dn_out epilogue range walk."""
+def _attention_core(ia, rowlen: int, layer: str, op: str, t: _Track,
+                    kv_qmax: int = 127):
+    """Shared Q·Kᵀ → Shiftmax → P·V → dn_out epilogue range walk.
+
+    ``kv_qmax`` is the K/V operand magnitude: 127 on the int8 grid, or
+    ``INT4_KV.qmax`` (7 << KV4_SHIFT = 112) when the pages store packed
+    nibbles that the kernel dequantizes in-launch — strictly inside the
+    int8 grid, so the packed tier certifies wherever the dense one does."""
     score = t("scores", t_matmul_acc(
-        ia.head_dim, what="attention score accumulator",
-        op=op, layer=layer))
+        ia.head_dim, w_qmax=kv_qmax,
+        what="attention score accumulator", op=op, layer=layer))
     exact = rowlen <= MAX_ROWSUM_LEN
     t_softmax(ia.sm, score, rowlen, exact_rowsum=exact, op=op, layer=layer)
-    acc = t("P*V accumulator", t_attention_acc(rowlen, op=op, layer=layer))
+    acc = t("P*V accumulator", t_attention_acc(rowlen, v_qmax=kv_qmax,
+                                               op=op, layer=layer))
     out = t_clip(t("epilogue staging", t_dyadic(
         acc, ia.dn_out, what="attention epilogue dyadic",
         op=op, layer=layer)), 8)
@@ -205,26 +243,32 @@ def check_int_attention(ia, seq_len: int, layer: str,
 
 
 def check_int_decode_attention(ia, cache_len: int, layer: str,
-                               sq: int = MAX_SQ,
+                               sq: int = MAX_SQ, kv_pack: bool = False,
                                op: str = "int_decode_attention"):
     t = _Track()
-    out, exact = _attention_core(ia, cache_len, layer, op, t)
+    kv_qmax = INT4_KV.qmax if kv_pack else 127
+    out, exact = _attention_core(ia, cache_len, layer, op, t,
+                                 kv_qmax=kv_qmax)
     bkv = contracts.fit_block(128, cache_len)
     fused = contracts.can_tile_decode(sq, cache_len, ia.head_dim, bkv)
     path = "fused" if fused else \
         ("fallback:two-pass-streaming" if not exact else "fallback:oracle")
-    return out, OpReport(op, layer, t.worst, path=path)
+    return out, OpReport(op, layer, t.worst, path=path,
+                         note="int4 kv pages" if kv_pack else "")
 
 
 def check_int_paged_prefill(ia, cache_len: int, layer: str,
                             chunk: int = 256, page_size: int = 64,
                             wo=None, n_heads: int = 0,
+                            kv_pack: bool = False,
                             op: str = "int_paged_prefill"):
     """``wo``: the o-projection ``LinearPlan`` when certifying the
     folded-wo launch epilogue (int8 attention tile → int8 matmul →
     per-channel requant inside the same kernel)."""
     t = _Track()
-    out, exact = _attention_core(ia, cache_len, layer, op, t)
+    kv_qmax = INT4_KV.qmax if kv_pack else 127
+    out, exact = _attention_core(ia, cache_len, layer, op, t,
+                                 kv_qmax=kv_qmax)
     if wo is not None:
         t("folded wo accumulator", t_matmul_acc(
             wo.k_dim, out, bias=IntRange.symmetric(BIAS_QMAX),
@@ -238,7 +282,8 @@ def check_int_paged_prefill(ia, cache_len: int, layer: str,
     fused = contracts.can_tile_prefill(cache_len, ia.head_dim, bq, bkv)
     path = "fused" if fused else \
         ("fallback:two-pass-streaming" if not exact else "fallback:oracle")
-    return out, OpReport(op, layer, t.worst, path=path)
+    return out, OpReport(op, layer, t.worst, path=path,
+                         note="int4 kv pages" if kv_pack else "")
 
 
 def check_requant_spec(spec, r: IntRange, op: str, layer: str,
@@ -325,6 +370,11 @@ def certify_config(cfg, seq_len: int = 4096, cache_len: int = 32768,
         "fitted at)",
         "i-norm output stage certified at the |n| <= sqrt(d) design "
         "bound (sigma^2 >= y_i^2/d; make_inorm's declared n_q_max)",
+        "packed weight tier: nibbles on the +-7 grid, msr4 outlier "
+        "deltas <= 120, element-wise |nib| + |delta| == |w| <= 127 "
+        "(quant.pack contract)",
+        "int4 KV pages dequantize to q4 << 4 (|kv| <= 112, inside the "
+        "int8 grid; repro.ops.packed.KV_SHIFT)",
     ]
     # embedding -> residual stream
     t_dyadic(INT8, plans.embed.dn_res, what="embed residual dyadic",
@@ -334,6 +384,9 @@ def certify_config(cfg, seq_len: int = 4096, cache_len: int = 32768,
     ops.append(rep)
     if plans.attn is not None:
         _, rep = check_int8_matmul(plans.attn.qkv, "attn.qkv")
+        ops.append(rep)
+        _, rep = check_int8_matmul_packed(plans.attn.qkv,
+                                          "attn.qkv[msr4]")
         ops.append(rep)
         _, rep = check_int_attention(plans.attn.attn, seq_len, "attn.core")
         ops.append(rep)
@@ -347,10 +400,28 @@ def certify_config(cfg, seq_len: int = 4096, cache_len: int = 32768,
             _, rep = check_int_decode_attention(
                 plans.attn.attn, cache_len, "attn.decode")
             ops.append(rep)
+            _, rep = check_int_decode_attention(
+                plans.attn.attn, cache_len, "attn.decode[kv4]",
+                kv_pack=True)
+            ops.append(rep)
             _, rep = check_int_paged_prefill(
                 plans.attn.attn, cache_len, "attn.prefill",
                 wo=plans.attn.out, n_heads=cfg.n_heads)
             ops.append(rep)
+            _, rep = check_int_paged_prefill(
+                plans.attn.attn, cache_len, "attn.prefill[kv4]",
+                wo=plans.attn.out, n_heads=cfg.n_heads, kv_pack=True)
+            ops.append(rep)
+    elif plans.ffn is not None:
+        # no attention projections: certify the packed weight tier on
+        # the FFN up-projection so every config proves the sub-8-bit
+        # matmul path
+        _, rep = check_int8_matmul_packed(plans.ffn.up, "ffn.up[msr4]")
+        ops.append(rep)
+    elif plans.mamba is not None:
+        _, rep = check_int8_matmul_packed(plans.mamba.in_proj,
+                                          "mamba.in_proj[msr4]")
+        ops.append(rep)
     if plans.cross is not None and plans.cross is not plans.attn:
         _, rep = check_int_attention(plans.cross.attn, seq_len,
                                      "cross.core")
@@ -385,7 +456,7 @@ def certify_config(cfg, seq_len: int = 4096, cache_len: int = 32768,
 
 __all__ = [
     "BIAS_QMAX", "ConfigReport", "OpReport", "certify_config",
-    "check_int8_matmul", "check_int_attention",
+    "check_int8_matmul", "check_int8_matmul_packed", "check_int_attention",
     "check_int_decode_attention", "check_int_gelu",
     "check_int_layernorm", "check_int_paged_prefill",
     "check_int_softmax", "check_requant_spec",

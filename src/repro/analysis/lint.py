@@ -24,6 +24,15 @@ Rule catalog (docs/ANALYSIS.md has the full rationale):
          stay integer; the only sanctioned float boundary is
          ``core/quant.py`` (dequantization helpers).
 
+  RR004  no ``unpack*(...)`` calls in ``repro/models/`` or
+         ``repro/serving/`` — packed weight / KV buffers are unpacked
+         only inside ``repro/kernels/`` and ``repro/ops/backends/``
+         (the declared dequant references and the fused in-kernel
+         paths).  A model- or serving-layer unpack would materialize
+         the int8 tensor the compression tier exists to avoid; dispatch
+         through ``ops.int8_matmul_packed`` / the ``kv_shifts``-aware
+         attention ops instead.
+
 ``lint_source(src, path)`` is the unit-test entry point; ``lint_paths``
 drives the CLI.
 """
@@ -39,6 +48,10 @@ KERNEL_IMPORT_ALLOWED = ("repro/kernels", "repro/ops/backends")
 
 #: core modules sanctioned to use float dtypes (the dequant boundary)
 CORE_FLOAT_ALLOWED = ("repro/core/quant.py",)
+
+#: rel-path prefixes (within src/) where RR004 bans unpack*() calls:
+#: packed buffers stay packed above the kernel/backend boundary
+UNPACK_BANNED = ("repro/models/", "repro/serving/")
 
 FLOAT_DTYPES = frozenset(
     {"float16", "float32", "float64", "bfloat16", "half", "double"})
@@ -84,6 +97,7 @@ class _Visitor(ast.NodeVisitor):
         self.check_asarray = norm.startswith("repro/serving/")
         self.check_floats = (norm.startswith("repro/core/")
                              and norm not in CORE_FLOAT_ALLOWED)
+        self.check_unpack = _in_scope(norm, UNPACK_BANNED)
 
     def _emit(self, node, code, message):
         self.findings.append(Finding(self.path, node.lineno,
@@ -109,7 +123,7 @@ class _Visitor(ast.NodeVisitor):
                        "the repro.ops backend registry")
         self.generic_visit(node)
 
-    # RR002 / RR003 ----------------------------------------------------
+    # RR002 / RR003 / RR004 --------------------------------------------
     def visit_Call(self, node):
         if self.check_asarray and self._is_jnp_asarray(node.func) \
                 and node.args:
@@ -120,7 +134,26 @@ class _Visitor(ast.NodeVisitor):
                     f"jnp.asarray({ast.unparse(arg)}) may alias mutable "
                     "engine state (zero-copy) — snapshot first: "
                     f"jnp.asarray({ast.unparse(arg)}.copy())")
+        if self.check_unpack:
+            name = self._call_name(node.func)
+            if name.startswith("unpack"):
+                self._emit(
+                    node, "RR004",
+                    f"'{name}(' call outside kernels/ and ops/backends/ "
+                    "— packed buffers are unpacked only below the "
+                    "backend boundary; dispatch through the packed ops "
+                    "(repro.ops.int8_matmul_packed / kv_shifts)")
         self.generic_visit(node)
+
+    @staticmethod
+    def _call_name(func) -> str:
+        """The called name: bare ``f(...)`` or the terminal attribute of
+        ``mod.f(...)`` — empty for computed callees."""
+        if isinstance(func, ast.Name):
+            return func.id
+        if isinstance(func, ast.Attribute):
+            return func.attr
+        return ""
 
     @staticmethod
     def _is_jnp_asarray(func) -> bool:

@@ -107,6 +107,28 @@ class IntRange:
 #: the design-grid int8 operand range (see module docstring)
 INT8 = IntRange.symmetric(127)
 
+#: the packed-nibble operand grid: sub-8-bit weights and int4 KV codes
+#: store two's-complement nibbles clipped to ±7 (never −8) by
+#: ``quant.pack`` / ``ops.packed.quantize_kv``
+INT4 = IntRange.symmetric(7)
+
+#: msr4 outlier-lane delta bound on the ±127 design grid:
+#: ``delta = w − clip(w, −7, 7)`` so ``|delta| <= 127 − 7``; each lane
+#: row is distinct within its group, and element-wise
+#: ``|nib| + |delta| == |w| <= 127``, which is why the split accumulator
+#: pieces never exceed the dense ``k·127·127`` budget
+MSR4_DELTA_MAX = 127 - 7
+
+#: static per-page requant shift of the int4 KV tier — the import-cycle-
+#: free twin of ``repro.ops.packed.KV_SHIFT`` (equality is asserted by
+#: ``tests/test_pack_props.py``)
+KV4_SHIFT = 4
+
+#: the dequantized int4 KV operand range: pages store
+#: ``clip(rshift_round(v, KV4_SHIFT), −7, 7)`` and the kernels unpack to
+#: ``q4 << KV4_SHIFT`` — magnitude ≤ 7·2⁴ = 112, inside the int8 grid
+INT4_KV = IntRange.symmetric(7 << KV4_SHIFT)
+
 
 def _tag(what, op, layer):
     return dict(op=op, layer=layer) if (op or layer) else {}
@@ -378,7 +400,8 @@ def audit_dyadics(obj, prefix: str = "", op=None, layer=None) -> int:
 
 
 __all__ = [
-    "INT8", "IntRange", "PER_CHANNEL_B_MAX", "BitBudgetError",
+    "INT4", "INT4_KV", "INT8", "IntRange", "KV4_SHIFT",
+    "MSR4_DELTA_MAX", "PER_CHANNEL_B_MAX", "BitBudgetError",
     "INT32_MAX", "audit_dyadics", "iter_dyadics", "prob_rowsum_max",
     "rshift_round_int", "t_attention_acc", "t_clip", "t_dyadic",
     "t_dyadic_perchannel", "t_gelu", "t_iexp", "t_layernorm",

@@ -186,9 +186,14 @@ def cache_pspecs(caches) -> list:
     for c in caches:
         s = {}
         for key, leaf in c.items():
-            assert key in ("k8", "v8"), \
+            assert key in ("k8", "v8", "k_shift", "v_shift"), \
                 f"unexpected cache leaf {key!r} under tensor parallelism"
-            s[key] = P(None, None, None, TP_AXIS, None)
+            if key in ("k_shift", "v_shift"):
+                # per-page requant shifts (ng, num_pages): page ids are
+                # device-agnostic, so the shifts replicate
+                s[key] = P(None, None)
+            else:
+                s[key] = P(None, None, None, TP_AXIS, None)
         specs.append(s)
     return specs
 

@@ -39,9 +39,21 @@ def _requant_tile(acc, b_mult, c: int, pre: int):
     return _rshift_round(_rshift_round(acc, pre) * b_mult, c - pre)
 
 
+def _unpack_nibbles_k(w_ref, bk: int, bn: int):
+    """In-register nibble expansion of a (bk // 2, bn) packed weight
+    block to (bk, bn) int8: low nibble = even K row, high = odd.  All
+    arithmetic in int32 with explicit sign extension — bit-exact twin of
+    ``repro.ops.packed.nibble_unpack(axis=-2)``."""
+    p32 = w_ref[...].astype(jnp.int32)
+    lo = ((p32 & 15) ^ 8) - 8
+    hi = (((p32 >> 4) & 15) ^ 8) - 8
+    return jnp.stack([lo, hi], axis=1).reshape(bk, bn).astype(jnp.int8)
+
+
 def _mm_kernel(*refs, n_k: int, has_bias: bool, has_bvec: bool,
                dn_b: Optional[int], dn_c: int, dn_pre: int,
-               out_lo: int, out_hi: int, out_dtype):
+               out_lo: int, out_hi: int, out_dtype, raw: bool = False,
+               packed: bool = False, bk: int = 0, bn: int = 0):
     it = iter(refs)
     x_ref, w_ref = next(it), next(it)
     bias_ref = next(it) if has_bias else None
@@ -53,8 +65,9 @@ def _mm_kernel(*refs, n_k: int, has_bias: bool, has_bvec: bool,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    w = _unpack_nibbles_k(w_ref, bk, bn) if packed else w_ref[...]
     acc_ref[...] += jax.lax.dot_general(
-        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        x_ref[...], w, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.int32)
 
     @pl.when(k_step == n_k - 1)
@@ -62,6 +75,9 @@ def _mm_kernel(*refs, n_k: int, has_bias: bool, has_bvec: bool,
         acc = acc_ref[...]
         if has_bias:
             acc = acc + bias_ref[...].astype(jnp.int32)[None, :]
+        if raw:                                        # int32 accumulator out
+            o_ref[...] = acc.astype(out_dtype)
+            return
         if has_bvec:                                   # per-channel requant
             b = bvec_ref[...].astype(jnp.int32)[None, :]
             out = _requant_tile(acc, b, dn_c, dn_pre)
@@ -75,36 +91,54 @@ def int8_matmul_pallas(x8, w8, bias32=None, dn: Dyadic = None,
                        b_vec=None, c: int = 0, pre: int = 0,
                        out_bits: int = 8, out_dtype=jnp.int8,
                        bm: int = 128, bn: int = 128, bk: int = 512,
-                       interpret: bool = True):
+                       packed: bool = False, interpret: bool = True):
     """x8: (M, K) int8; w8: (K, N) int8; bias32: (N,) int32 or None.
 
-    Exactly one of ``dn`` (per-tensor) / (``b_vec``, c, pre) (per-channel)
-    must be given.  M/K/N must divide by the (clamped) block shapes.
+    Epilogue: ``dn`` (per-tensor) / (``b_vec``, c, pre) (per-channel) /
+    neither (**raw**: the int32 accumulator plus bias is written out,
+    ``out_dtype`` must be int32).  M/K/N must divide by the (clamped)
+    block shapes.
+
+    ``packed=True`` switches the weight operand to int4 nibbles:
+    ``w8`` is the ``(K // 2, N)`` packed array
+    (``QuantLinearParams.w_packed``), streamed as ``(bk // 2, bn)``
+    blocks and expanded in-register — packed weights never materialize
+    as dense int8 in HBM.  Bit-exact vs unpacking first (msr4 outlier
+    lanes are the *caller's* sparse correction on a raw launch).
     """
     m, k = x8.shape
-    k2, n = w8.shape
-    assert k == k2, (x8.shape, w8.shape)
+    if packed:
+        k_half, n = w8.shape
+        assert k == 2 * k_half, (x8.shape, w8.shape)
+    else:
+        k2, n = w8.shape
+        assert k == k2, (x8.shape, w8.shape)
+    raw = dn is None and b_vec is None
+    if raw:
+        assert out_bits == 32 and out_dtype == jnp.int32, \
+            "raw epilogue returns the int32 accumulator"
     require_launch(check_launch(
         "int8_matmul", m=m, n=n, k=k, bm=bm, bn=bn, bk=bk,
         out_bits=out_bits, has_bias=bias32 is not None,
-        per_channel=b_vec is not None))
+        per_channel=b_vec is not None, packed=packed))
     bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
     n_k = k // bk
     if dn is not None:
         dn_b, dn_c, dn_pre = dn.b, dn.c, dn.pre
     else:
-        assert b_vec is not None
         dn_b, dn_c, dn_pre = None, c, pre
     out_lo, out_hi = -(1 << (out_bits - 1)), (1 << (out_bits - 1)) - 1
 
     kernel = functools.partial(
         _mm_kernel, n_k=n_k, has_bias=bias32 is not None,
         has_bvec=b_vec is not None, dn_b=dn_b, dn_c=dn_c, dn_pre=dn_pre,
-        out_lo=out_lo, out_hi=out_hi, out_dtype=out_dtype)
+        out_lo=out_lo, out_hi=out_hi, out_dtype=out_dtype, raw=raw,
+        packed=packed, bk=bk, bn=bn)
 
     in_specs = [
         pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
-        pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        pl.BlockSpec((bk // 2 if packed else bk, bn),
+                     lambda i, j, s: (s, j)),
     ]
     args = [x8, w8]
     if bias32 is not None:

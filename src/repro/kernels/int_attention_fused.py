@@ -140,6 +140,21 @@ def _requant_tile(acc, requant: RequantSpec, b_row=None):
     return jnp.clip(out, lo, hi)
 
 
+def _unpack_kv_tile(p8, shift):
+    """In-register int4 KV expansion of a ``(rows, d // 2)`` packed tile
+    to ``(rows, d)`` int8: low nibble = even head-dim lane, high = odd,
+    then a per-page requant left-shift.  All arithmetic in int32 with
+    explicit sign extension — bit-exact twin of
+    ``repro.ops.packed.unpack_kv_pool`` on the gathered layout.  The
+    shifted magnitudes stay ≤ 7·2⁴ = 112, int8-safe by construction."""
+    rows, half = p8.shape
+    p32 = p8.astype(jnp.int32)
+    lo = ((p32 & 15) ^ 8) - 8
+    hi = (((p32 >> 4) & 15) ^ 8) - 8
+    q = jnp.stack([lo, hi], axis=-1).reshape(rows, 2 * half)
+    return (q << shift).astype(jnp.int8)
+
+
 def _epilogue_setup(requant, plan: IAttnPlan, out_bits: int, b_vec,
                     h: int, d: int):
     """Shared wrapper-side epilogue policy (prefill and decode kernels):
@@ -293,10 +308,16 @@ def _paged_prefill_kernel(*refs, plan: IAttnPlan, requant: RequantSpec,
                           has_bvec: bool, n_kv: int, c: int, bq: int,
                           bkv: int, fold: bool, wo_spec,
                           wo_has_bias: bool, wo_has_bvec: bool,
-                          n_heads: int):
+                          n_heads: int, packed_kv: bool = False,
+                          sub: int = 1):
     refs = list(refs)
     vl_ref = refs.pop(0)
-    refs.pop(0)                     # page table: read by index maps only
+    # page table: read by index maps only — except under packed KV,
+    # where the body re-derives the physical page for the shift lookup
+    pt_ref = refs.pop(0)
+    ks_ref = vs_ref = None
+    if packed_kv:
+        ks_ref, vs_ref = refs.pop(0), refs.pop(0)
     q_ref, k_ref, v_ref = refs.pop(0), refs.pop(0), refs.pop(0)
     b_ref = refs.pop(0) if has_bvec else None
     wo_ref = wob_ref = wobv_ref = None
@@ -320,8 +341,18 @@ def _paged_prefill_kernel(*refs, plan: IAttnPlan, requant: RequantSpec,
     base = vl - c                       # chunk's first global position
 
     q8 = q_ref[0, :, 0, :]              # (bq, d) int8
-    k8 = k_ref[0, :, 0, :]              # (bkv, d) int8
-    v8 = v_ref[0, :, 0, :]
+    if packed_kv:
+        # re-derive the physical page exactly as the KV index map did
+        # (same dead-block clamp) and dequantize the nibble tile with
+        # that page's requant shift, in-register
+        last = jnp.maximum(pl.cdiv(vl, bkv) - 1, 0)
+        kc = jnp.minimum(kv_step, last)
+        page = pt_ref[bi, kc // sub]
+        k8 = _unpack_kv_tile(k_ref[0, :, 0, :], ks_ref[page])
+        v8 = _unpack_kv_tile(v_ref[0, :, 0, :], vs_ref[page])
+    else:
+        k8 = k_ref[0, :, 0, :]          # (bkv, d) int8
+        v8 = v_ref[0, :, 0, :]
 
     # causal-over-history mask: chunk row i at global position base +
     # q_blk*bq + i sees logical cache positions <= its own.  ki is the
@@ -369,12 +400,19 @@ def int_paged_prefill_fused(q8, k_pool, v_pool, plan: IAttnPlan, pos_end,
                             b_vec=None, bq: int = 128, bkv: int = 128,
                             out_bits: int = 8, interpret: bool = True,
                             wo_w8=None, wo_bias32=None, wo_b_vec=None,
-                            wo_spec=None):
+                            wo_spec=None, kv_shifts=None):
     """q8: (B, C, H, D) int8 chunk queries; k_pool/v_pool: physical
     ``(num_pages, page_size, Hkv, D)`` int8 pools *already containing
     the chunk's K/V* (``repro.ops.paged.scatter_chunk``); ``pos_end``:
     (B,) int32 logical occupancy after the chunk (``base_pos + C``);
     ``pages``: int32 (B, max_pages) page table.
+
+    ``kv_shifts``: a ``(k_shift, v_shift)`` pair of int32
+    ``(num_pages,)`` per-page requant shifts switches the pools to the
+    **packed int4** layout ``(num_pages, page_size, Hkv, D // 2)`` —
+    two head-dim nibbles per byte, expanded and left-shifted in-register
+    (``_unpack_kv_tile``); packed pages never materialize as int8 in
+    HBM.  The shifts ride as two extra scalar-prefetch operands.
 
     ``requant``/``b_vec``: the attention epilogue, exactly as
     :func:`int_attention_fused`.  ``wo_w8`` (+ ``wo_bias32`` /
@@ -397,10 +435,18 @@ def int_paged_prefill_fused(q8, k_pool, v_pool, plan: IAttnPlan, pos_end,
     pages = jnp.asarray(pages, jnp.int32)
     assert pages.ndim == 2 and pages.shape[0] == b, pages.shape
     L = pages.shape[1] * ps
+    packed_kv = kv_shifts is not None
+    num_pages = k_pool.shape[0]
+    if packed_kv:
+        assert k_pool.shape[3] == d // 2, (k_pool.shape, d)
+        k_shift = jnp.asarray(kv_shifts[0], jnp.int32)
+        v_shift = jnp.asarray(kv_shifts[1], jnp.int32)
+        assert k_shift.shape == v_shift.shape == (num_pages,), \
+            (k_shift.shape, v_shift.shape, num_pages)
     require_launch(check_launch(
         "int_paged_prefill", b=b, c=c, h=h, hkv=hkv, d=d,
         max_pages=pages.shape[1], page_size=ps, bq=bq, bkv=bkv,
-        out_bits=out_bits))
+        out_bits=out_bits, kv_pack=packed_kv, num_pages=num_pages))
     group = h // hkv
     bq = min(bq, c)
     bkv = min(bkv, ps)
@@ -432,7 +478,8 @@ def int_paged_prefill_fused(q8, k_pool, v_pool, plan: IAttnPlan, pos_end,
         _paged_prefill_kernel, plan=plan, requant=requant,
         has_bvec=has_bvec, n_kv=n_kv, c=c, bq=bq, bkv=bkv,
         fold=fold, wo_spec=wo_spec, wo_has_bias=wo_has_bias,
-        wo_has_bvec=wo_has_bvec, n_heads=h)
+        wo_has_bvec=wo_has_bvec, n_heads=h, packed_kv=packed_kv,
+        sub=sub)
 
     def _kv_block(ki, vl):
         # clamp dead blocks to the slot's last live one before table
@@ -446,24 +493,25 @@ def int_paged_prefill_fused(q8, k_pool, v_pool, plan: IAttnPlan, pos_end,
     # OUTSIDE the head dim so the folded-wo accumulator for one query
     # block sweeps all heads consecutively (decode kernel: Sq <= 8 in
     # scratch needs no q dim at all); scalar-prefetch refs (pos_end,
-    # pages) arrive as trailing args.
-    def q_map(bi, qi, hi, ph, ki, vl, pt):
+    # pages[, k_shift, v_shift]) arrive as trailing args (``*_`` absorbs
+    # the shift refs under the packed layout).
+    def q_map(bi, qi, hi, ph, ki, vl, pt, *_):
         return (bi, qi, hi, 0)
 
-    def kv_map(bi, qi, hi, ph, ki, vl, pt):
+    def kv_map(bi, qi, hi, ph, ki, vl, pt, *_):
         kc = _kv_block(ki, vl[bi])
         return (pt[bi, kc // sub], kc % sub, hi // group, 0)
 
-    def head_row_map(bi, qi, hi, ph, ki, vl, pt):
+    def head_row_map(bi, qi, hi, ph, ki, vl, pt, *_):
         return (hi, 0)
 
-    def one_row_map(bi, qi, hi, ph, ki, vl, pt):
+    def one_row_map(bi, qi, hi, ph, ki, vl, pt, *_):
         return (0, 0)
 
-    def out_map(bi, qi, hi, ph, ki, vl, pt):
+    def out_map(bi, qi, hi, ph, ki, vl, pt, *_):
         return (bi, qi, 0) if fold else (bi, qi, hi, 0)
 
-    kv_blk = (1, bkv, 1, d)
+    kv_blk = (1, bkv, 1, d // 2 if packed_kv else d)
     in_specs = [
         pl.BlockSpec((1, bq, 1, d), q_map),
         pl.BlockSpec(kv_blk, kv_map),
@@ -498,8 +546,10 @@ def int_paged_prefill_fused(q8, k_pool, v_pool, plan: IAttnPlan, pos_end,
         out_specs = pl.BlockSpec((1, bq, 1, d), out_map)
         out_shape = jax.ShapeDtypeStruct((b, c, h, d), out_dtype)
 
+    scalar_args = (pos_end, pages, k_shift, v_shift) if packed_kv \
+        else (pos_end, pages)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=len(scalar_args),
         grid=(b, c // bq, h, 3, n_kv),
         in_specs=in_specs,
         out_specs=out_specs,
@@ -510,4 +560,4 @@ def int_paged_prefill_fused(q8, k_pool, v_pool, plan: IAttnPlan, pos_end,
         grid_spec=grid_spec,
         out_shape=out_shape,
         interpret=interpret,
-    )(pos_end, pages, *args)
+    )(*scalar_args, *args)

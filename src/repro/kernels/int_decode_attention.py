@@ -75,7 +75,8 @@ from repro.analysis.contracts import check_launch, require_launch
 from repro.core.attention import IAttnPlan
 from repro.kernels.int_attention_fused import (_epilogue_setup,
                                                _requant_tile,
-                                               _streaming_attn_body)
+                                               _streaming_attn_body,
+                                               _unpack_kv_tile)
 from repro.ops.spec import PER_CHANNEL, RequantSpec
 
 # both budgets are owned by repro.analysis.budgets; re-exported here
@@ -87,11 +88,18 @@ MAX_SKV = MAX_ROWSUM_LEN    # row-sum int32 budget: L * 2^15 <= 2^30
 def _decode_kernel(*refs, plan: IAttnPlan, requant: RequantSpec,
                    has_bvec: bool, n_kv: int, sq: int, bkv: int,
                    paged: bool, fold: bool, wo_spec, wo_has_bias: bool,
-                   wo_has_bvec: bool, n_heads: int):
+                   wo_has_bvec: bool, n_heads: int,
+                   packed_kv: bool = False, sub: int = 1):
     refs = list(refs)
     vl_ref = refs.pop(0)
+    pt_ref = ks_ref = vs_ref = None
     if paged:
-        refs.pop(0)                 # page table: read by index maps only
+        # page table: read by index maps only — except under packed KV,
+        # where the body re-derives the physical page for the shift
+        # lookup
+        pt_ref = refs.pop(0)
+    if packed_kv:
+        ks_ref, vs_ref = refs.pop(0), refs.pop(0)
     q_ref, k_ref, v_ref = refs.pop(0), refs.pop(0), refs.pop(0)
     b_ref = refs.pop(0) if has_bvec else None
     wo_ref = wob_ref = wobv_ref = None
@@ -115,8 +123,19 @@ def _decode_kernel(*refs, plan: IAttnPlan, requant: RequantSpec,
     vl = vl_ref[bi]
 
     q8 = q_ref[0, :, 0, :]                      # (sq, d) int8
-    k8 = k_ref[0, :, 0, :]                      # (bkv, d) int8
-    v8 = v_ref[0, :, 0, :]
+    if packed_kv:
+        # re-derive the physical page exactly as the KV index map did
+        # (same dead-block clamp) and dequantize the nibble tile with
+        # that page's requant shift, in-register — packed pages never
+        # exist as dense int8 outside the launch
+        last = jnp.maximum(pl.cdiv(vl, bkv) - 1, 0)
+        kc = jnp.minimum(kv_step, last)
+        page = pt_ref[bi, kc // sub]
+        k8 = _unpack_kv_tile(k_ref[0, :, 0, :], ks_ref[page])
+        v8 = _unpack_kv_tile(v_ref[0, :, 0, :], vs_ref[page])
+    else:
+        k8 = k_ref[0, :, 0, :]                  # (bkv, d) int8
+        v8 = v_ref[0, :, 0, :]
 
     # stepped occupancy mask: row i sees vl - (sq-1-i) positions (sq=1:
     # the plain pos < valid_len cache-occupancy mask).  ki is the
@@ -167,7 +186,7 @@ def int_decode_attention_fused(q8, k8_cache, v8_cache, plan: IAttnPlan,
                                interpret: bool = True,
                                pages=None, page_size: int = 0,
                                wo_w8=None, wo_bias32=None, wo_b_vec=None,
-                               wo_spec=None):
+                               wo_spec=None, kv_shifts=None):
     """q8: (B, Sq, H, D) int8, Sq ≤ 8; valid_len: (B,) int32 live
     positions per slot.  Caches, either layout:
 
@@ -176,6 +195,13 @@ def int_decode_attention_fused(q8, k8_cache, v8_cache, plan: IAttnPlan,
         ``pages: int32 (B, max_pages)`` (logical block → physical page;
         unmapped entries = null page 0) and ``page_size``.  The logical
         length is ``max_pages · page_size``.
+
+    ``kv_shifts``: a ``(k_shift, v_shift)`` pair of int32
+    ``(num_pages,)`` per-page requant shifts switches the paged pools to
+    the **packed int4** layout ``(num_pages, page_size, Hkv, D // 2)`` —
+    two head-dim nibbles per byte, expanded and left-shifted in-register
+    (``kernels.int_attention_fused._unpack_kv_tile``); packed pages
+    never materialize as dense int8 in HBM.  Paged layout only.
 
     ``requant``: a :class:`RequantSpec` for the epilogue (default: the
     plan's per-tensor ``dn_out``); ``b_vec``: int32 per-channel
@@ -199,6 +225,10 @@ def int_decode_attention_fused(q8, k8_cache, v8_cache, plan: IAttnPlan,
     """
     b, sq, h, d = q8.shape
     paged = pages is not None
+    packed_kv = kv_shifts is not None
+    if packed_kv and not paged:
+        raise ValueError("kv_shifts (packed int4 KV) needs the paged "
+                         "cache layout")
     if paged:
         ps, hkv = k8_cache.shape[1], k8_cache.shape[2]
         assert page_size == ps, (page_size, ps)
@@ -207,11 +237,20 @@ def int_decode_attention_fused(q8, k8_cache, v8_cache, plan: IAttnPlan,
         L = pages.shape[1] * ps
     else:
         _, L, hkv, _ = k8_cache.shape
+    num_pages = k8_cache.shape[0] if paged else 0
+    k_shift = v_shift = None
+    if packed_kv:
+        assert k8_cache.shape[3] == d // 2, (k8_cache.shape, d)
+        k_shift = jnp.asarray(kv_shifts[0], jnp.int32)
+        v_shift = jnp.asarray(kv_shifts[1], jnp.int32)
+        assert k_shift.shape == v_shift.shape == (num_pages,), \
+            (k_shift.shape, v_shift.shape, num_pages)
     require_launch(check_launch(
         "int_decode_attention", b=b, sq=sq, h=h, hkv=hkv, d=d,
         L=None if paged else L, bkv=bkv,
         max_pages=pages.shape[1] if paged else 0,
-        page_size=page_size, out_bits=out_bits))
+        page_size=page_size, out_bits=out_bits, kv_pack=packed_kv,
+        num_pages=num_pages))
     group = h // hkv
     bkv = min(bkv, ps if paged else L)
     sub = ps // bkv if paged else 1     # KV sub-blocks per physical page
@@ -241,7 +280,8 @@ def int_decode_attention_fused(q8, k8_cache, v8_cache, plan: IAttnPlan,
     kernel = functools.partial(
         _decode_kernel, plan=plan, requant=requant, has_bvec=has_bvec,
         n_kv=n_kv, sq=sq, bkv=bkv, paged=paged, fold=fold, wo_spec=wo_spec,
-        wo_has_bias=wo_has_bias, wo_has_bvec=wo_has_bvec, n_heads=h)
+        wo_has_bias=wo_has_bias, wo_has_bvec=wo_has_bvec, n_heads=h,
+        packed_kv=packed_kv, sub=sub)
 
     def _kv_block(ki, vl):
         # clamp dead blocks to the slot's last live block: the pipeline
@@ -255,20 +295,22 @@ def int_decode_attention_fused(q8, k8_cache, v8_cache, plan: IAttnPlan,
     # the paged layout, where the KV map translates logical block →
     # physical (page, sub-block) through the prefetched table.
     if paged:
-        def q_map(bi, hi, ph, ki, vl, pt):
+        # ``*_`` absorbs the k_shift/v_shift scalar-prefetch refs under
+        # the packed int4 layout (read by the kernel body, not the maps)
+        def q_map(bi, hi, ph, ki, vl, pt, *_):
             return (bi, 0, hi, 0)
 
-        def kv_map(bi, hi, ph, ki, vl, pt):
+        def kv_map(bi, hi, ph, ki, vl, pt, *_):
             kc = _kv_block(ki, vl[bi])
             return (pt[bi, kc // sub], kc % sub, hi // group, 0)
 
-        def head_row_map(bi, hi, ph, ki, vl, pt):
+        def head_row_map(bi, hi, ph, ki, vl, pt, *_):
             return (hi, 0)
 
-        def one_row_map(bi, hi, ph, ki, vl, pt):
+        def one_row_map(bi, hi, ph, ki, vl, pt, *_):
             return (0, 0)
 
-        def out_map(bi, hi, ph, ki, vl, pt):
+        def out_map(bi, hi, ph, ki, vl, pt, *_):
             return (bi, 0, 0) if fold else (bi, 0, hi, 0)
     else:
         def q_map(bi, hi, ph, ki, vl):
@@ -286,7 +328,7 @@ def int_decode_attention_fused(q8, k8_cache, v8_cache, plan: IAttnPlan,
         def out_map(bi, hi, ph, ki, vl):
             return (bi, 0, 0) if fold else (bi, 0, hi, 0)
 
-    kv_blk = (1, bkv, 1, d)
+    kv_blk = (1, bkv, 1, d // 2 if packed_kv else d)
     in_specs = [
         pl.BlockSpec((1, sq, 1, d), q_map),
         pl.BlockSpec(kv_blk, kv_map),
@@ -321,7 +363,12 @@ def int_decode_attention_fused(q8, k8_cache, v8_cache, plan: IAttnPlan,
         out_specs = pl.BlockSpec((1, sq, 1, d), out_map)
         out_shape = jax.ShapeDtypeStruct((b, sq, h, d), out_dtype)
 
-    scalar_args = (valid_len, pages) if paged else (valid_len,)
+    if packed_kv:
+        scalar_args = (valid_len, pages, k_shift, v_shift)
+    elif paged:
+        scalar_args = (valid_len, pages)
+    else:
+        scalar_args = (valid_len,)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=len(scalar_args),
         grid=(b, h, 3, n_kv),

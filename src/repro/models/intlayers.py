@@ -26,6 +26,7 @@ from repro.distributed.sharding import shard
 from repro.models.common import ArchConfig
 from repro.ops import QuantLinearParams, RequantSpec
 from repro.ops import get_backend, resolve_ops
+from repro.ops.packed import pack_kv
 from repro.quant import plans as qplans
 
 
@@ -41,11 +42,14 @@ def int_linear(x8, qw, plan: qplans.LinearPlan, ops=None):
     qw = QuantLinearParams.of(qw)
     lead = x8.shape[:-1]
     k = x8.shape[-1]
-    n = qw.w8.shape[-1]
+    n = qw.n_dim
     x2 = x8.reshape(-1, k)
     spec = RequantSpec.for_linear(plan)
-    out = ops.int8_matmul(x2, qw.w8, spec, bias32=qw.bias32,
-                          b_vec=qw.b_mult)
+    if qw.is_packed:
+        out = ops.int8_matmul_packed(x2, qw, spec)
+    else:
+        out = ops.int8_matmul(x2, qw.w8, spec, bias32=qw.bias32,
+                              b_vec=qw.b_mult)
     out = out.reshape(*lead, n)
     if not spec.is_raw and plan.out_bits <= 8:
         out = out.astype(jnp.int8)
@@ -68,9 +72,15 @@ def _tp_wo_project(o8, qw, plan: qplans.LinearPlan, tp_axis: str,
     ops = resolve_ops(ops)
     qw = QuantLinearParams.of(qw)
     lead = o8.shape[:-1]
-    n = qw.w8.shape[-1]
+    n = qw.n_dim
     x2 = o8.reshape(-1, o8.shape[-1])
-    acc = ops.int8_matmul(x2, qw.w8, RequantSpec.raw())
+    if qw.is_packed:
+        # raw partial product only — bias must be added once, after the
+        # psum, so strip it from the packed epilogue operands
+        acc = ops.int8_matmul_packed(
+            x2, qw._replace(bias32=None, b_mult=None), RequantSpec.raw())
+    else:
+        acc = ops.int8_matmul(x2, qw.w8, RequantSpec.raw())
     acc = psum_int32(acc, tp_axis)
     if qw.bias32 is not None:
         acc = acc + qw.bias32[None, :]
@@ -263,6 +273,10 @@ def int_attn_decode(qp, x8, cache, pos, plans: qplans.AttnPlan,
                          "after psum (pass fold_wo=False under tp)")
     b, s, d = x8.shape
     paged = pages is not None
+    packed_kv = "k_shift" in cache
+    if packed_kv and not paged:
+        raise ValueError("int4 KV pages (k_shift/v_shift in the cache) "
+                         "need the paged layout")
     if paged:
         L = max_len or pages.shape[1] * page_size
     else:
@@ -286,8 +300,14 @@ def int_attn_decode(qp, x8, cache, pos, plans: qplans.AttnPlan,
             bidx = jnp.arange(b)
             page = pages[bidx, slot // page_size]
             off = slot % page_size
-            k_cache = cache["k8"].at[page, off].set(k8[:, 0])
-            v_cache = cache["v8"].at[page, off].set(v8[:, 0])
+            k_w, v_w = k8[:, 0], v8[:, 0]
+            if packed_kv:
+                # quantize + nibble-pack before the write: pool bytes
+                # always hold the packed representation (one
+                # quantization policy — repro.ops.packed.pack_kv)
+                k_w, v_w = pack_kv(k_w), pack_kv(v_w)
+            k_cache = cache["k8"].at[page, off].set(k_w)
+            v_cache = cache["v8"].at[page, off].set(v_w)
         else:
             bidx = jnp.arange(b)
             k_cache = cache["k8"].at[bidx, slot].set(k8[:, 0])
@@ -316,8 +336,11 @@ def int_attn_decode(qp, x8, cache, pos, plans: qplans.AttnPlan,
             # contents are never valid (repro.serving.kvcache)
             page = jnp.where(write_ok, page, 0)
             off = rpos_c % page_size
-            k_cache = cache["k8"].at[page, off].set(k8)
-            v_cache = cache["v8"].at[page, off].set(v8)
+            k_w, v_w = k8, v8
+            if packed_kv:
+                k_w, v_w = pack_kv(k_w), pack_kv(v_w)
+            k_cache = cache["k8"].at[page, off].set(k_w)
+            v_cache = cache["v8"].at[page, off].set(v_w)
         else:
             bidx = jnp.arange(b)[:, None]
             # pad rows scatter out of bounds and are explicitly
@@ -329,6 +352,8 @@ def int_attn_decode(qp, x8, cache, pos, plans: qplans.AttnPlan,
     kw = {}
     if paged:
         kw.update(pages=pages, page_size=page_size)
+    if packed_kv:
+        kw.update(kv_shifts=(cache["k_shift"], cache["v_shift"]))
     if fold_wo:
         out32 = ops.int_decode_attention(
             q8, k_cache, v_cache, plans.attn, valid,
@@ -393,16 +418,21 @@ def int_attn_prefill_chunk(qp, x8, cache, base_pos, plans: qplans.AttnPlan,
         q8 = apply_int_rope(q8, positions, rope_tab)
         k8 = apply_int_rope(k8, positions, rope_tab)
     requant = RequantSpec.per_tensor(plans.attn.dn_out)
+    kw = {}
+    if "k_shift" in cache:
+        # int4 KV pools: the dispatch layer quantizes + packs the
+        # chunk's K/V before the scatter (one policy for every backend)
+        kw.update(kv_shifts=(cache["k_shift"], cache["v_shift"]))
     if fold_wo:
         out32, k_pool, v_pool = ops.int_paged_prefill(
             q8, k8, v8, cache["k8"], cache["v8"], plans.attn, base_pos,
             pages, page_size, requant=requant,
             wo=QuantLinearParams.of(qp["wo"]),
-            wo_spec=RequantSpec.for_linear(plans.out))
+            wo_spec=RequantSpec.for_linear(plans.out), **kw)
     else:
         o8, k_pool, v_pool = ops.int_paged_prefill(
             q8, k8, v8, cache["k8"], cache["v8"], plans.attn, base_pos,
-            pages, page_size, requant=requant)
+            pages, page_size, requant=requant, **kw)
         o8 = o8.astype(jnp.int8).reshape(b, c, cfg.n_heads * cfg.hd)
         if tp_axis is not None:
             out32 = _tp_wo_project(o8, qp["wo"], plans.out, tp_axis, ops)

@@ -168,20 +168,35 @@ def init_decode_cache(cfg: ArchConfig, batch: int, cache_len: int,
     per-lane contiguous buffers; every other cache kind (Mamba state,
     cross-attention memory) stays lane-indexed.  Pool memory is
     ``num_pages × page_size`` tokens per sublayer — O(provisioned
-    pages), not O(batch × cache_len)."""
+    pages), not O(batch × cache_len).  With ``layout.kv_dtype ==
+    "int4"`` the pools pack two head-dim nibbles per byte (last dim
+    ``hd // 2``) and carry per-page requant shift arrays ``k_shift`` /
+    ``v_shift`` ``(ng, num_pages)`` int32 (``repro.ops.packed.KV_SHIFT``
+    everywhere — the static shift the write-side quantizer uses)."""
     ops = resolve_ops(ops, cfg)
     gl, ng, kinds = layer_group_spec(cfg)
     L = min(cache_len, cfg.window) if cfg.window > 0 else cache_len
+    kv_packed = layout is not None and layout.kv_dtype == "int4"
+    if kv_packed and cfg.hd % 2:
+        raise ValueError("int4 KV pages pair head-dim nibbles: hd must "
+                         f"be even, got {cfg.hd}")
     caches = []
     for j, (mix, ff, has_cross) in enumerate(kinds):
         c: Dict[str, Any] = {}
         if mix == "attn":
-            kv_shape = (ng, batch, L, cfg.n_kv_heads, cfg.hd) \
-                if layout is None else \
-                (ng, layout.num_pages, layout.page_size,
-                 cfg.n_kv_heads, cfg.hd)
+            if layout is None:
+                kv_shape = (ng, batch, L, cfg.n_kv_heads, cfg.hd)
+            else:
+                hd = cfg.hd // 2 if kv_packed else cfg.hd
+                kv_shape = (ng, layout.num_pages, layout.page_size,
+                            cfg.n_kv_heads, hd)
             c["k8"] = jnp.zeros(kv_shape, jnp.int8)
             c["v8"] = jnp.zeros_like(c["k8"])
+            if kv_packed:
+                from repro.ops.packed import KV_SHIFT
+                c["k_shift"] = jnp.full((ng, layout.num_pages),
+                                        KV_SHIFT, jnp.int32)
+                c["v_shift"] = jnp.full_like(c["k_shift"], KV_SHIFT)
         elif mix == "ssm":
             st = il.init_int_mamba_state(cfg, batch)
             c["h"] = jnp.broadcast_to(st.h, (ng,) + st.h.shape)

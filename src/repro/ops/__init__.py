@@ -28,17 +28,18 @@ from repro.ops.registry import (Backend, OpSet, available_backends,
                                 unregister_backend, use_backend,
                                 DEFAULT_BACKEND, ENV_VAR, OP_NAMES,
                                 REQUIRED_OPS)
-from repro.ops.spec import (PER_CHANNEL, PER_TENSOR, RAW,
+from repro.ops.spec import (PER_CHANNEL, PER_TENSOR, RAW, PackMeta,
                             QuantLinearParams, RequantSpec)
 
 __all__ = [
-    "Backend", "OpSet", "QuantLinearParams", "RequantSpec",
+    "Backend", "OpSet", "PackMeta", "QuantLinearParams", "RequantSpec",
     "available_backends", "current_opset", "get_backend",
     "register_backend", "resolve_ops", "unregister_backend",
     "use_backend", "DEFAULT_BACKEND", "ENV_VAR", "OP_NAMES",
     "REQUIRED_OPS", "PER_CHANNEL", "PER_TENSOR", "RAW",
-    "int8_matmul", "int_softmax", "int_gelu", "int_layernorm",
-    "int_attention", "int_decode_attention", "int_paged_prefill",
+    "int8_matmul", "int8_matmul_packed", "int_softmax", "int_gelu",
+    "int_layernorm", "int_attention", "int_decode_attention",
+    "int_paged_prefill",
 ]
 
 
@@ -76,6 +77,10 @@ _register_builtin_backends()
 def int8_matmul(x8, w8, spec, *, bias32=None, b_vec=None, ops=None, **opts):
     return resolve_ops(ops).int8_matmul(x8, w8, spec, bias32=bias32,
                                         b_vec=b_vec, **opts)
+
+
+def int8_matmul_packed(x8, qw, spec, *, ops=None, **opts):
+    return resolve_ops(ops).int8_matmul_packed(x8, qw, spec, **opts)
 
 
 def int_softmax(scores, plan, *, ops=None, **opts):

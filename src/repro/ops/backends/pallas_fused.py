@@ -53,6 +53,8 @@ class PallasFusedBackend(PallasBackend):
     decode_wo_fold = True     # folds the o-projection into the launch
     paged_prefill = True      # chunked prefill straight over the page table
     prefill_wo_fold = True    # ... with the o-projection folded in too
+    packed_matmul = True      # int4/msr4 weights unpacked inside the launch
+    packed_kv = True          # int4 KV pages dequantized inside the launch
     tp_serving = True         # kernels launch per-shard under shard_map
     #   (the wrapper's require_launch then validates the LOCAL h/tp,
     #   hkv/tp shapes; analysis.contracts.check_tp_launch is its
@@ -62,6 +64,74 @@ class PallasFusedBackend(PallasBackend):
                  blocks=None, min_block: int = 16):
         super().__init__(name, interpret=interpret, blocks=blocks)
         self.min_block = min_block
+
+    # --------------------------------------------------- packed matmul --
+
+    def int8_matmul_packed(self, x8, qw, spec, **opts):
+        """Matmul over int4/msr4 packed weights, nibbles expanded
+        in-register — the dense int8 weight matrix never exists in HBM.
+
+        * plain **int4** (and msr4 with zero outliers): one fused launch
+          of the packed matmul kernel carrying the full typed epilogue;
+        * **msr4** with outlier lanes: a *raw* packed launch accumulates
+          the nibble contraction, the outlier lanes apply as an exact
+          sparse correction (`x @ scatter(out_val)`), and integer
+          distributivity makes ``acc_nib + corr == x @ w8`` exactly —
+          the identical int32 accumulator then takes the identical
+          dyadic epilogue, so the result is bit-exact vs the unpacked
+          reference for every RequantSpec form.
+        """
+        from repro.kernels.int8_matmul import int8_matmul_pallas
+        from repro.ops.packed import msr4_correction
+        from repro.core.dyadic import (apply_dyadic,
+                                       apply_dyadic_perchannel,
+                                       clip_to_bits)
+        import jax.numpy as jnp
+        opts = self._opts("int8_matmul", opts)
+        qw = _spec.QuantLinearParams.of(qw)
+        meta = qw.pack_meta
+        m, k = x8.shape
+        n = qw.n_dim
+        bm = _fit_block(opts.pop("bm", 128), m)
+        bn = _fit_block(opts.pop("bn", 128), n)
+        # nibble pairing needs an even K-block: fit on K/2 pairs, double
+        bk = 2 * _fit_block(max(opts.pop("bk", 512) // 2, 1), k // 2)
+        msr = meta.scheme == "msr4" and meta.n_outliers > 0
+        if not msr:
+            # pure-nibble weights: one launch, full fused epilogue
+            if spec.is_raw:
+                return int8_matmul_pallas(
+                    x8, qw.w_packed, qw.bias32, out_bits=32,
+                    out_dtype=jnp.int32, bm=bm, bn=bn, bk=bk,
+                    packed=True, interpret=self._interp(), **opts)
+            if spec.kind == _spec.PER_TENSOR:
+                return int8_matmul_pallas(
+                    x8, qw.w_packed, qw.bias32, dn=spec.dn,
+                    out_bits=spec.out_bits, out_dtype=spec.out_dtype,
+                    bm=bm, bn=bn, bk=bk, packed=True,
+                    interpret=self._interp(), **opts)
+            return int8_matmul_pallas(
+                x8, qw.w_packed, qw.bias32, b_vec=qw.b_mult,
+                c=spec.c, pre=spec.pre, out_bits=spec.out_bits,
+                out_dtype=spec.out_dtype, bm=bm, bn=bn, bk=bk,
+                packed=True, interpret=self._interp(), **opts)
+        # msr4: raw nibble launch + exact sparse outlier correction,
+        # then the same staged dyadic epilogue the kernel would fuse
+        acc = int8_matmul_pallas(
+            x8, qw.w_packed, None, out_bits=32, out_dtype=jnp.int32,
+            bm=bm, bn=bn, bk=bk, packed=True,
+            interpret=self._interp(), **opts)
+        acc = acc + msr4_correction(x8.astype(jnp.int32), qw)
+        if qw.bias32 is not None:
+            acc = acc + qw.bias32.astype(jnp.int32)[None, :]
+        if spec.is_raw:
+            return acc
+        if spec.kind == _spec.PER_TENSOR:
+            out = apply_dyadic(acc, spec.dn)
+        else:
+            out = apply_dyadic_perchannel(acc, qw.b_mult, spec.c,
+                                          spec.pre)
+        return clip_to_bits(out, spec.out_bits).astype(spec.out_dtype)
 
     # ------------------------------------------------------- attention --
 
@@ -88,7 +158,7 @@ class PallasFusedBackend(PallasBackend):
     def int_decode_attention(self, q8, k8_cache, v8_cache, plan, valid_len,
                              out_bits: int = 8, requant=None, b_vec=None,
                              pages=None, page_size: int = 0, wo=None,
-                             wo_spec=None, **opts):
+                             wo_spec=None, kv_shifts=None, **opts):
         from repro.kernels.int_decode_attention import \
             int_decode_attention_fused
         opts = self._opts("int_decode_attention", opts)
@@ -114,8 +184,13 @@ class PallasFusedBackend(PallasBackend):
                 raise ValueError("wo folding needs an int8 attention "
                                  f"epilogue, got {requant}")
         if not can:
-            # exact fallback: gather pages (if paged) + full-matrix
+            # exact fallback: dequantize packed pools (declared
+            # reference) + gather pages (if paged) + full-matrix
             # oracle + unfolded o-projection
+            if kv_shifts is not None:
+                from repro.ops.packed import unpack_kv_pool
+                k8_cache = unpack_kv_pool(k8_cache, kv_shifts[0])
+                v8_cache = unpack_kv_pool(v8_cache, kv_shifts[1])
             if paged:
                 k8_cache = _gather(k8_cache, pages, page_size)
                 v8_cache = _gather(v8_cache, pages, page_size)
@@ -129,6 +204,8 @@ class PallasFusedBackend(PallasBackend):
         kw = {}
         if paged:
             kw.update(pages=pages, page_size=page_size)
+        if kv_shifts is not None:
+            kw.update(kv_shifts=kv_shifts)
         if wo is not None:
             kw.update(wo_w8=wo.w8, wo_bias32=wo.bias32, wo_b_vec=wo.b_mult,
                       wo_spec=wo_spec)
@@ -143,13 +220,18 @@ class PallasFusedBackend(PallasBackend):
     def int_paged_prefill(self, q8, k8_new, v8_new, k_pool, v_pool, plan,
                           base_pos, pages, page_size: int,
                           out_bits: int = 8, requant=None, b_vec=None,
-                          wo=None, wo_spec=None, **opts):
+                          wo=None, wo_spec=None, kv_shifts=None, **opts):
         """Chunked paged prefill: scatter the chunk's K/V through the
         page table (``repro.ops.paged.scatter_chunk`` — shared with the
         oracle, so every path writes identical pool bytes), then run the
         fused prefill attention kernel reading K/V through the
         scalar-prefetched table (``kernels.int_attention_fused.
-        int_paged_prefill_fused``).  Untileable shapes gather + take the
+        int_paged_prefill_fused``).  With ``kv_shifts`` (int4 KV pages)
+        the chunk quantizes + nibble-packs through
+        ``repro.ops.packed.pack_kv`` before the scatter — one
+        quantization policy shared with the OpSet lowering, so pool
+        bytes stay backend-independent — and the fused kernel
+        dequantizes in-register.  Untileable shapes gather + take the
         stepped-mask decode oracle with identical numerics."""
         from repro.kernels.int_attention_fused import \
             int_paged_prefill_fused
@@ -168,16 +250,28 @@ class PallasFusedBackend(PallasBackend):
             if requant.is_raw or requant.out_bits > 8:
                 raise ValueError("wo folding needs an int8 attention "
                                  f"epilogue, got {requant}")
+        if kv_shifts is not None:
+            from repro.ops.packed import pack_kv
+            k8_new = pack_kv(k8_new)
+            v8_new = pack_kv(v8_new)
         k_pool = scatter_chunk(k_pool, k8_new, base_pos, pages, page_size)
         v_pool = scatter_chunk(v_pool, v8_new, base_pos, pages, page_size)
         pos_end = jnp.asarray(base_pos, jnp.int32) + c
         bq = _fit_block(opts.pop("bq", 128), c)
         bkv = _fit_block(opts.pop("bkv", 128), page_size)
         if not self._can_tile_prefill(L, d, bq, bkv):
-            # exact fallback: gather the (post-scatter) pools + the
-            # stepped-mask oracle + unfolded o-projection
-            kc = _gather(k_pool, pages, page_size)
-            vc = _gather(v_pool, pages, page_size)
+            # exact fallback: dequantize the (post-scatter) packed pools
+            # (declared reference), gather, then the stepped-mask oracle
+            # + unfolded o-projection
+            if kv_shifts is not None:
+                from repro.ops.packed import unpack_kv_pool
+                kc = _gather(unpack_kv_pool(k_pool, kv_shifts[0]),
+                             pages, page_size)
+                vc = _gather(unpack_kv_pool(v_pool, kv_shifts[1]),
+                             pages, page_size)
+            else:
+                kc = _gather(k_pool, pages, page_size)
+                vc = _gather(v_pool, pages, page_size)
             o = _ref.ref_int_decode_attention(q8, kc, vc, plan, pos_end,
                                               requant=requant, b_vec=b_vec)
             if wo is not None:
@@ -185,6 +279,8 @@ class PallasFusedBackend(PallasBackend):
                                       wo_spec)
             return o, k_pool, v_pool
         kw = {}
+        if kv_shifts is not None:
+            kw.update(kv_shifts=kv_shifts)
         if wo is not None:
             kw.update(wo_w8=wo.w8, wo_bias32=wo.bias32, wo_b_vec=wo.b_mult,
                       wo_spec=wo_spec)

@@ -1,0 +1,149 @@
+"""Runtime pack/unpack primitives for the sub-8-bit storage tier.
+
+Two packed families share one byte layout (two's-complement nibbles,
+value ``2i`` in the low nibble of byte ``i``, ``2i + 1`` in the high):
+
+  * **packed weights** (``QuantLinearParams.w_packed``) — nibbles along
+    the contraction axis (``-2``), plus optional msr4 outlier lanes
+    (``out_idx`` / ``out_val``) that make the reconstruction exact for
+    every int8 value;
+  * **packed KV pages** — nibbles along the head dim (``-1``) with a
+    per-page requant shift: a pool element stores
+    ``clip(rshift_round(v, shift), -7, 7)`` and dequantizes to
+    ``q4 << shift`` (≤ 112, still int8-range).
+
+All nibble arithmetic is done in int32 with explicit sign extension —
+``((x & 15) ^ 8) - 8`` — because jnp's int8 shift behaviour is not part
+of any contract we want to rely on.  These helpers are the *declared
+dequant reference* the fused in-kernel unpack paths are bit-exact
+against (docs/KERNELS.md); lint rule RR004 keeps calls to them out of
+``models/`` and ``serving/``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# static per-page requant shift of the int4 KV tier: pages store
+# clip(rshift_round(v, KV_SHIFT), -7, 7); dequant is q4 << shift (≤ 112)
+KV_SHIFT = 4
+
+__all__ = [
+    "KV_SHIFT",
+    "nibble_pack",
+    "nibble_unpack",
+    "unpack_weights",
+    "msr4_correction",
+    "quantize_kv",
+    "pack_kv",
+    "unpack_kv_pool",
+]
+
+
+def _rshift_round(x, s):
+    """Round-half-up arithmetic right shift (the requant unit's primitive)."""
+    if s == 0:
+        return x
+    return (x + (1 << (s - 1))) >> s
+
+
+def nibble_pack(a, axis: int = -2):
+    """Pack int4-range values pairwise into bytes along ``axis``.
+
+    ``a`` must have an even extent along ``axis`` and values in
+    ``[-8, 7]`` (callers guarantee ``[-7, 7]``); returns int8 of half
+    the extent, low nibble = even index, high nibble = odd index.
+    """
+    a = jnp.asarray(a).astype(jnp.int32)
+    ax = axis % a.ndim
+    lo_sl = [slice(None)] * a.ndim
+    hi_sl = [slice(None)] * a.ndim
+    lo_sl[ax] = slice(0, None, 2)
+    hi_sl[ax] = slice(1, None, 2)
+    lo, hi = a[tuple(lo_sl)], a[tuple(hi_sl)]
+    byte = (lo & 15) | ((hi & 15) << 4)
+    return (((byte & 255) ^ 128) - 128).astype(jnp.int8)
+
+
+def nibble_unpack(p, axis: int = -2):
+    """Inverse of :func:`nibble_pack`: int8 bytes → int32 nibble values."""
+    p = jnp.asarray(p)
+    ax = axis % p.ndim
+    p32 = p.astype(jnp.int32)
+    lo = ((p32 & 15) ^ 8) - 8
+    hi = (((p32 >> 4) & 15) ^ 8) - 8
+    pair = jnp.stack([lo, hi], axis=ax + 1)
+    shape = p.shape[:ax] + (2 * p.shape[ax],) + p.shape[ax + 1:]
+    return pair.reshape(shape)
+
+
+def unpack_weights(qw):
+    """Reconstruct dense int8 weights from a packed ``QuantLinearParams``.
+
+    This is the declared reference lowering: int4 is the plain nibble
+    expansion; msr4 additionally scatter-adds the outlier deltas back
+    into their within-group rows.  Exact for every int8 weight value.
+    Supports leading batch dims (stacked layer-group weights).
+    """
+    meta = qw.pack_meta
+    w = nibble_unpack(qw.w_packed, axis=-2)          # (..., K, N) int32
+    if meta.scheme == "msr4" and meta.n_outliers:
+        *lead, k, n = w.shape
+        g = meta.group
+        ngrp = k // g
+        wg = w.reshape(*lead, ngrp, g, n)
+        idx = qw.out_idx.astype(jnp.int32)           # (..., ngrp, n_out, N)
+        val = qw.out_val.astype(jnp.int32)
+        lanes = jnp.arange(g, dtype=jnp.int32)
+        # one-hot scatter-add: lane rows are distinct per column, filler
+        # lanes carry val == 0, so the sum reconstructs exactly
+        hit = (idx[..., None, :, :] == lanes[:, None, None]).astype(jnp.int32)
+        wg = wg + jnp.sum(hit * val[..., None, :, :], axis=-2)
+        w = wg.reshape(*lead, k, n)
+    return w.astype(jnp.int8)
+
+
+def msr4_correction(x32, qw):
+    """Outlier-lane contribution ``x @ scatter(out_val)`` as (M, N) int32.
+
+    With ``acc_nib = x @ unpack(nibbles)``, integer distributivity gives
+    ``acc_nib + msr4_correction(x, qw) == x @ unpack_weights(qw)``
+    exactly — the identity the fused msr4 matmul path relies on.
+    ``x32`` is the (M, K) activation in int32; ``qw`` must be 2-D packed.
+    """
+    meta = qw.pack_meta
+    if meta.scheme != "msr4" or not meta.n_outliers:
+        return jnp.zeros((x32.shape[0], qw.n_dim), jnp.int32)
+    g = meta.group
+    ngrp = meta.k // g
+    idx = qw.out_idx.astype(jnp.int32)               # (ngrp, n_out, N)
+    val = qw.out_val.astype(jnp.int32)
+    gidx = idx + (jnp.arange(ngrp, dtype=jnp.int32) * g)[:, None, None]
+    xg = x32[:, gidx]                                # (M, ngrp, n_out, N)
+    return jnp.sum(xg * val[None], axis=(1, 2))
+
+
+# ------------------------------------------------------------- KV pages --
+
+
+def quantize_kv(v8, shift: int = KV_SHIFT):
+    """int8 KV value → int4 code: ``clip(rshift_round(v, shift), -7, 7)``."""
+    v = jnp.asarray(v8).astype(jnp.int32)
+    return jnp.clip(_rshift_round(v, shift), -7, 7)
+
+
+def pack_kv(v8, shift: int = KV_SHIFT):
+    """Quantize + nibble-pack int8 K/V along the head dim (``-1``)."""
+    return nibble_pack(quantize_kv(v8, shift), axis=-1)
+
+
+def unpack_kv_pool(pool, shift_per_page):
+    """Dequantize a packed KV page pool back to an int8 pool.
+
+    ``pool`` is ``(num_pages, page_size, Hkv, d // 2)`` int8 nibbles;
+    ``shift_per_page`` is ``(num_pages,)`` int32.  Returns the int8
+    ``(num_pages, page_size, Hkv, d)`` pool ``q4 << shift`` — the
+    declared reference the in-kernel unpack is bit-exact against.
+    """
+    q4 = nibble_unpack(pool, axis=-1)
+    shift = shift_per_page.astype(jnp.int32)
+    return (q4 << shift[:, None, None, None]).astype(jnp.int8)

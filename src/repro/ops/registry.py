@@ -33,7 +33,7 @@ REQUIRED_OPS = ("int8_matmul", "int_softmax", "int_gelu", "int_layernorm",
 # matching flag implements them natively, everyone else is served by an
 # exact lowering in OpSet (so OP_NAMES is what dispatch/overrides/
 # describe() route on, REQUIRED_OPS is what the protocol demands)
-OP_NAMES = REQUIRED_OPS + ("int_paged_prefill",)
+OP_NAMES = REQUIRED_OPS + ("int_paged_prefill", "int8_matmul_packed")
 
 
 @runtime_checkable
@@ -84,6 +84,23 @@ class Backend(Protocol):
       * ``prefill_wo_fold`` — the backend folds the o-projection into
         the prefill launch's epilogue, mirroring ``decode_wo_fold``.
         Without it, decode-then-``int8_matmul`` (bit-identical).
+    The sub-8-bit storage tier adds two more negotiated capabilities:
+
+      * ``packed_matmul`` — the backend implements
+        ``int8_matmul_packed`` natively (nibbles unpacked *inside* the
+        matmul launch, msr4 outlier lanes applied as an exact sparse
+        correction).  Without the flag the dispatch layer unpacks to
+        dense int8 first (``repro.ops.packed.unpack_weights`` — the
+        declared reference) and calls the backend's ``int8_matmul``:
+        bit-identical either way.
+      * ``packed_kv`` — the backend's paged decode/prefill launches
+        consume int4-packed KV page pools directly (``kv_shifts=`` a
+        pair of per-page int32 shift arrays; the kernel dequantizes
+        ``q4 << shift`` in-register).  Without the flag the dispatch
+        layer dequantizes the pools to int8
+        (``repro.ops.packed.unpack_kv_pool``) and proceeds on the
+        plain paged path — the declared reference numerics.
+
       * ``tp_serving`` — the backend's ops trace inside a ``shard_map``
         body, so the serving engine may head-shard its decode/prefill
         launches tensor-parallel over a device mesh
@@ -248,24 +265,81 @@ class OpSet:
             q8, k8, v8, plan, causal=causal, window=window,
             out_bits=out_bits, **opts)
 
+    def int8_matmul_packed(self, x8, qw, spec, **opts):
+        """Matmul against packed (int4/msr4) weights, with negotiation.
+
+        ``qw`` is a packed :class:`~repro.ops.spec.QuantLinearParams`
+        (``w_packed`` nibbles + optional msr4 outlier lanes); its
+        ``bias32``/``b_mult`` feed the epilogue exactly as on the dense
+        path.  Backends advertising ``packed_matmul`` unpack inside the
+        launch; for the rest this method lowers exactly — dense
+        reconstruction via ``repro.ops.packed.unpack_weights`` (the
+        declared reference) followed by the backend's own
+        ``int8_matmul`` — so callers get identical integers from every
+        backend.  A dense ``qw`` falls through to plain ``int8_matmul``.
+        """
+        from repro.ops.spec import QuantLinearParams
+        qw = QuantLinearParams.of(qw)
+        if not qw.is_packed:
+            return self.int8_matmul(x8, qw.w8, spec, bias32=qw.bias32,
+                                    b_vec=qw.b_mult, **opts)
+        be = self.backend_for("int8_matmul_packed")
+        if getattr(be, "packed_matmul", False):
+            return be.int8_matmul_packed(x8, qw, spec, **opts)
+        from repro.ops.packed import unpack_weights
+        return be.int8_matmul(x8, unpack_weights(qw), spec,
+                              bias32=qw.bias32, b_vec=qw.b_mult, **opts)
+
+    def _compose_wo(self, be, o8, wo, wo_spec):
+        """Exact unfolded wo composition: decode output → o-projection.
+
+        Packed wo never folds into an attention launch — it routes
+        through :meth:`int8_matmul_packed` (same negotiated numerics).
+        """
+        import jax.numpy as jnp
+        b, sq = o8.shape[0], o8.shape[1]
+        x8 = o8.astype(jnp.int8).reshape(b * sq, -1)
+        if wo.is_packed:
+            acc = self.int8_matmul_packed(x8, wo, wo_spec)
+        else:
+            acc = be.int8_matmul(x8, wo.w8, wo_spec, bias32=wo.bias32,
+                                 b_vec=wo.b_mult)
+        if not wo_spec.is_raw and wo_spec.out_bits <= 8:
+            acc = acc.astype(jnp.int8)     # match the folded kernel's dtype
+        return acc.reshape(b, sq, -1)
+
     def int_decode_attention(self, q8, k8_cache, v8_cache, plan, valid_len,
                              out_bits: int = 8, pages=None,
                              page_size: int = 0, wo=None, wo_spec=None,
-                             **opts):
+                             kv_shifts=None, **opts):
         """Decode attention with capability negotiation.
 
         ``pages``/``page_size`` select the paged KV layout (k8/v8 are
         physical page pools); ``wo``/``wo_spec`` ask for the folded
-        output projection.  Backends advertising ``paged_decode`` /
-        ``decode_wo_fold`` get the operands verbatim; for the rest this
-        method lowers them exactly — gather-into-contiguous for pages,
-        decode-then-``int8_matmul`` for the fold — so callers get
-        identical integers from every backend.
+        output projection; ``kv_shifts`` marks the pools as int4-packed
+        (nibbles along the head dim + per-page requant shifts — the
+        ``kv_dtype="int4"`` cache tier).  Backends advertising
+        ``paged_decode`` / ``decode_wo_fold`` / ``packed_kv`` get the
+        operands verbatim; for the rest this method lowers them exactly
+        — gather-into-contiguous for pages, decode-then-``int8_matmul``
+        for the fold, pool dequantization for packed KV — so callers
+        get identical integers from every backend.
         """
         be = self.backend_for("int_decode_attention")
         kw = {}
+        if kv_shifts is not None and pages is None:
+            raise ValueError("int4 KV (kv_shifts=) requires the paged "
+                             "layout")
         if pages is not None:
-            if getattr(be, "paged_decode", False):
+            paged_native = getattr(be, "paged_decode", False)
+            if kv_shifts is not None:
+                if paged_native and getattr(be, "packed_kv", False):
+                    kw.update(kv_shifts=kv_shifts)
+                else:
+                    from repro.ops.packed import unpack_kv_pool
+                    k8_cache = unpack_kv_pool(k8_cache, kv_shifts[0])
+                    v8_cache = unpack_kv_pool(v8_cache, kv_shifts[1])
+            if paged_native:
                 kw.update(pages=pages, page_size=page_size)
             else:
                 from repro.ops.paged import gather_pages
@@ -276,28 +350,21 @@ class OpSet:
                                            valid_len, out_bits=out_bits,
                                            **kw, **opts)
         wo = _validate_wo(wo, wo_spec, opts.get("requant"), out_bits)
-        if getattr(be, "decode_wo_fold", False):
+        if getattr(be, "decode_wo_fold", False) and not wo.is_packed:
             return be.int_decode_attention(q8, k8_cache, v8_cache, plan,
                                            valid_len, out_bits=out_bits,
                                            wo=wo, wo_spec=wo_spec,
                                            **kw, **opts)
         # exact unfolded composition through the backend's own matmul
-        import jax.numpy as jnp
         o8 = be.int_decode_attention(q8, k8_cache, v8_cache, plan,
                                      valid_len, out_bits=out_bits,
                                      **kw, **opts)
-        b, sq = o8.shape[0], o8.shape[1]
-        x8 = o8.astype(jnp.int8).reshape(b * sq, -1)
-        acc = be.int8_matmul(x8, wo.w8, wo_spec, bias32=wo.bias32,
-                             b_vec=wo.b_mult)
-        if not wo_spec.is_raw and wo_spec.out_bits <= 8:
-            acc = acc.astype(jnp.int8)     # match the folded kernel's dtype
-        return acc.reshape(b, sq, -1)
+        return self._compose_wo(be, o8, wo, wo_spec)
 
     def int_paged_prefill(self, q8, k8_new, v8_new, k_pool, v_pool, plan,
                           base_pos, pages, page_size: int,
                           out_bits: int = 8, wo=None, wo_spec=None,
-                          **opts):
+                          kv_shifts=None, **opts):
         """Chunked paged prefill with capability negotiation.
 
         Scatter the chunk's new K/V (``k8_new``/``v8_new``: ``(B, C,
@@ -316,13 +383,26 @@ class OpSet:
         (which also negotiates the wo fold) — so callers get identical
         integers from every backend.  Oracle:
         ``kernels.ref.ref_int_paged_prefill``.
+
+        ``kv_shifts`` marks the pools as int4-packed (kv_dtype="int4"):
+        the chunk's K/V are quantized + nibble-packed before the
+        scatter (``repro.ops.packed.pack_kv`` — one quantization policy
+        for every path, so pool bytes are backend-independent), and a
+        backend without ``packed_kv`` is served by dequantizing the
+        updated pools and running the plain lowering.
         """
         be = self.backend_for("int_paged_prefill")
         if wo is not None:
             wo = _validate_wo(wo, wo_spec, opts.get("requant"), out_bits)
-        if getattr(be, "paged_prefill", False):
+        packed_kv_native = (kv_shifts is not None
+                            and getattr(be, "packed_kv", False))
+        if getattr(be, "paged_prefill", False) \
+                and (kv_shifts is None or packed_kv_native):
             kw = {}
-            if wo is not None and getattr(be, "prefill_wo_fold", False):
+            if kv_shifts is not None:
+                kw.update(kv_shifts=kv_shifts)
+            if wo is not None and getattr(be, "prefill_wo_fold", False) \
+                    and not wo.is_packed:
                 kw.update(wo=wo, wo_spec=wo_spec)
                 wo = None
             o, k_pool, v_pool = be.int_paged_prefill(
@@ -332,21 +412,27 @@ class OpSet:
                 return o, k_pool, v_pool
             # fold requested but the backend only does paged prefill:
             # exact unfolded composition through its own matmul
-            import jax.numpy as jnp
-            b, c = o.shape[0], o.shape[1]
-            x8 = o.astype(jnp.int8).reshape(b * c, -1)
-            acc = be.int8_matmul(x8, wo.w8, wo_spec, bias32=wo.bias32,
-                                 b_vec=wo.b_mult)
-            if not wo_spec.is_raw and wo_spec.out_bits <= 8:
-                acc = acc.astype(jnp.int8)
-            return acc.reshape(b, c, -1), k_pool, v_pool
+            return self._compose_wo(be, o, wo, wo_spec), k_pool, v_pool
         from repro.ops.paged import gather_pages, scatter_chunk
         import jax.numpy as jnp
         c = q8.shape[1]
-        k_pool = scatter_chunk(k_pool, k8_new, base_pos, pages, page_size)
-        v_pool = scatter_chunk(v_pool, v8_new, base_pos, pages, page_size)
-        kc = gather_pages(k_pool, pages, page_size)
-        vc = gather_pages(v_pool, pages, page_size)
+        if kv_shifts is not None:
+            from repro.ops.packed import pack_kv, unpack_kv_pool
+            k_pool = scatter_chunk(k_pool, pack_kv(k8_new), base_pos,
+                                   pages, page_size)
+            v_pool = scatter_chunk(v_pool, pack_kv(v8_new), base_pos,
+                                   pages, page_size)
+            kc = gather_pages(unpack_kv_pool(k_pool, kv_shifts[0]),
+                              pages, page_size)
+            vc = gather_pages(unpack_kv_pool(v_pool, kv_shifts[1]),
+                              pages, page_size)
+        else:
+            k_pool = scatter_chunk(k_pool, k8_new, base_pos, pages,
+                                   page_size)
+            v_pool = scatter_chunk(v_pool, v8_new, base_pos, pages,
+                                   page_size)
+            kc = gather_pages(k_pool, pages, page_size)
+            vc = gather_pages(v_pool, pages, page_size)
         vl = jnp.asarray(base_pos, jnp.int32) + c
         o = self.int_decode_attention(q8, kc, vc, plan, vl,
                                       out_bits=out_bits, wo=wo,

@@ -24,6 +24,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, NamedTuple, Optional
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.dyadic import Dyadic
@@ -117,18 +118,86 @@ class RequantSpec:
         return jnp.int8 if self.out_bits <= 8 else jnp.int32
 
 
+PACK_SCHEMES = ("int4", "msr4")
+
+
+@dataclasses.dataclass(frozen=True)
+class PackMeta:
+    """Static description of a packed weight tensor (compression tier).
+
+    ``scheme``     — ``"int4"`` (plain two-nibbles-per-byte, weights must
+                     already fit [-7, 7]) or ``"msr4"`` (4-bit
+                     most-significant-run nibbles plus per-group
+                     outlier-compensation lanes; lossless for all int8);
+    ``group``      — K-group size of the msr4 outlier lanes (divides k);
+    ``n_outliers`` — static outlier-lane count per (group, out-channel)
+                     column (0 for plain int4);
+    ``k``          — the unpacked contraction length (``w_packed`` stores
+                     ``k // 2`` bytes along that axis).
+
+    Registered as an aux-data-only pytree node: it rides the treedef, so
+    it stays *static* under ``jit`` / ``lax.scan`` and contributes no
+    array leaves.
+    """
+
+    scheme: str
+    group: int
+    n_outliers: int
+    k: int
+
+    def __post_init__(self):
+        if self.scheme not in PACK_SCHEMES:
+            raise ValueError(f"pack scheme must be one of {PACK_SCHEMES}, "
+                             f"got {self.scheme!r}")
+        if self.k % 2:
+            raise ValueError(f"packed k must be even, got {self.k}")
+        if self.scheme == "msr4":
+            if self.group <= 0 or self.k % self.group:
+                raise ValueError(f"msr4 group {self.group} must divide "
+                                 f"k={self.k}")
+            if self.n_outliers < 0:
+                raise ValueError("n_outliers must be >= 0")
+        elif self.n_outliers:
+            raise ValueError("plain int4 packing carries no outlier lanes")
+
+
+jax.tree_util.register_pytree_node(
+    PackMeta, lambda m: ((), m), lambda m, _: m)
+
+
 class QuantLinearParams(NamedTuple):
     """Quantized linear-layer parameters (a jax pytree).
+
+    Dense (int8) storage:
 
     ``w8``     — int8 weights ``(..., K, N)``;
     ``b_mult`` — optional int32 per-out-channel requant multipliers
                  ``(..., N)`` (present iff the layer's plan requantizes);
     ``bias32`` — optional int32 bias at the accumulator scale ``(..., N)``.
+
+    Packed (sub-8-bit) storage — produced by ``quant.pack.pack_linear``;
+    ``w8`` is ``None`` and the weight bytes live in:
+
+    ``w_packed``  — int8 nibble pairs ``(..., K // 2, N)`` (value ``2i``
+                    in the low nibble, ``2i + 1`` in the high nibble);
+    ``pack_meta`` — the static :class:`PackMeta`;
+    ``out_idx``   — msr4 only: int16 within-group row indices of the
+                    outlier lanes, ``(..., K // group, n_outliers, N)``;
+    ``out_val``   — msr4 only: int8 outlier deltas (same shape), with
+                    ``w8 == unpack(nibbles) + scatter(out_val @ out_idx)``
+                    exactly.
+
+    Consumers never unpack outside ``kernels/`` / ``ops/`` (lint RR004):
+    dispatch goes through ``ops.int8_matmul_packed``.
     """
 
     w8: Any
     b_mult: Optional[Any] = None
     bias32: Optional[Any] = None
+    w_packed: Optional[Any] = None
+    pack_meta: Optional[PackMeta] = None
+    out_idx: Optional[Any] = None
+    out_val: Optional[Any] = None
 
     @classmethod
     def of(cls, obj) -> "QuantLinearParams":
@@ -136,7 +205,30 @@ class QuantLinearParams(NamedTuple):
         if isinstance(obj, cls):
             return obj
         if isinstance(obj, dict):
-            return cls(w8=obj["w8"], b_mult=obj.get("b_mult"),
-                       bias32=obj.get("bias32"))
+            return cls(w8=obj.get("w8"), b_mult=obj.get("b_mult"),
+                       bias32=obj.get("bias32"),
+                       w_packed=obj.get("w_packed"),
+                       pack_meta=obj.get("pack_meta"),
+                       out_idx=obj.get("out_idx"),
+                       out_val=obj.get("out_val"))
         raise TypeError(f"cannot interpret {type(obj).__name__} as "
                         "QuantLinearParams")
+
+    # -------------------------------------------------------- properties --
+
+    @property
+    def is_packed(self) -> bool:
+        return self.w_packed is not None
+
+    @property
+    def k_dim(self) -> int:
+        """Unpacked contraction length K."""
+        if self.is_packed:
+            return self.pack_meta.k
+        return self.w8.shape[-2]
+
+    @property
+    def n_dim(self) -> int:
+        """Output width N (valid for dense and packed storage)."""
+        w = self.w_packed if self.is_packed else self.w8
+        return w.shape[-1]

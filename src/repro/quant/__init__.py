@@ -1,1 +1,1 @@
-from repro.quant import calibrate, convert, plans, qat  # noqa: F401
+from repro.quant import calibrate, convert, pack, plans, qat  # noqa: F401

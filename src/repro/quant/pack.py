@@ -1,0 +1,153 @@
+"""Design-time weight packing: int8 plans → the sub-8-bit storage tier.
+
+Two schemes, both stored as two's-complement nibble pairs along the
+contraction axis (byte ``i`` = values ``2i`` low / ``2i + 1`` high):
+
+  * ``"int4"`` — plain nibbles; only valid when every weight already
+    fits ``[-7, 7]`` (lossless there, refused otherwise);
+  * ``"msr4"`` — the Low-Cost-AI-Accelerator observation that ~99% of
+    int8 weights carry their information in a 4-bit most-significant
+    run: store ``clip(w, -7, 7)`` as nibbles plus, per ``group``-sized
+    K-slice and out-channel, a *static* number of outlier-compensation
+    lanes ``(out_idx, out_val)`` with ``out_val = w - clip(w, -7, 7)``
+    (∈ [-121, 120], an int8).  Reconstruction is exact for **every**
+    int8 value, including -128.
+
+Packing happens once, offline, in numpy — like ``quant.convert`` this
+module is design-time code.  The runtime inverse lives in
+``repro.ops.packed`` (the declared dequant reference) and the fused
+in-kernel unpack in ``repro.kernels``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.ops.spec import PackMeta, QuantLinearParams
+
+__all__ = ["pack_int4", "pack_msr4", "pack_linear", "pack_tree"]
+
+
+def _nibble_pack_np(a: np.ndarray, axis: int = -2) -> np.ndarray:
+    a = np.asarray(a).astype(np.int32)
+    ax = axis % a.ndim
+    lo_sl = [slice(None)] * a.ndim
+    hi_sl = [slice(None)] * a.ndim
+    lo_sl[ax] = slice(0, None, 2)
+    hi_sl[ax] = slice(1, None, 2)
+    lo, hi = a[tuple(lo_sl)], a[tuple(hi_sl)]
+    byte = (lo & 15) | ((hi & 15) << 4)
+    return (((byte & 255) ^ 128) - 128).astype(np.int8)
+
+
+def pack_int4(w8) -> np.ndarray:
+    """Pack int4-range int8 weights ``(..., K, N)`` → ``(..., K//2, N)``.
+
+    Raises if any ``|w| > 7`` — plain int4 has no outlier lanes, use
+    :func:`pack_msr4` for general int8 weights.
+    """
+    w = np.asarray(w8)
+    if w.shape[-2] % 2:
+        raise ValueError(f"K must be even to nibble-pack, got {w.shape}")
+    if w.size and int(np.abs(w.astype(np.int32)).max()) > 7:
+        raise ValueError("int4 packing needs all |w| <= 7; use msr4 for "
+                         "full int8 weights")
+    return _nibble_pack_np(w, axis=-2)
+
+
+def pack_msr4(w8, group: int = 256):
+    """MSR-4 pack: nibbles + static-count outlier lanes. Lossless.
+
+    Returns ``(packed, meta, out_idx, out_val)`` numpy arrays where
+    ``packed`` is ``(..., K//2, N)`` int8 nibbles of ``clip(w, -7, 7)``,
+    and for each K-group of size ``group`` and out-channel the
+    ``n_outliers`` lanes hold within-group row indices (int16 — groups
+    are far below 32768 rows) and deltas (int8) such that
+    scatter-adding them reproduces ``w8`` exactly.  ``n_outliers`` is the *max* outlier count over all
+    (group, channel) columns — filler lanes carry delta 0 — so the lane
+    arrays are static-shaped and jit/scan friendly.
+    """
+    w = np.asarray(w8).astype(np.int32)
+    *lead, k, n = w.shape
+    if k % 2:
+        raise ValueError(f"K must be even to nibble-pack, got {w.shape}")
+    g = group if (group > 0 and k % group == 0) else k
+    if g > 32767:
+        raise ValueError(f"group {g} overflows the int16 outlier index")
+    nib = np.clip(w, -7, 7)
+    delta = w - nib                                   # in [-121, 120]
+    ngrp = k // g
+    d_g = delta.reshape(*lead, ngrp, g, n)
+    m_g = d_g != 0
+    n_out = int(m_g.sum(axis=-2).max(initial=0))
+    # stable argsort of the inverted mask lists outlier rows first, so
+    # the first n_out lanes per column are a permutation prefix: indices
+    # are distinct and filler lanes land on delta-0 rows
+    order = np.argsort(~m_g, axis=-2, kind="stable")
+    out_idx = order[..., :n_out, :].astype(np.int16)
+    out_val = np.take_along_axis(d_g, out_idx, axis=-2).astype(np.int8)
+    packed = _nibble_pack_np(nib, axis=-2)
+    meta = PackMeta(scheme="msr4", group=g, n_outliers=n_out, k=k)
+    return packed, meta, out_idx, out_val
+
+
+def pack_linear(qw, scheme: str = "msr4", group: int = 256
+                ) -> QuantLinearParams:
+    """Pack one dense ``QuantLinearParams`` into packed storage.
+
+    ``b_mult`` / ``bias32`` ride along unchanged — the packed matmul's
+    epilogue is the same typed ``RequantSpec`` path, applied to the
+    bit-identical reconstructed accumulator.
+    """
+    qw = QuantLinearParams.of(qw)
+    if qw.is_packed:
+        return qw
+    if qw.w8 is None:
+        raise ValueError("cannot pack a QuantLinearParams without w8")
+    w = np.asarray(qw.w8)
+    if scheme == "int4":
+        packed = pack_int4(w)
+        meta = PackMeta(scheme="int4", group=0, n_outliers=0,
+                        k=w.shape[-2])
+        out_idx = out_val = None
+    elif scheme == "msr4":
+        packed, meta, out_idx, out_val = pack_msr4(w, group=group)
+        out_idx = jnp.asarray(out_idx)
+        out_val = jnp.asarray(out_val)
+    else:
+        raise ValueError(f"unknown pack scheme {scheme!r}")
+    return QuantLinearParams(
+        w8=None, b_mult=qw.b_mult, bias32=qw.bias32,
+        w_packed=jnp.asarray(packed), pack_meta=meta,
+        out_idx=out_idx, out_val=out_val)
+
+
+def _packable(qw: QuantLinearParams) -> bool:
+    if qw.is_packed or qw.w8 is None:
+        return False
+    w = qw.w8
+    # 2-D plain weights or (ng, K, N) layer-group stacks; stacked expert
+    # tensors (4-D) stay dense — expert matmuls don't dispatch through
+    # int8_matmul_packed
+    if w.ndim not in (2, 3):
+        return False
+    return w.shape[-2] % 2 == 0
+
+
+def pack_tree(qparams, scheme: str = "msr4", group: int = 256):
+    """Pack every packable ``QuantLinearParams`` in a parameter pytree.
+
+    Leaves that are not linear params (embeddings, norm tables, conv
+    filters) and shapes the runtime packed paths don't cover (odd K,
+    4-D expert stacks) pass through unchanged.
+    """
+    def _maybe_pack(leaf):
+        if isinstance(leaf, QuantLinearParams) and _packable(leaf):
+            return pack_linear(leaf, scheme=scheme, group=group)
+        return leaf
+
+    return jax.tree_util.tree_map(
+        _maybe_pack, qparams,
+        is_leaf=lambda x: isinstance(x, QuantLinearParams))

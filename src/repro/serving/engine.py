@@ -216,7 +216,8 @@ class ServingEngine:
                  batch_size: int = 8, cache_len: int = 512,
                  ops=None, seed: int = 0, backend=None,
                  cache_mode: str = "paged", page_size: int = 16,
-                 num_pages: Optional[int] = None, fold_wo: bool = True,
+                 num_pages: Optional[int] = None, kv_dtype: str = "int8",
+                 fold_wo: bool = True,
                  prefill_chunk: Optional[int] = None,
                  prefill_budget: Optional[int] = None,
                  prefix_cache: bool = True, tp: int = 1,
@@ -229,6 +230,10 @@ class ServingEngine:
         if cache_mode not in ("paged", "contiguous"):
             raise ValueError("cache_mode must be 'paged' or 'contiguous',"
                              f" got {cache_mode!r}")
+        if kv_dtype != "int8" and cache_mode != "paged":
+            raise ValueError("kv_dtype='int4' needs cache_mode='paged' "
+                             "(the packed tier stores per-page requant "
+                             "shifts next to the page pools)")
         if prefill_budget is not None and prefill_budget < 1:
             raise ValueError("prefill_budget must be >= 1 token/step, "
                              f"got {prefill_budget}")
@@ -297,7 +302,7 @@ class ServingEngine:
         self.paged = cache_mode == "paged"
         if self.paged:
             self.layout = CacheLayout.fit(batch_size, self.L, page_size,
-                                          num_pages)
+                                          num_pages, kv_dtype=kv_dtype)
             self.kv = PagedKVCache(self.layout)
             self.caches = it.init_decode_cache(cfg, batch_size, cache_len,
                                                layout=self.layout)
@@ -390,8 +395,12 @@ class ServingEngine:
         """The decode launch's cache-geometry params for
         :func:`~repro.analysis.contracts.check_launch`."""
         if self.paged:
-            return dict(max_pages=self.layout.max_pages,
+            geom = dict(max_pages=self.layout.max_pages,
                         page_size=self.layout.page_size)
+            if self.layout.kv_dtype == "int4":
+                geom.update(kv_pack=True,
+                            num_pages=self.layout.num_pages)
+            return geom
         return dict(L=self.L)
 
     def _check_tp_launches(self):
@@ -414,17 +423,21 @@ class ServingEngine:
                 "int_decode_attention", tp=tp, b=self.batch, sq=sq,
                 h=cfg.n_heads, hkv=cfg.n_kv_heads, d=cfg.hd, **geom))
         if self._use_chunked:
+            pf = dict(max_pages=self.layout.max_pages,
+                      page_size=self.layout.page_size)
+            if self.layout.kv_dtype == "int4":
+                pf.update(kv_pack=True, num_pages=self.layout.num_pages)
             contracts.require_launch(contracts.check_tp_launch(
                 "int_paged_prefill", tp=tp, b=self.batch,
                 c=self.prefill_chunk, h=cfg.n_heads, hkv=cfg.n_kv_heads,
-                d=cfg.hd, max_pages=self.layout.max_pages,
-                page_size=self.layout.page_size))
+                d=cfg.hd, **pf))
 
     # ------------------------------------------------------ compiled step --
 
     def _step_key(self, tag: str, *extra) -> tuple:
         geometry = ("paged", self.layout.page_size, self.layout.num_pages,
-                    self.layout.max_pages, self.L) if self.paged \
+                    self.layout.max_pages, self.L,
+                    self.layout.kv_dtype) if self.paged \
             else ("contiguous",)
         # mesh geometry: sharded engines key on (tp, device ids) — a
         # differently-sized or differently-placed mesh must not share
@@ -789,7 +802,12 @@ class ServingEngine:
         for c in self.caches:
             nc = dict(c)
             for key, leaf in c.items():
-                if self.paged and key in ("k8", "v8"):
+                # page-pool state is never lane-indexed: the pools stay
+                # (valid_len masking) and the per-page requant shifts
+                # must survive too — their (ng, num_pages) shape could
+                # coincidentally match the batch test below
+                if self.paged and key in ("k8", "v8",
+                                          "k_shift", "v_shift"):
                     continue
                 if leaf.ndim >= 2 and leaf.shape[1] == self.batch:
                     nc[key] = leaf.at[:, slot].set(0)
@@ -825,7 +843,11 @@ class ServingEngine:
         new_caches = []
         for c in self.caches:
             nc = dict(c)
-            for key in ("k8", "v8"):
+            # the per-page requant shifts are page-indexed on the same
+            # axis, so a CoW copies the source page's shift along with
+            # its bytes (today every page shares the static KV_SHIFT;
+            # the copy keeps the invariant if shifts ever diverge)
+            for key in ("k8", "v8", "k_shift", "v_shift"):
                 if key in c:
                     nc[key] = c[key].at[:, new].set(c[key][:, old])
             new_caches.append(nc)
@@ -1149,7 +1171,8 @@ class ServingEngine:
         ``describe_str()`` derives the one-line log form from this
         dict."""
         if self.paged:
-            cache = dict(mode="paged", **self.kv.stats())
+            cache = dict(mode="paged", kv_pack=self.layout.kv_dtype,
+                         **self.kv.stats())
             cache["live_tokens"] = int(sum(
                 s.live_tokens for s in self.slots if s is not None)
                 + sum(s.live_tokens for s in self.queue))
@@ -1159,7 +1182,9 @@ class ServingEngine:
             cache["prefix"] = self.prefix.stats() \
                 if self.prefix is not None else None
         else:
-            cache = {"mode": "contiguous"}
+            cache = {"mode": "contiguous", "kv_pack": "int8"}
+        # derived from the stored element width: packed pools carry half
+        # the elements per token, so this halves under kv_dtype="int4"
         cache["kv_bytes"] = int(sum(
             c[key].size * c[key].dtype.itemsize
             for c in self.caches for key in ("k8", "v8") if key in c))
@@ -1216,7 +1241,10 @@ class ServingEngine:
         d = self.describe()
         c = d["cache"]
         if c["mode"] == "paged":
-            cache = (f"paged[{c['page_size']}tok x {c['num_pages']}pg, "
+            pack = "" if c.get("kv_pack", "int8") == "int8" \
+                else f", {c['kv_pack']}"
+            cache = (f"paged[{c['page_size']}tok x {c['num_pages']}pg"
+                     f"{pack}, "
                      f"{c['pages_used']}/{c['num_pages'] - 1} used]")
         else:
             cache = "contiguous"

@@ -54,6 +54,9 @@ import numpy as np
 
 NULL_PAGE = 0
 
+# page-element storage tiers (CacheLayout.kv_dtype)
+KV_DTYPES = ("int8", "int4")
+
 
 class PagePoolExhausted(RuntimeError):
     """No free physical pages: the pool is smaller than the live token
@@ -70,13 +73,22 @@ class CacheLayout:
                     ``cache_len``, or the attention window when smaller);
     ``page_size`` — tokens per physical page;
     ``num_pages`` — physical pool size *including* the reserved null
-                    page 0 (so ``num_pages - 1`` pages are allocatable).
+                    page 0 (so ``num_pages - 1`` pages are allocatable);
+    ``kv_dtype``  — page-element storage: ``"int8"`` (one byte per
+                    element) or ``"int4"`` (two head-dim nibbles per
+                    byte plus a per-page requant shift; every page byte
+                    holds two elements, so an equal-HBM pool admits 2×
+                    the sessions).  This is the *storage* tier only —
+                    kernels dequantize in-register
+                    (``q4 << shift``, ``repro.ops.packed``), the
+                    attention datapath stays int8.
     """
 
     num_slots: int
     max_len: int
     page_size: int
     num_pages: int
+    kv_dtype: str = "int8"
 
     def __post_init__(self):
         if self.num_slots < 1:
@@ -88,6 +100,9 @@ class CacheLayout:
         if self.num_pages < 2:
             raise ValueError("num_pages must be >= 2 (page 0 is the "
                              f"reserved null page), got {self.num_pages}")
+        if self.kv_dtype not in KV_DTYPES:
+            raise ValueError(f"kv_dtype must be one of {KV_DTYPES}, "
+                             f"got {self.kv_dtype!r}")
 
     @property
     def max_pages(self) -> int:
@@ -106,17 +121,27 @@ class CacheLayout:
         """Tokens the allocatable pool can hold (null page excluded)."""
         return (self.num_pages - 1) * self.page_size
 
+    @property
+    def bytes_per_element(self) -> float:
+        """HBM bytes per stored KV element (0.5 under int4 packing)."""
+        return 0.5 if self.kv_dtype == "int4" else 1.0
+
     @classmethod
     def fit(cls, num_slots: int, max_len: int, page_size: int = 16,
-            num_pages: Optional[int] = None) -> "CacheLayout":
+            num_pages: Optional[int] = None,
+            kv_dtype: str = "int8") -> "CacheLayout":
         """Layout for ``num_slots`` lanes of ``max_len`` tokens.  Without
         an explicit ``num_pages`` the pool is fully provisioned (every
         lane can reach ``max_len`` simultaneously) — undersubscribe it to
-        make memory O(live tokens)."""
+        make memory O(live tokens).  Under ``kv_dtype="int4"`` each page
+        costs half the HBM, so the auto-provisioned pool doubles its
+        page count at equal byte budget (2× admissible sessions)."""
         max_pages = -(-max_len // page_size)
         if num_pages is None:
             num_pages = num_slots * max_pages + 1
-        return cls(num_slots, max_len, page_size, num_pages)
+            if kv_dtype == "int4":
+                num_pages = 2 * (num_pages - 1) + 1
+        return cls(num_slots, max_len, page_size, num_pages, kv_dtype)
 
 
 class BlockAllocator:

@@ -5,7 +5,7 @@ the ``IntRange`` domain and its dyadic transfer functions, the
 kernel-contract checker (``check_launch`` / ``require_launch``) against
 the kernels' real preconditions, the deliberately-unsafe-spec regression
 (a bad constant must be *rejected with a typed, location-bearing
-error*), the AST repo-rule linter (RR001-RR003), and a registry-config
+error*), the AST repo-rule linter (RR001-RR004), and a registry-config
 certification smoke + the ``CERTIFY.json`` schema gate.  Randomised
 soundness properties live in ``test_analysis_props.py``.
 """
@@ -232,6 +232,23 @@ def test_lint_rr003_float_dtype_in_core():
     # the dequant boundary is sanctioned
     assert lint.lint_source("y = q.astype(jnp.float32)\n",
                             "src/repro/core/quant.py") == []
+
+
+def test_lint_rr004_unpack_above_backend_boundary():
+    src = ("from repro.ops import packed\n"
+           "w = packed.unpack_weights(qw)\n"
+           "p = unpack_kv_pool(pool, shifts)\n")
+    bad = lint.lint_source(src, "src/repro/models/intlayers.py")
+    assert [f.code for f in bad] == ["RR004", "RR004"]
+    bad = lint.lint_source(src, "src/repro/serving/engine.py")
+    assert [f.code for f in bad] == ["RR004", "RR004"]
+    # the kernel / backend tiers are the sanctioned unpack sites
+    assert lint.lint_source(src, "src/repro/kernels/int8_matmul.py") == []
+    assert lint.lint_source(
+        src, "src/repro/ops/backends/pallas_fused.py") == []
+    # packing on write is legal everywhere — the rule is unpack-prefixed
+    assert lint.lint_source("k = pack_kv(v8)\n",
+                            "src/repro/models/intlayers.py") == []
 
 
 def test_lint_finding_format_is_location_bearing():

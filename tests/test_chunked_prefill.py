@@ -469,6 +469,7 @@ def test_bench_json_schema_checker(tmp_path):
     data = {
         "configs": {"paged_chunked": {
             "tokens": 8, "tokens_per_s": 1.5, "kv_bytes": 1024,
+            "kv_pack": "int8", "weight_bytes": 4096,
             "pages": {"page_size": 16, "num_pages": 7}, "mode": "paged",
             "prefill": {"mode": "chunked", "chunk": 32,
                         "ttft_s": 0.01, "tokens_per_s": 100.0},
@@ -519,6 +520,10 @@ def test_bench_json_schema_checker(tmp_path):
     # percentiles, terminal counts not reconciling with submitted
     data["latency"]["ttft_s"]["p50"] = 0.5          # > p99 = 0.02
     data["latency"]["terminal"]["completed"] = 3    # sums to 4 != 8
+    # the int4 KV tier gate: a paged_kv4 config that neither halves the
+    # bytes nor tags itself int4 must be flagged
+    data["configs"]["paged_kv4"] = dict(
+        data["configs"]["paged_chunked"], kv_bytes=1000)
     bad = tmp_path / "BENCH_bad" / "BENCH_serving.json"
     bad.parent.mkdir()
     bad.write_text(json.dumps(data))
@@ -528,4 +533,6 @@ def test_bench_json_schema_checker(tmp_path):
     assert any("per_device_kv_bytes" in e for e in errors)
     assert any("p50" in e and "p99" in e for e in errors)
     assert any("submitted" in e for e in errors)
+    assert any("1.8x gate" in e for e in errors)
+    assert any("kv_pack" in e for e in errors)
     assert check_file(str(tmp_path / "BENCH_missing.json"))
